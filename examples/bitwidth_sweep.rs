@@ -1,0 +1,72 @@
+//! Bit-width sweep: Beacon (full variant) vs every baseline across the
+//! paper's five bit widths — the data behind Tables 1+2 in one run,
+//! printed as a plot-ready CSV block and a markdown table.
+//!
+//! ```bash
+//! cargo run --release --example bitwidth_sweep
+//! ```
+
+use beacon_ptq::config::{Method, QuantConfig};
+use beacon_ptq::coordinator::report::{pct, Table};
+use beacon_ptq::coordinator::Pipeline;
+use beacon_ptq::quant::alphabet::BitWidth;
+
+fn main() -> anyhow::Result<()> {
+    let mut pipe = Pipeline::from_artifacts("artifacts", "tiny-sim")?;
+    let fp = pipe.fp_top1()?;
+    println!("FP top-1: {:.2}%\n", fp * 100.0);
+
+    let grid = [
+        (BitWidth::B158, 6usize),
+        (BitWidth::B2, 4),
+        (BitWidth::B258, 4),
+        (BitWidth::B3, 6),
+        (BitWidth::B4, 4),
+    ];
+
+    let mut table = Table::new(
+        "bit-width sweep — top-1 (%)",
+        &["bits", "rtn", "gptq", "comq", "beacon", "beacon-full"],
+    );
+    println!("csv: bits,rtn,gptq,comq,beacon,beacon_full");
+    for (bits, loops) in grid {
+        let run = |pipe: &mut Pipeline, qc: QuantConfig| -> anyhow::Result<f64> {
+            Ok(pipe.quantize(&qc)?.top1)
+        };
+        let rtn = run(&mut pipe, QuantConfig {
+            method: Method::Rtn, bits: bits.0, ..QuantConfig::default()
+        })?;
+        let gptq = run(&mut pipe, QuantConfig {
+            method: Method::Gptq, bits: bits.0, ..QuantConfig::default()
+        })?;
+        let comq = run(&mut pipe, QuantConfig {
+            method: Method::Comq, bits: bits.0, loops, ..QuantConfig::default()
+        })?;
+        let beacon = run(&mut pipe, QuantConfig {
+            method: Method::Beacon, bits: bits.0, loops, ..QuantConfig::default()
+        })?;
+        let full = run(&mut pipe, QuantConfig {
+            method: Method::Beacon,
+            bits: bits.0,
+            loops,
+            error_correction: true,
+            centering: true,
+            ln_tune: true,
+            ..QuantConfig::default()
+        })?;
+        println!(
+            "csv: {},{:.4},{:.4},{:.4},{:.4},{:.4}",
+            bits.label(), rtn, gptq, comq, beacon, full
+        );
+        table.row(vec![
+            format!("{}(K={loops})", bits.label()),
+            pct(rtn),
+            pct(gptq),
+            pct(comq),
+            pct(beacon),
+            pct(full),
+        ]);
+    }
+    println!("\n{}", table.render());
+    Ok(())
+}

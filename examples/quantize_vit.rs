@@ -1,0 +1,103 @@
+//! End-to-end driver (DESIGN.md "End-to-end validation"): exercises every
+//! layer of the stack on the real workload —
+//!
+//!   1. load the build-time-trained ViT + calibration/eval splits,
+//!   2. evaluate FP top-1 through the PJRT `vit_logits` artifact,
+//!   3. quantize all 16 linear layers with the full Beacon pipeline
+//!      (error correction → centering → LayerNorm tuning), the Pallas
+//!      kernel doing the per-channel sweeps,
+//!   4. re-evaluate, print the per-layer reconstruction errors and the
+//!      LN-tune loss curve, save the quantized checkpoint, and report the
+//!      deployment bit-packing ratio.
+//!
+//! The output of this run is recorded in EXPERIMENTS.md §E2E.
+
+use beacon_ptq::config::{Method, QuantConfig};
+use beacon_ptq::coordinator::Pipeline;
+use beacon_ptq::quant::packing::{pack_channel, packed_bytes};
+
+fn main() -> anyhow::Result<()> {
+    let mut pipe = Pipeline::from_artifacts("artifacts", "tiny-sim")?;
+    let m = pipe.artifacts.manifest.clone();
+    println!("== Beacon end-to-end: {} ==", m.cfg.name);
+    println!(
+        "model: {} params, {} blocks, d_model {}, {} quantizable layers",
+        m.cfg.param_count(),
+        m.cfg.depth,
+        m.cfg.d_model,
+        m.quantizable.len()
+    );
+    println!(
+        "calibration: {} images ({} tokens); eval: {} images",
+        m.calib_count,
+        m.calib_count * m.cfg.tokens(),
+        m.eval_count,
+    );
+
+    let fp = pipe.fp_top1()?;
+    println!("\nFP top-1: {:.2}%", fp * 100.0);
+
+    let qc = QuantConfig {
+        method: Method::Beacon,
+        bits: 2.0,
+        loops: 4,
+        error_correction: true,
+        centering: true,
+        ln_tune: true,
+        ..QuantConfig::default()
+    };
+    println!("\nquantizing with {} ...", qc.label());
+    let (report, store) = pipe.quantize_with_weights(&qc)?;
+
+    println!("\nper-layer relative reconstruction error (eq. 1):");
+    for (name, e) in &report.layer_errors {
+        let bar = "#".repeat((e * 200.0) as usize);
+        println!("  {name:<20} {e:.4} {bar}");
+    }
+    if !report.ln_tune_losses.is_empty() {
+        let l = &report.ln_tune_losses;
+        println!(
+            "\nLN-tune distillation loss: {:.5} -> {:.5} over {} steps",
+            l[0],
+            l[l.len() - 1],
+            l.len()
+        );
+    }
+
+    println!(
+        "\nquantized top-1: {:.2}%  (drop {:.2}%)",
+        report.top1 * 100.0,
+        report.accuracy_drop()
+    );
+    println!(
+        "quantize {:.2}s, eval {:.2}s",
+        report.quantize_secs, report.eval_secs
+    );
+
+    // deployment storage: quantize the first layer once more against its
+    // true calibration activations and bit-pack the codes
+    let (_, acts) = pipe.collect_acts(&pipe.weights_fp.clone())?;
+    let lname = &m.quantizable[0];
+    let w = pipe.weights_fp.matrix(lname);
+    let lq = pipe.beacon_layer(&qc, &acts[0], &acts[0], &w)?;
+    let width = qc.bit_width();
+    let mut packed = 0usize;
+    for (j, codes) in lq.codes.iter().enumerate() {
+        packed += packed_bytes(&pack_channel(codes, lq.scales[j], lq.offsets[j], width));
+    }
+    let fp_bytes = w.rows * w.cols * 4;
+    println!(
+        "\npacked '{lname}': {packed} B vs {fp_bytes} B fp32 ({:.1}x compression)",
+        fp_bytes as f64 / packed as f64
+    );
+
+    let out = std::path::Path::new("artifacts/quantized__tiny-sim_2bit.bin");
+    store.save(out)?;
+    println!("saved quantized checkpoint to {out:?}");
+    let stats = pipe.runtime.stats();
+    println!(
+        "\nruntime: {} artifact compilations ({:.0} ms), {} executions ({:.0} ms)",
+        stats.compilations, stats.compile_ms, stats.executions, stats.exec_ms
+    );
+    Ok(())
+}

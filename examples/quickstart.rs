@@ -1,0 +1,27 @@
+//! Quickstart: quantize the bundled model to 2 bits with Beacon and
+//! evaluate — the five-line happy path of the public API.
+//!
+//! ```bash
+//! make artifacts                      # once: build AOT bundle + weights
+//! cargo run --release --example quickstart
+//! ```
+
+use beacon_ptq::config::QuantConfig;
+use beacon_ptq::coordinator::Pipeline;
+
+fn main() -> anyhow::Result<()> {
+    // Load the AOT bundle: trained FP weights, calibration + eval splits,
+    // and the compiled-once HLO graphs (model fwd + the Pallas kernel).
+    let mut pipe = Pipeline::from_artifacts("artifacts", "tiny-sim")?;
+
+    // Beacon with integrated grid selection: no scale search, no alpha/beta
+    // tuning — just the bit width and the sweep count K.
+    let cfg = QuantConfig { bits: 2.0, loops: 4, ..QuantConfig::default() };
+
+    let report = pipe.quantize(&cfg)?;
+    println!("FP top-1        : {:.2}%", report.fp_top1 * 100.0);
+    println!("2-bit top-1     : {:.2}%", report.top1 * 100.0);
+    println!("accuracy drop   : {:.2}%", report.accuracy_drop());
+    println!("quantize wall   : {:.2}s", report.quantize_secs);
+    Ok(())
+}

@@ -1,0 +1,97 @@
+//! Serve a quantized checkpoint: load the 2-bit weights produced by
+//! `quantize_vit` (quantizing on the fly if missing), then answer batched
+//! classification requests through the PJRT executable, reporting
+//! latency/throughput — the deployment half of the story.
+//!
+//! ```bash
+//! cargo run --release --example serve_quantized [-- <num_requests>]
+//! ```
+
+use std::path::Path;
+use std::time::Instant;
+
+use beacon_ptq::config::QuantConfig;
+use beacon_ptq::coordinator::Pipeline;
+use beacon_ptq::model::WeightStore;
+use beacon_ptq::runtime::client::{literal_f32, literal_to_f32};
+
+fn main() -> anyhow::Result<()> {
+    let requests: usize = std::env::args()
+        .nth(1)
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(32);
+
+    let mut pipe = Pipeline::from_artifacts("artifacts", "tiny-sim")?;
+    let m = pipe.artifacts.manifest.clone();
+    let ckpt = Path::new("artifacts/quantized__tiny-sim_2bit.bin");
+
+    let store = if ckpt.exists() {
+        println!("loading quantized checkpoint {ckpt:?}");
+        WeightStore::load(ckpt, &m.cfg)?
+    } else {
+        println!("no checkpoint found — quantizing now (2-bit beacon)...");
+        let qc = QuantConfig { bits: 2.0, loops: 4, ..QuantConfig::default() };
+        let (_, store) = pipe.quantize_with_weights(&qc)?;
+        store.save(ckpt)?;
+        store
+    };
+
+    // weight literals stay resident; each request only uploads images
+    let mut weight_inputs = Vec::new();
+    for t in store.ordered() {
+        let dims: Vec<i64> = t.shape.iter().map(|d| *d as i64).collect();
+        weight_inputs.push(literal_f32(&t.data, &dims)?);
+    }
+
+    let b = m.eval_batch;
+    let k = m.cfg.num_classes;
+    println!(
+        "serving {requests} requests of batch {b} ({} images total)\n",
+        requests * b
+    );
+
+    let mut latencies = Vec::with_capacity(requests);
+    let mut correct = 0usize;
+    let mut total = 0usize;
+    let t_all = Instant::now();
+    for r in 0..requests {
+        // rotate through the eval split as the request stream
+        let lo = (r * b) % (pipe.eval.count - b + 1);
+        let hi = lo + b;
+        let mut inputs = weight_inputs.clone();
+        inputs.push(literal_f32(
+            pipe.eval.batch(lo, hi),
+            &[b as i64, m.cfg.image as i64, m.cfg.image as i64, m.cfg.channels as i64],
+        )?);
+        let t = Instant::now();
+        let out = pipe.runtime.exec(&m.vit_logits, &inputs)?;
+        let logits = literal_to_f32(&out[0])?;
+        latencies.push(t.elapsed().as_secs_f64() * 1e3);
+        for (bi, item) in (lo..hi).enumerate() {
+            let row = &logits[bi * k..(bi + 1) * k];
+            let pred = row
+                .iter()
+                .enumerate()
+                .max_by(|a, c| a.1.partial_cmp(c.1).unwrap())
+                .map(|(i, _)| i)
+                .unwrap();
+            if pred as i32 == pipe.eval.labels[item] {
+                correct += 1;
+            }
+            total += 1;
+        }
+    }
+    let wall = t_all.elapsed().as_secs_f64();
+    latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let p50 = latencies[latencies.len() / 2];
+    let p95 = latencies[(latencies.len() * 95 / 100).min(latencies.len() - 1)];
+    println!("online accuracy : {:.2}%", 100.0 * correct as f64 / total as f64);
+    println!("batch latency   : p50 {p50:.2} ms, p95 {p95:.2} ms");
+    println!(
+        "throughput      : {:.0} images/s ({} images in {:.2}s)",
+        (total as f64) / wall,
+        total,
+        wall
+    );
+    Ok(())
+}

@@ -1,0 +1,186 @@
+"""AOT build: train the FP model, generate datasets, lower every L2 graph to
+HLO *text* artifacts, and write the manifest the Rust coordinator consumes.
+
+HLO text (NOT ``lowered.compile().serialize()``) is the interchange format:
+jax >= 0.5 emits HloModuleProtos with 64-bit instruction ids which the
+``xla`` crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the
+text parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/README.md.
+
+Run via ``make artifacts`` (idempotent — skips work whose outputs exist and
+whose inputs are older).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import data as data_mod
+from .common import CONFIGS, ViTConfig, alphabet, param_spec, quantizable_layers
+from .io import save_tensors
+from .kernels.beacon import beacon_layer_raw
+from .model import collect_acts_fn, forward, ln_tune_step_fn, logits_fn
+from .train import train
+
+# Alphabet inputs are padded to this length by repeating the max element;
+# padding is inert because the argmax tie-break is first-occurrence.
+ALPH_PAD = 16
+
+CALIB_SEED, EVAL_SEED = 2, 3
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_to_file(fn, example_args, path: str) -> None:
+    lowered = jax.jit(fn).lower(*example_args)
+    text = to_hlo_text(lowered)
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"  wrote {path} ({len(text)/1e3:.0f} kB)")
+
+
+def spec_of(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def quant_layer_shapes(cfg: ViTConfig):
+    """Unique (N, N') shapes among quantizable weight matrices."""
+    spec = dict(param_spec(cfg))
+    shapes = []
+    for name in quantizable_layers(cfg):
+        sh = spec[name]
+        if sh not in shapes:
+            shapes.append(sh)
+    return shapes
+
+
+def build(cfg: ViTConfig, out_dir: str, train_steps: int, calib_count: int,
+          eval_count: int, ln_batch: int, force: bool = False) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    tag = cfg.name
+
+    def path(stem: str) -> str:
+        return os.path.join(out_dir, f"{stem}__{tag}")
+
+    # ---- datasets ---------------------------------------------------------
+    calib_path = path("calib") + ".bin"
+    eval_path = path("eval") + ".bin"
+    if force or not os.path.exists(calib_path):
+        imgs, labels = data_mod.generate(cfg, CALIB_SEED, calib_count)
+        data_mod.save_dataset(calib_path, imgs, labels)
+        print(f"  wrote {calib_path} ({calib_count} images)")
+    if force or not os.path.exists(eval_path):
+        imgs, labels = data_mod.generate(cfg, EVAL_SEED, eval_count)
+        data_mod.save_dataset(eval_path, imgs, labels)
+        print(f"  wrote {eval_path} ({eval_count} images)")
+
+    # ---- trained FP weights ----------------------------------------------
+    weights_path = path("model_weights") + ".bin"
+    if force or not os.path.exists(weights_path):
+        print(f"  training {tag} for {train_steps} steps ...")
+        params = train(cfg, steps=train_steps)
+        save_tensors(weights_path, list(zip([n for n, _ in param_spec(cfg)], params)))
+        print(f"  wrote {weights_path}")
+
+    # ---- HLO graphs -------------------------------------------------------
+    pspecs = [spec_of(sh) for _, sh in param_spec(cfg)]
+
+    logits_hlo = path("vit_logits") + ".hlo.txt"
+    if force or not os.path.exists(logits_hlo):
+        img_spec = spec_of((eval_batch_size(cfg), cfg.image, cfg.image, cfg.channels))
+        lower_to_file(logits_fn(cfg), (*pspecs, img_spec), logits_hlo)
+
+    acts_hlo = path("collect_acts") + ".hlo.txt"
+    if force or not os.path.exists(acts_hlo):
+        img_spec = spec_of((calib_count, cfg.image, cfg.image, cfg.channels))
+        lower_to_file(collect_acts_fn(cfg), (*pspecs, img_spec), acts_hlo)
+
+    ln_hlo = path("ln_tune_step") + ".hlo.txt"
+    if force or not os.path.exists(ln_hlo):
+        step, _ = ln_tune_step_fn(cfg)
+        img_spec = spec_of((ln_batch, cfg.image, cfg.image, cfg.channels))
+        teach_spec = spec_of((ln_batch, cfg.num_classes))
+        lr_spec = spec_of(())
+        lower_to_file(step, (*pspecs, img_spec, teach_spec, lr_spec), ln_hlo)
+
+    beacon_paths = {}
+    for (n, np_) in quant_layer_shapes(cfg):
+        stem = path(f"beacon_layer_{n}x{np_}") + ".hlo.txt"
+        beacon_paths[f"{n}x{np_}"] = os.path.basename(stem)
+        if force or not os.path.exists(stem):
+            fn = lambda L, Lt, W, alph, loops: beacon_layer_raw(L, Lt, W, alph, loops)
+            args = (
+                spec_of((n, n)), spec_of((n, n)), spec_of((n, np_)),
+                spec_of((ALPH_PAD,)), spec_of((1,), jnp.int32),
+            )
+            lower_to_file(fn, args, stem)
+
+    # ---- manifest ---------------------------------------------------------
+    manifest = {
+        "config": {
+            "name": cfg.name, "image": cfg.image, "channels": cfg.channels,
+            "patch": cfg.patch, "d_model": cfg.d_model, "depth": cfg.depth,
+            "heads": cfg.heads, "mlp_ratio": cfg.mlp_ratio,
+            "num_classes": cfg.num_classes, "tokens": cfg.tokens,
+        },
+        "alph_pad": ALPH_PAD,
+        "eval_batch": eval_batch_size(cfg),
+        "calib_count": calib_count,
+        "eval_count": eval_count,
+        "ln_batch": ln_batch,
+        "params": [[n, list(sh)] for n, sh in param_spec(cfg)],
+        "quantizable": quantizable_layers(cfg),
+        "artifacts": {
+            "weights": os.path.basename(weights_path),
+            "calib": os.path.basename(calib_path),
+            "eval": os.path.basename(eval_path),
+            "vit_logits": os.path.basename(logits_hlo),
+            "collect_acts": os.path.basename(acts_hlo),
+            "ln_tune_step": os.path.basename(ln_hlo),
+            "beacon_layer": beacon_paths,
+        },
+    }
+    mpath = path("manifest") + ".json"
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"  wrote {mpath}")
+
+
+def eval_batch_size(cfg: ViTConfig) -> int:
+    return 128
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--config", default="tiny-sim", choices=sorted(CONFIGS))
+    ap.add_argument("--train-steps", type=int, default=600)
+    ap.add_argument("--calib-count", type=int, default=128)
+    ap.add_argument("--eval-count", type=int, default=1024)
+    ap.add_argument("--ln-batch", type=int, default=64)
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+    cfg = CONFIGS[args.config]
+    t0 = time.time()
+    print(f"[aot] building artifacts for {cfg.name} -> {args.out}")
+    build(cfg, args.out, args.train_steps, args.calib_count, args.eval_count,
+          args.ln_batch, force=args.force)
+    print(f"[aot] done in {time.time()-t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,176 @@
+"""Shared build-time definitions: model configs, parameter ordering, alphabets,
+and the deterministic RNG used for the synthetic dataset.
+
+Everything here has an exact Rust mirror (``rust/src/model/spec.rs``,
+``rust/src/quant/alphabet.rs``, ``rust/src/data/rng.rs``); the two sides are
+cross-checked by tests on both sides. Keep the constants in sync.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Tuple
+
+MASK64 = (1 << 64) - 1
+GOLDEN = 0x9E3779B97F4A7C15
+
+
+# --------------------------------------------------------------------------
+# splitmix64 — the shared deterministic RNG (same constants as Rust side).
+# --------------------------------------------------------------------------
+def mix64(z: int) -> int:
+    z &= MASK64
+    z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK64
+    z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK64
+    return (z ^ (z >> 31)) & MASK64
+
+
+def combine(a: int, b: int) -> int:
+    """Seed-combining hash: order-sensitive, avalanching."""
+    return mix64((a & MASK64) ^ mix64((b + GOLDEN) & MASK64))
+
+
+class SplitMix64:
+    """Counter-based splitmix64 stream."""
+
+    def __init__(self, seed: int):
+        self.state = seed & MASK64
+
+    def next_u64(self) -> int:
+        self.state = (self.state + GOLDEN) & MASK64
+        return mix64(self.state)
+
+    def next_f32(self) -> float:
+        """Uniform in [0, 1) with 24 bits of entropy (exact in f32)."""
+        return (self.next_u64() >> 40) / float(1 << 24)
+
+    def fill_f32(self, n: int) -> List[float]:
+        return [self.next_f32() for _ in range(n)]
+
+
+# --------------------------------------------------------------------------
+# Quantization alphabets.
+# --------------------------------------------------------------------------
+def alphabet(bits: float) -> List[float]:
+    """The unscaled symmetric grid A used by Beacon.
+
+    * integer b >= 2: mid-rise grid {-2^{b-1}+0.5, ..., -0.5, 0.5, ..., 2^{b-1}-0.5}
+    * 1.58 ("ternary"): {-1, 0, 1}
+    * 2.58: {-2.5,...,2.5} union {0}? No — the paper's 2.58-bit is log2(6):
+      the 6-element grid {-2.5,-1.5,-0.5,0.5,1.5,2.5}.
+    """
+    if abs(bits - 1.58) < 1e-9:
+        return [-1.0, 0.0, 1.0]
+    if abs(bits - 2.58) < 1e-9:
+        return [-2.5, -1.5, -0.5, 0.5, 1.5, 2.5]
+    b = int(round(bits))
+    assert abs(bits - b) < 1e-9 and b >= 1, f"unsupported bit width {bits}"
+    half = 1 << (b - 1)
+    return [(-half + 0.5) + k for k in range(2 * half)]
+
+
+BIT_WIDTHS = [1.58, 2.0, 2.58, 3.0, 4.0]
+
+
+# --------------------------------------------------------------------------
+# Model configuration + parameter ordering contract.
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class ViTConfig:
+    name: str
+    image: int = 16          # image is image x image pixels
+    channels: int = 3
+    patch: int = 4
+    d_model: int = 64
+    depth: int = 4
+    heads: int = 4
+    mlp_ratio: int = 2
+    num_classes: int = 10
+
+    @property
+    def tokens(self) -> int:
+        return (self.image // self.patch) ** 2 + 1  # patches + cls
+
+    @property
+    def patch_dim(self) -> int:
+        return self.patch * self.patch * self.channels
+
+    @property
+    def d_mlp(self) -> int:
+        return self.d_model * self.mlp_ratio
+
+
+CONFIGS = {
+    # default build: small enough to train + quantize + eval on one CPU core
+    "tiny-sim": ViTConfig(name="tiny-sim", d_model=64, depth=4, heads=4),
+    # a wider variant for sweeps / perf work
+    "small-sim": ViTConfig(name="small-sim", d_model=128, depth=6, heads=4),
+    # DeiT-B geometry (for VMEM estimates and config-completeness; too big
+    # to run end-to-end on this single-core CPU testbed)
+    "deit-b": ViTConfig(
+        name="deit-b", image=224, channels=3, patch=16,
+        d_model=768, depth=12, heads=12, mlp_ratio=4, num_classes=1000,
+    ),
+}
+
+
+def param_spec(cfg: ViTConfig) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Flat (name, shape) list — THE ordering contract with the Rust side."""
+    d, f, p = cfg.d_model, cfg.d_mlp, cfg.patch_dim
+    spec: List[Tuple[str, Tuple[int, ...]]] = [
+        ("patch_embed.w", (p, d)),
+        ("patch_embed.b", (d,)),
+        ("cls_token", (1, d)),
+        ("pos_embed", (cfg.tokens, d)),
+    ]
+    for i in range(cfg.depth):
+        spec += [
+            (f"blocks.{i}.ln1.g", (d,)),
+            (f"blocks.{i}.ln1.b", (d,)),
+            (f"blocks.{i}.qkv.w", (d, 3 * d)),
+            (f"blocks.{i}.qkv.b", (3 * d,)),
+            (f"blocks.{i}.proj.w", (d, d)),
+            (f"blocks.{i}.proj.b", (d,)),
+            (f"blocks.{i}.ln2.g", (d,)),
+            (f"blocks.{i}.ln2.b", (d,)),
+            (f"blocks.{i}.fc1.w", (d, f)),
+            (f"blocks.{i}.fc1.b", (f,)),
+            (f"blocks.{i}.fc2.w", (f, d)),
+            (f"blocks.{i}.fc2.b", (d,)),
+        ]
+    spec += [
+        ("ln_f.g", (d,)),
+        ("ln_f.b", (d,)),
+        ("head.w", (d, cfg.num_classes)),
+        ("head.b", (cfg.num_classes,)),
+    ]
+    return spec
+
+
+def quantizable_layers(cfg: ViTConfig) -> List[str]:
+    """Names of the weight matrices Beacon quantizes, in pipeline order.
+
+    Patch embedding and classifier head stay full precision by default
+    (standard PTQ practice for small models; configurable on the Rust side).
+    """
+    names = []
+    for i in range(cfg.depth):
+        names += [
+            f"blocks.{i}.qkv.w",
+            f"blocks.{i}.proj.w",
+            f"blocks.{i}.fc1.w",
+            f"blocks.{i}.fc2.w",
+        ]
+    return names
+
+
+def ln_param_names(cfg: ViTConfig) -> List[str]:
+    """LayerNorm parameters tuned by the optional LN-tuning pass."""
+    names = []
+    for i in range(cfg.depth):
+        names += [
+            f"blocks.{i}.ln1.g", f"blocks.{i}.ln1.b",
+            f"blocks.{i}.ln2.g", f"blocks.{i}.ln2.b",
+        ]
+    names += ["ln_f.g", "ln_f.b"]
+    return names

@@ -1,0 +1,54 @@
+"""Flat binary tensor-bundle format ("WTS1") shared with Rust.
+
+Layout (little endian), mirrored by ``rust/src/model/store.rs``:
+
+    magic  b"WTS1"
+    u32    n_tensors
+    per tensor:
+      u32   name_len, name bytes (utf-8)
+      u32   ndim, u32 dims[ndim]
+      f32   data[prod(dims)]
+"""
+
+from __future__ import annotations
+
+import struct
+from typing import Dict, List, Sequence, Tuple
+
+import numpy as np
+
+MAGIC = b"WTS1"
+
+
+def save_tensors(path: str, tensors: Sequence[Tuple[str, np.ndarray]]) -> None:
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<I", len(tensors)))
+        for name, arr in tensors:
+            arr = np.ascontiguousarray(arr, dtype="<f4")
+            nb = name.encode("utf-8")
+            f.write(struct.pack("<I", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<I", arr.ndim))
+            f.write(struct.pack(f"<{arr.ndim}I", *arr.shape))
+            arr.tofile(f)
+
+
+def load_tensors(path: str) -> List[Tuple[str, np.ndarray]]:
+    out = []
+    with open(path, "rb") as f:
+        assert f.read(4) == MAGIC, f"bad magic in {path}"
+        (n,) = struct.unpack("<I", f.read(4))
+        for _ in range(n):
+            (ln,) = struct.unpack("<I", f.read(4))
+            name = f.read(ln).decode("utf-8")
+            (nd,) = struct.unpack("<I", f.read(4))
+            dims = struct.unpack(f"<{nd}I", f.read(4 * nd))
+            cnt = int(np.prod(dims)) if nd else 1
+            arr = np.fromfile(f, dtype="<f4", count=cnt).reshape(dims)
+            out.append((name, arr))
+    return out
+
+
+def load_tensor_dict(path: str) -> Dict[str, np.ndarray]:
+    return dict(load_tensors(path))

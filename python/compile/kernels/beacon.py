@@ -1,0 +1,146 @@
+"""L1: the Beacon inner loop as a Pallas kernel.
+
+One program instance per *channel* (grid = (N',)): the GPU analogue in the
+paper's setting would be one threadblock per channel; here each program keeps
+the square factor L̃ = R and the running residual u = L̃q resident in VMEM
+and performs the greedy initialization plus K cyclic refinement sweeps
+(Algorithm 1). The alphabet argmax is vectorized over the |A| candidates
+using the 5-scalar expansion of cos∠ (see DESIGN.md §2 / kernels/ref.py).
+
+Lowered with ``interpret=True`` so the whole thing becomes plain HLO
+(while-loops + vector ops) executable by the CPU PJRT client loaded from
+Rust. On a real TPU the same kernel would compile via Mosaic with the
+BlockSpecs below (VMEM analysis in DESIGN.md §Perf).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+EPS = 1e-12
+NEG_INF = -1e30
+
+
+def _argmax_candidate(y, u, col, alph):
+    """argmax_{p in A} cos∠(y, u + col*p); first-max tie-break (ascending
+    alphabet order), zero-denominator candidates score -inf."""
+    a = jnp.dot(y, u)
+    b = jnp.dot(y, col)
+    cc = jnp.dot(u, u)
+    d = jnp.dot(u, col)
+    e = jnp.dot(col, col)
+    den2 = cc + 2.0 * alph * d + alph * alph * e
+    num = a + alph * b
+    score = jnp.where(
+        den2 > EPS, num * jax.lax.rsqrt(jnp.maximum(den2, EPS)), NEG_INF
+    )
+    # degenerate u = 0: every same-sign candidate has the same cosine, and
+    # f32 rsqrt would break the tie non-deterministically vs the f64 oracle.
+    # Deterministic rule (shared with ref.py): nearest to the least-squares
+    # coefficient b/e.
+    ls = b / jnp.maximum(e, EPS)
+    dist = jnp.where(alph * alph * e > EPS, jnp.abs(alph - ls), jnp.inf)
+    return jnp.where(
+        cc > EPS,
+        alph[jnp.argmax(score)],
+        alph[jnp.argmin(dist)],
+    )
+
+
+def _beacon_kernel(l_ref, lt_ref, w_ref, alph_ref, loops_ref, q_ref, c_ref, *, n):
+    L = l_ref[...]          # [N, N]  (VMEM resident)
+    Lt = lt_ref[...]        # [N, N]
+    w = w_ref[...][:, 0]    # [N]     (this program's channel)
+    alph = alph_ref[...]    # [|A|]   (candidate grid, ascending; pad by
+                            #          repeating the max — argmax is
+                            #          first-occurrence so padding is inert)
+    loops = loops_ref[0]    # scalar i32 — K, the number of sweeps
+
+    zeros = jnp.zeros((n,), jnp.float32)
+
+    # --- greedy path-following init (ℓ = 0) --------------------------------
+    def greedy_step(t, carry):
+        yt, u, q = carry
+        yt = yt + L[:, t] * w[t]
+        p = _argmax_candidate(yt, u, Lt[:, t], alph)
+        return yt, u + Lt[:, t] * p, q.at[t].set(p)
+
+    y, u, q = jax.lax.fori_loop(0, n, greedy_step, (zeros, zeros, zeros))
+
+    # --- K cyclic refinement sweeps (ℓ = 1..loops) -------------------------
+    def sweep_step(i, carry):
+        u, q = carry
+        t = i % n
+        u = u - Lt[:, t] * q[t]
+        p = _argmax_candidate(y, u, Lt[:, t], alph)
+        return u + Lt[:, t] * p, q.at[t].set(p)
+
+    u, q = jax.lax.fori_loop(0, loops * n, sweep_step, (u, q))  # dynamic bound -> while-loop
+
+    # --- integrated scale (Prop 2.1): c = ⟨Lw, L̃q⟩ / ||L̃q||² -------------
+    den = jnp.dot(u, u)
+    c = jnp.where(den > EPS, jnp.dot(y, u) / jnp.maximum(den, EPS), 0.0)
+    q_ref[...] = q[:, None]
+    c_ref[...] = c[None]
+
+
+def beacon_layer_raw(L, Lt, W, alph, loops):
+    """Traceable core: quantize all channels of a layer.
+
+    Returns (Q[N,N'] ∈ A, s[N']). ``alph`` is the ascending candidate grid
+    (pad with repeats of the max to reuse one AOT artifact across bit
+    widths); ``loops`` is a scalar i32 array — K, traced so one artifact
+    serves every sweep count.
+
+    L, Lt: the square factors (UᵀX and R); pass L = Lt = R for the
+    no-error-correction variant. W[N, N'] are the (possibly centered)
+    weights.
+    """
+    n, np_ = W.shape
+    k = alph.shape[0]
+    kernel = partial(_beacon_kernel, n=n)
+    q, c = pl.pallas_call(
+        kernel,
+        grid=(np_,),
+        in_specs=[
+            pl.BlockSpec((n, n), lambda j: (0, 0)),   # L broadcast
+            pl.BlockSpec((n, n), lambda j: (0, 0)),   # L̃ broadcast
+            pl.BlockSpec((n, 1), lambda j: (0, j)),   # this channel
+            pl.BlockSpec((k,), lambda j: (0,)),       # alphabet
+            pl.BlockSpec((1,), lambda j: (0,)),       # loops (scalar)
+        ],
+        out_specs=[
+            pl.BlockSpec((n, 1), lambda j: (0, j)),
+            pl.BlockSpec((1,), lambda j: (j,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, np_), jnp.float32),
+            jax.ShapeDtypeStruct((np_,), jnp.float32),
+        ],
+        interpret=True,
+    )(
+        L.astype(jnp.float32),
+        Lt.astype(jnp.float32),
+        W.astype(jnp.float32),
+        alph.astype(jnp.float32),
+        loops.astype(jnp.int32),
+    )
+    return q, c
+
+
+@partial(jax.jit, static_argnames=("alphabet", "loops"))
+def beacon_layer(L, Lt, W, *, alphabet: Sequence[float], loops: int):
+    """Python-side convenience wrapper with a static alphabet/loop count."""
+    alph = jnp.asarray(sorted(alphabet), jnp.float32)
+    return beacon_layer_raw(L, Lt, W, alph, jnp.asarray([loops], jnp.int32))
+
+
+def beacon_layer_dequant(L, Lt, W, *, alphabet, loops):
+    """Convenience: returns the dequantized weights Q·Diag(s)."""
+    q, c = beacon_layer(L, Lt, W, alphabet=tuple(alphabet), loops=loops)
+    return q * c[None, :]

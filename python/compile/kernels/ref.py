@@ -1,0 +1,249 @@
+"""Pure-numpy correctness oracles for every quantization algorithm.
+
+These are the ground truth the Pallas kernel (``beacon.py``), the L2 graphs,
+and the Rust implementations are all validated against. Written for clarity,
+not speed — they follow the paper's notation line by line.
+
+Conventions (paper §1–§3):
+  * a layer has weights W[N, N']; each *channel* is a column w ∈ R^N
+  * X[m, N]  — calibration inputs from the full-precision model
+  * X̃[m, N] — inputs from the partially quantized model (error correction)
+  * memory-efficient form: X̃ = U R  (QR), L = UᵀX, L̃ = R — both N×N
+  * alphabet A is symmetric about 0 (``common.alphabet``)
+
+Tie-breaking contract (mirrored in Rust + Pallas): candidates are scanned in
+ascending alphabet order and a candidate replaces the incumbent only on a
+strictly greater score; a zero-denominator candidate scores -inf.
+"""
+
+from __future__ import annotations
+
+from typing import Sequence, Tuple
+
+import numpy as np
+
+EPS = 1e-12
+
+
+def argmax_candidate(y, u, col, alphabet) -> float:
+    """argmax_{p in A} cos∠(y, u + col*p) via the 5-scalar expansion."""
+    a = float(y @ u)
+    b = float(y @ col)
+    cc = float(u @ u)
+    d = float(u @ col)
+    e = float(col @ col)
+    if cc <= EPS:
+        # degenerate u = 0: every same-sign candidate has the same cosine.
+        # Deterministic rule (shared with the Pallas kernel): take the
+        # alphabet element nearest the least-squares coefficient b/e,
+        # excluding candidates that would leave the vector zero (p = 0),
+        # which have an undefined cosine.
+        ls = b / e if e > EPS else 0.0
+        best_p, best_d = alphabet[0], np.inf
+        for p in alphabet:
+            dist = abs(p - ls) if p * p * e > EPS else np.inf
+            if dist < best_d:
+                best_d, best_p = dist, p
+        return best_p
+    best_p, best_s = alphabet[0], -np.inf
+    for p in alphabet:
+        den2 = cc + 2.0 * p * d + p * p * e
+        if den2 <= EPS:
+            s = -np.inf
+        else:
+            s = (a + p * b) / np.sqrt(den2)
+        if s > best_s:
+            best_s, best_p = s, p
+    return best_p
+
+
+def beacon_channel(
+    L: np.ndarray,
+    Lt: np.ndarray,
+    w: np.ndarray,
+    alphabet: Sequence[float],
+    loops: int,
+) -> Tuple[np.ndarray, float]:
+    """Algorithm 1 for one channel. Returns (q ∈ A^N, scale c).
+
+    Without error correction pass L = Lt = R (QR of X).
+    """
+    L = np.asarray(L, dtype=np.float64)
+    Lt = np.asarray(Lt, dtype=np.float64)
+    w = np.asarray(w, dtype=np.float64)
+    N = w.shape[0]
+    alphabet = [float(p) for p in alphabet]
+
+    q = np.zeros(N)
+    u = np.zeros(L.shape[0])  # running L̃ q
+    yt = np.zeros(L.shape[0])  # running L_{≤t} w_{≤t}
+    # Greedy path-following initialization (ℓ = 0)
+    for t in range(N):
+        yt = yt + L[:, t] * w[t]
+        q[t] = argmax_candidate(yt, u, Lt[:, t], alphabet)
+        u = u + Lt[:, t] * q[t]
+
+    # Cyclic refinement sweeps (ℓ = 1..loops)
+    y = yt  # = L w
+    for _ in range(loops):
+        for t in range(N):
+            u = u - Lt[:, t] * q[t]
+            q[t] = argmax_candidate(y, u, Lt[:, t], alphabet)
+            u = u + Lt[:, t] * q[t]
+
+    den = float(u @ u)
+    c = float(y @ u) / den if den > EPS else 0.0
+    return q.astype(np.float32), np.float32(c)
+
+
+def beacon_objective(L, Lt, w, q) -> float:
+    """cos∠(Lw, L̃q) — the quantity Prop 3.1 proves monotone."""
+    y = np.asarray(L, np.float64) @ np.asarray(w, np.float64)
+    u = np.asarray(Lt, np.float64) @ np.asarray(q, np.float64)
+    ny, nu = np.linalg.norm(y), np.linalg.norm(u)
+    if ny <= EPS or nu <= EPS:
+        return 0.0
+    return float(y @ u / (ny * nu))
+
+
+def beacon_layer(
+    X: np.ndarray,
+    Xt: np.ndarray,
+    W: np.ndarray,
+    alphabet: Sequence[float],
+    loops: int,
+    centering: bool = False,
+) -> np.ndarray:
+    """Quantize a whole layer; returns the dequantized Q·Diag(s) (+ mean row
+    if centering). X = Xt gives the no-error-correction variant."""
+    X = np.asarray(X, np.float64)
+    Xt = np.asarray(Xt, np.float64)
+    W = np.asarray(W, np.float64)
+    N, Np = W.shape
+
+    if centering:
+        z_w = W.mean(axis=0)  # column means, R^{N'}
+        W = W - np.ones((N, 1)) @ z_w[None, :]
+
+    U, R = np.linalg.qr(Xt, mode="reduced")
+    L = U.T @ X
+    Lt = R
+
+    out = np.empty((N, Np), dtype=np.float64)
+    for j in range(Np):
+        q, c = beacon_channel(L, Lt, W[:, j], alphabet, loops)
+        out[:, j] = float(c) * q
+
+    if centering:
+        ones = np.ones(N)
+        xt1 = Xt @ ones
+        den = float(xt1 @ xt1)
+        z_scale = float((X @ ones) @ xt1) / den if den > EPS else 1.0
+        out = out + np.ones((N, 1)) @ (z_scale * z_w)[None, :]
+    return out.astype(np.float32)
+
+
+# --------------------------------------------------------------------------
+# Baselines
+# --------------------------------------------------------------------------
+def _levels(bits: float) -> int:
+    return {158: 3, 258: 6}.get(int(round(bits * 100)), int(2 ** round(bits)))
+
+
+def minmax_scale(w: np.ndarray, bits: float) -> Tuple[float, float]:
+    """Asymmetric per-channel min-max grid: returns (scale c, zero z) such
+    that the grid is {c*(z+k) : k=0..levels-1} (paper §1 notation)."""
+    levels = _levels(bits)
+    lo, hi = float(w.min()), float(w.max())
+    c = (hi - lo) / (levels - 1)
+    if c <= EPS:
+        return 1.0, 0.0
+    z = lo / c
+    return c, z
+
+
+def rtn_channel(w: np.ndarray, bits: float) -> np.ndarray:
+    """Round-to-nearest on the min-max grid (the Q operator of §1)."""
+    levels = _levels(bits)
+    c, z = minmax_scale(w, bits)
+    k = np.clip(np.round(np.asarray(w, np.float64) / c - z), 0, levels - 1)
+    return (c * (k + z)).astype(np.float32)
+
+
+def gptq_layer(
+    X: np.ndarray, W: np.ndarray, bits: float, damp: float = 0.01
+) -> np.ndarray:
+    """GPTQ (OPTQ) with asymmetric per-channel min-max grid.
+
+    Sequential row rounding with Hessian-based error feedback:
+      H = XᵀX + λI; process t = 0..N-1 using the Cholesky factor of H⁻¹.
+    Reference: Frantar et al. 2022 — exact (unblocked) formulation, fine for
+    the small N on this testbed.
+    """
+    X = np.asarray(X, np.float64)
+    W = np.asarray(W, np.float64).copy()
+    N, Np = W.shape
+    H = X.T @ X
+    lam = damp * float(np.mean(np.diag(H))) + 1e-10
+    H = H + lam * np.eye(N)
+    Hinv = np.linalg.inv(H)
+    # Upper Cholesky factor with Hinv = Ucᵀ·Uc (torch's cholesky(·, upper=True)
+    # used by the reference GPTQ implementation): Uc = chol(Hinv)ᵀ.
+    Uc = np.linalg.cholesky(Hinv).T
+    levels = _levels(bits)
+    scales = np.empty(Np)
+    zeros = np.empty(Np)
+    for j in range(Np):
+        scales[j], zeros[j] = minmax_scale(W[:, j], bits)
+
+    Q = np.zeros_like(W)
+    for t in range(N):
+        w_row = W[t, :]
+        k = np.clip(np.round(w_row / scales - zeros), 0, levels - 1)
+        q_row = scales * (k + zeros)
+        Q[t, :] = q_row
+        err = (w_row - q_row) / Uc[t, t]
+        if t + 1 < N:
+            W[t + 1 :, :] -= np.outer(Uc[t, t + 1 :], err)
+    return Q.astype(np.float32)
+
+
+def comq_layer(
+    X: np.ndarray, W: np.ndarray, bits: float, loops: int = 4
+) -> np.ndarray:
+    """COMQ-style baseline: cyclic coordinate descent on ||X(w − v)||² where
+    v_t is constrained to the *fixed* per-channel min-max grid (scale chosen
+    once up front — the contrast with Beacon's integrated scale selection).
+    """
+    X = np.asarray(X, np.float64)
+    W = np.asarray(W, np.float64)
+    N, Np = W.shape
+    G = X.T @ X  # gram matrix
+    gdiag = np.diag(G).copy()
+    gdiag[gdiag <= EPS] = 1.0
+    levels = _levels(bits)
+
+    Q = np.empty_like(W)
+    for j in range(Np):
+        w = W[:, j]
+        c, z = minmax_scale(w, bits)
+        grid = c * (np.arange(levels) + z)
+        v = rtn_channel(w, bits).astype(np.float64)
+        r = G @ (w - v)  # residual gradient
+        for _ in range(loops):
+            for t in range(N):
+                opt = v[t] + r[t] / gdiag[t]  # unconstrained coord optimum
+                vt = grid[int(np.argmin(np.abs(grid - opt)))]
+                if vt != v[t]:
+                    r -= G[:, t] * (vt - v[t])
+                    v[t] = vt
+        Q[:, j] = v
+    return Q.astype(np.float32)
+
+
+def layer_recon_error(X, W, Q) -> float:
+    """||XW − XQ||_F / ||XW||_F — the metric of eq. (1)."""
+    X = np.asarray(X, np.float64)
+    num = np.linalg.norm(X @ (np.asarray(W, np.float64) - np.asarray(Q, np.float64)))
+    den = np.linalg.norm(X @ np.asarray(W, np.float64)) + EPS
+    return float(num / den)

@@ -1,0 +1,176 @@
+"""L2: the JAX ViT (DeiT-family) compute graphs.
+
+Everything is written over a *flat tuple of parameters* in the order given by
+``common.param_spec`` — that ordering is the ABI with the Rust coordinator,
+which feeds the same flat list of literals to the AOT-compiled executables.
+
+Graphs exported by aot.py:
+  * ``logits(params, images)``            — eval forward
+  * ``collect_acts(params, images)``      — forward + inputs to every
+                                            quantizable linear (GPTQ/Beacon
+                                            calibration matrices)
+  * ``ln_tune_step(...)``                 — one SGD distillation step on the
+                                            LayerNorm parameters only
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import SplitMix64, ViTConfig, combine, ln_param_names, param_spec
+
+
+def params_to_dict(cfg: ViTConfig, flat: Sequence[jnp.ndarray]) -> Dict[str, jnp.ndarray]:
+    spec = param_spec(cfg)
+    assert len(flat) == len(spec), (len(flat), len(spec))
+    out = {}
+    for (name, shape), arr in zip(spec, flat):
+        assert tuple(arr.shape) == tuple(shape), (name, arr.shape, shape)
+        out[name] = arr
+    return out
+
+
+def dict_to_params(cfg: ViTConfig, d: Dict[str, jnp.ndarray]) -> List[jnp.ndarray]:
+    return [d[name] for name, _ in param_spec(cfg)]
+
+
+def init_params(cfg: ViTConfig, seed: int = 0) -> List[np.ndarray]:
+    """Deterministic init (sum-of-uniforms ~ bounded normal-ish)."""
+    out = []
+    for idx, (name, shape) in enumerate(param_spec(cfg)):
+        rng = SplitMix64(combine(combine(seed, 0x1717), idx))
+        n = int(np.prod(shape))
+        if name.endswith(".b") or name.endswith(".g"):
+            arr = (
+                np.ones(n, dtype=np.float32)
+                if name.endswith(".g")
+                else np.zeros(n, dtype=np.float32)
+            )
+        else:
+            fan_in = shape[0] if len(shape) > 1 else n
+            std = (2.0 / float(fan_in)) ** 0.5 * 0.5
+            u = np.asarray(rng.fill_f32(2 * n), dtype=np.float32)
+            # sum of two uniforms, centered: triangular, bounded, ~N(0, std)
+            arr = ((u[:n] + u[n:]) - 1.0) * (std * (6.0 ** 0.5) / 2.0)
+        out.append(arr.reshape(shape).astype(np.float32))
+    return out
+
+
+# --------------------------------------------------------------------------
+# Forward pass
+# --------------------------------------------------------------------------
+def _layer_norm(x, g, b, eps=1e-6):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * g + b
+
+
+def _patchify(cfg: ViTConfig, images):
+    """images[B,H,W,C] -> patches[B, P, patch*patch*C]."""
+    B = images.shape[0]
+    p, g = cfg.patch, cfg.image // cfg.patch
+    x = images.reshape(B, g, p, g, p, cfg.channels)
+    x = x.transpose(0, 1, 3, 2, 4, 5)  # B, g, g, p, p, C
+    return x.reshape(B, g * g, p * p * cfg.channels)
+
+
+def _attention(cfg: ViTConfig, x, qkv_w, qkv_b, proj_w, proj_b, collect):
+    B, T, d = x.shape
+    h = cfg.heads
+    hd = d // h
+    collect.append(x)  # input to qkv
+    qkv = x @ qkv_w + qkv_b  # [B,T,3d]
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    q = q.reshape(B, T, h, hd).transpose(0, 2, 1, 3)
+    k = k.reshape(B, T, h, hd).transpose(0, 2, 1, 3)
+    v = v.reshape(B, T, h, hd).transpose(0, 2, 1, 3)
+    att = (q @ k.transpose(0, 1, 3, 2)) / jnp.sqrt(jnp.float32(hd))
+    att = jax.nn.softmax(att, axis=-1)
+    y = (att @ v).transpose(0, 2, 1, 3).reshape(B, T, d)
+    collect.append(y)  # input to proj
+    return y @ proj_w + proj_b
+
+
+def _block(cfg: ViTConfig, x, p: Dict[str, jnp.ndarray], i: int, collect):
+    pre = f"blocks.{i}."
+    y = _layer_norm(x, p[pre + "ln1.g"], p[pre + "ln1.b"])
+    x = x + _attention(
+        cfg, y, p[pre + "qkv.w"], p[pre + "qkv.b"],
+        p[pre + "proj.w"], p[pre + "proj.b"], collect,
+    )
+    y = _layer_norm(x, p[pre + "ln2.g"], p[pre + "ln2.b"])
+    collect.append(y)  # input to fc1
+    h = jax.nn.gelu(y @ p[pre + "fc1.w"] + p[pre + "fc1.b"], approximate=True)
+    collect.append(h)  # input to fc2
+    x = x + h @ p[pre + "fc2.w"] + p[pre + "fc2.b"]
+    return x
+
+
+def forward(cfg: ViTConfig, flat_params: Sequence[jnp.ndarray], images,
+            want_acts: bool = False):
+    """Returns logits[B,K] and, if want_acts, the list of inputs to every
+    quantizable linear, each flattened to [B*T, N] — order matches
+    ``common.quantizable_layers``."""
+    p = params_to_dict(cfg, flat_params)
+    B = images.shape[0]
+    collect: List[jnp.ndarray] = []
+    x = _patchify(cfg, images) @ p["patch_embed.w"] + p["patch_embed.b"]
+    cls = jnp.broadcast_to(p["cls_token"], (B, 1, cfg.d_model))
+    x = jnp.concatenate([cls, x], axis=1) + p["pos_embed"]
+    for i in range(cfg.depth):
+        x = _block(cfg, x, p, i, collect)
+    x = _layer_norm(x, p["ln_f.g"], p["ln_f.b"])
+    logits = x[:, 0, :] @ p["head.w"] + p["head.b"]
+    if not want_acts:
+        return logits
+    acts = [a.reshape(-1, a.shape[-1]) for a in collect]
+    return logits, acts
+
+
+def logits_fn(cfg: ViTConfig):
+    def f(*args):
+        *params, images = args
+        return (forward(cfg, params, images),)
+
+    return f
+
+
+def collect_acts_fn(cfg: ViTConfig):
+    def f(*args):
+        *params, images = args
+        logits, acts = forward(cfg, params, images, want_acts=True)
+        return (logits, *acts)
+
+    return f
+
+
+# --------------------------------------------------------------------------
+# LN tuning (distillation on LayerNorm params only) — paper §3 "Normalization
+# Tuning". One plain-SGD step; the Rust coordinator drives the epoch loop.
+# --------------------------------------------------------------------------
+def ln_tune_step_fn(cfg: ViTConfig):
+    spec = param_spec(cfg)
+    ln_set = set(ln_param_names(cfg))
+    ln_idx = [i for i, (n, _) in enumerate(spec) if n in ln_set]
+
+    def loss(ln_params, params, images, teacher_logits):
+        full = list(params)
+        for j, i in enumerate(ln_idx):
+            full[i] = ln_params[j]
+        student = forward(cfg, full, images)
+        return jnp.mean(jnp.square(student - teacher_logits))
+
+    def step(*args):
+        *params, images, teacher_logits, lr = args
+        ln_params = [params[i] for i in ln_idx]
+        l, grads = jax.value_and_grad(loss)(
+            ln_params, list(params), images, teacher_logits
+        )
+        new = [p - lr * g for p, g in zip(ln_params, grads)]
+        return (l, *new)
+
+    return step, ln_idx

@@ -1,0 +1,88 @@
+"""Build-time trainer for the synthetic ViT (DESIGN.md §3 substitution).
+
+Trains the configured ViT on the deterministic 'structured blobs' task with
+hand-rolled Adam (no optax in this environment). Runs ONCE during
+``make artifacts``; the resulting weights are the full-precision model that
+the Rust coordinator quantizes. Python never runs at serving/quantization
+time.
+"""
+
+from __future__ import annotations
+
+import time
+from functools import partial
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data as data_mod
+from .common import ViTConfig, param_spec
+from .model import forward, init_params
+
+TRAIN_SEED = 1
+
+
+def cross_entropy(logits, labels):
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=1))
+
+
+def make_step(cfg: ViTConfig, lr: float = 1e-3):
+    def loss_fn(params, images, labels):
+        return cross_entropy(forward(cfg, params, images), labels)
+
+    @jax.jit
+    def step(params, m, v, t, images, labels):
+        l, g = jax.value_and_grad(loss_fn)(params, images, labels)
+        b1, b2, eps = 0.9, 0.999, 1e-8
+        new_p, new_m, new_v = [], [], []
+        for p, mi, vi, gi in zip(params, m, v, g):
+            mi = b1 * mi + (1 - b1) * gi
+            vi = b2 * vi + (1 - b2) * jnp.square(gi)
+            mhat = mi / (1 - b1 ** t)
+            vhat = vi / (1 - b2 ** t)
+            new_p.append(p - lr * mhat / (jnp.sqrt(vhat) + eps))
+            new_m.append(mi)
+            new_v.append(vi)
+        return l, new_p, new_m, new_v
+
+    return step
+
+
+def accuracy(cfg: ViTConfig, params, images, labels, batch: int = 256) -> float:
+    correct = 0
+    fwd = jax.jit(lambda ps, im: forward(cfg, ps, im))
+    for i in range(0, len(images), batch):
+        logits = fwd(params, images[i : i + batch])
+        correct += int(jnp.sum(jnp.argmax(logits, -1) == labels[i : i + batch]))
+    return correct / len(images)
+
+
+def train(
+    cfg: ViTConfig,
+    steps: int = 600,
+    batch: int = 64,
+    train_count: int = 4096,
+    lr: float = 1e-3,
+    seed: int = 0,
+    verbose: bool = True,
+) -> List[np.ndarray]:
+    images, labels = data_mod.generate(cfg, TRAIN_SEED, train_count)
+    images = jnp.asarray(images)
+    labels = jnp.asarray(labels)
+    params = [jnp.asarray(p) for p in init_params(cfg, seed)]
+    m = [jnp.zeros_like(p) for p in params]
+    v = [jnp.zeros_like(p) for p in params]
+    step = make_step(cfg, lr)
+    t0 = time.time()
+    for t in range(1, steps + 1):
+        idx = np.arange((t - 1) * batch, t * batch) % train_count
+        l, params, m, v = step(params, m, v, float(t), images[idx], labels[idx])
+        if verbose and (t % 100 == 0 or t == 1):
+            print(f"  step {t:4d}  loss {float(l):.4f}  ({time.time()-t0:.1f}s)")
+    if verbose:
+        acc = accuracy(cfg, params, images[:1024], labels[:1024])
+        print(f"  train accuracy (first 1024): {acc:.4f}")
+    return [np.asarray(p) for p in params]

@@ -1,0 +1,65 @@
+"""WTS1 tensor-bundle roundtrip + HLO lowering smoke tests."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import io as wio
+from compile.aot import to_hlo_text
+from compile.common import CONFIGS
+from compile.kernels.beacon import beacon_layer_raw
+
+
+class TestWts1:
+    def test_roundtrip(self, tmp_path):
+        p = str(tmp_path / "t.bin")
+        tensors = [
+            ("a", np.arange(6, dtype=np.float32).reshape(2, 3)),
+            ("nested.name.w", np.ones((4,), dtype=np.float32)),
+            ("scalar-ish", np.asarray([3.5], dtype=np.float32)),
+        ]
+        wio.save_tensors(p, tensors)
+        out = wio.load_tensors(p)
+        assert [n for n, _ in out] == [n for n, _ in tensors]
+        for (_, a), (_, b) in zip(tensors, out):
+            np.testing.assert_array_equal(a, b)
+
+    def test_dict_loader(self, tmp_path):
+        p = str(tmp_path / "t.bin")
+        wio.save_tensors(p, [("x", np.zeros((2, 2), np.float32))])
+        d = wio.load_tensor_dict(p)
+        assert d["x"].shape == (2, 2)
+
+    def test_bad_magic_rejected(self, tmp_path):
+        p = str(tmp_path / "bad.bin")
+        with open(p, "wb") as f:
+            f.write(b"NOPE")
+        with pytest.raises(AssertionError):
+            wio.load_tensors(p)
+
+
+class TestHloLowering:
+    def test_plain_fn_lowers_to_text(self):
+        f = lambda x, y: (jnp.matmul(x, y) + 1.0,)
+        spec = jax.ShapeDtypeStruct((4, 4), jnp.float32)
+        text = to_hlo_text(jax.jit(f).lower(spec, spec))
+        assert "ENTRY" in text and "dot" in text
+
+    def test_beacon_kernel_lowers_to_text(self):
+        """The pallas kernel (interpret=True) must lower to plain HLO —
+        no custom-calls the CPU PJRT client can't run."""
+        n, np_ = 8, 3
+        args = (
+            jax.ShapeDtypeStruct((n, n), jnp.float32),
+            jax.ShapeDtypeStruct((n, n), jnp.float32),
+            jax.ShapeDtypeStruct((n, np_), jnp.float32),
+            jax.ShapeDtypeStruct((16,), jnp.float32),
+            jax.ShapeDtypeStruct((1,), jnp.int32),
+        )
+        fn = lambda L, Lt, W, a, k: beacon_layer_raw(L, Lt, W, a, k)
+        text = to_hlo_text(jax.jit(fn).lower(*args))
+        assert "ENTRY" in text
+        assert "custom-call" not in text.lower()

@@ -1,0 +1,121 @@
+"""Pallas kernel vs the numpy oracle — the CORE L1 correctness signal.
+
+The kernel and oracle share the tie-breaking contract (ascending-alphabet,
+strict >, -inf on zero denominators), so on well-conditioned inputs the
+outputs match *exactly*; hypothesis sweeps shapes/bit-widths/seeds with an
+objective-level tolerance for the rare f32-vs-f64 near-tie flip.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.common import alphabet
+from compile.kernels import ref
+from compile.kernels.beacon import beacon_layer, beacon_layer_dequant
+
+def make_layer(seed, m, n, np_):
+    rng = np.random.default_rng(seed)
+    X = (rng.normal(size=(m, n)) @ (np.eye(n) + 0.2 * rng.normal(size=(n, n)))
+         ).astype(np.float32)
+    W = (rng.normal(size=(n, np_)) * 0.25).astype(np.float32)
+    _, R = np.linalg.qr(X)
+    return X, R.astype(np.float32), W
+
+
+class TestBeaconKernelExact:
+    @pytest.mark.parametrize("bits", [1.58, 2.0, 3.0])
+    @pytest.mark.parametrize("loops", [0, 1, 4])
+    def test_matches_ref(self, bits, loops):
+        _, R, W = make_layer(0, 64, 16, 6)
+        A = alphabet(bits)
+        Q, c = beacon_layer(R, R, W, alphabet=tuple(A), loops=loops)
+        Q, c = np.asarray(Q), np.asarray(c)
+        for j in range(W.shape[1]):
+            q_ref, c_ref = ref.beacon_channel(R, R, W[:, j], A, loops)
+            np.testing.assert_array_equal(Q[:, j], q_ref)
+            np.testing.assert_allclose(c[j], c_ref, rtol=1e-4)
+
+    def test_error_correction_path(self):
+        X, _, W = make_layer(1, 64, 12, 4)
+        rng = np.random.default_rng(5)
+        Xt = X + 0.1 * rng.normal(size=X.shape).astype(np.float32)
+        U, R = np.linalg.qr(Xt)
+        L = (U.T @ X).astype(np.float32)
+        A = alphabet(2.0)
+        Q, c = beacon_layer(L, R.astype(np.float32), W, alphabet=tuple(A), loops=3)
+        for j in range(W.shape[1]):
+            q_ref, c_ref = ref.beacon_channel(L, R, W[:, j], A, 3)
+            np.testing.assert_array_equal(np.asarray(Q)[:, j], q_ref)
+            np.testing.assert_allclose(np.asarray(c)[j], c_ref, rtol=1e-4)
+
+    def test_alphabet_padding_inert(self):
+        _, R, W = make_layer(2, 48, 10, 4)
+        A = tuple(alphabet(2.0))
+        q1, c1 = beacon_layer(R, R, W, alphabet=A, loops=2)
+        q2, c2 = beacon_layer(R, R, W, alphabet=A + (A[-1],) * 4, loops=2)
+        np.testing.assert_array_equal(np.asarray(q1), np.asarray(q2))
+        np.testing.assert_array_equal(np.asarray(c1), np.asarray(c2))
+
+    def test_dequant_shape_and_grid(self):
+        _, R, W = make_layer(3, 48, 8, 5)
+        A = alphabet(2.0)
+        D = np.asarray(beacon_layer_dequant(R, R, W, alphabet=tuple(A), loops=2))
+        assert D.shape == W.shape
+        # each column must be a scalar multiple of alphabet values
+        Q, c = beacon_layer(R, R, W, alphabet=tuple(A), loops=2)
+        np.testing.assert_allclose(D, np.asarray(Q) * np.asarray(c)[None, :],
+                                   rtol=1e-6)
+
+    def test_more_loops_never_worse(self):
+        _, R, W = make_layer(4, 64, 14, 3)
+        A = alphabet(2.0)
+        prev = -1.0
+        for loops in (0, 1, 2, 4, 6):
+            Q, _ = beacon_layer(R, R, W, alphabet=tuple(A), loops=loops)
+            obj = min(
+                ref.beacon_objective(R, R, W[:, j], np.asarray(Q)[:, j])
+                for j in range(W.shape[1])
+            )
+            assert obj >= prev - 1e-5
+            prev = obj
+
+
+class TestBeaconKernelHypothesis:
+    @given(
+        seed=st.integers(0, 2**31 - 1),
+        n=st.sampled_from([4, 8, 12, 24]),
+        np_=st.sampled_from([1, 3, 5]),
+        bits=st.sampled_from([1.58, 2.0, 2.58, 3.0, 4.0]),
+        loops=st.integers(0, 4),
+    )
+    @settings(max_examples=20, deadline=None)
+    def test_kernel_objective_ge_ref(self, seed, n, np_, bits, loops):
+        """Sweep shapes/dtypes: kernel output must (a) live on the alphabet,
+        (b) reach an objective within tolerance of the f64 oracle."""
+        _, R, W = make_layer(seed, 4 * n, n, np_)
+        A = alphabet(bits)
+        Q, c = beacon_layer(R, R, W, alphabet=tuple(A), loops=loops)
+        Q = np.asarray(Q)
+        assert set(np.unique(Q)).issubset({np.float32(a) for a in A})
+        for j in range(np_):
+            obj_k = ref.beacon_objective(R, R, W[:, j], Q[:, j])
+            q_ref, _ = ref.beacon_channel(R, R, W[:, j], A, loops)
+            obj_r = ref.beacon_objective(R, R, W[:, j], q_ref)
+            assert obj_k >= obj_r - 5e-3
+
+    @given(seed=st.integers(0, 2**31 - 1))
+    @settings(max_examples=10, deadline=None)
+    def test_scale_fixed_point(self, seed):
+        """Corollary 2.2: returned c satisfies c = ⟨Lw,L̃q⟩/||L̃q||²."""
+        _, R, W = make_layer(seed, 32, 8, 2)
+        A = alphabet(2.0)
+        Q, c = beacon_layer(R, R, W, alphabet=tuple(A), loops=2)
+        Q, c = np.asarray(Q, np.float64), np.asarray(c)
+        for j in range(2):
+            u = R.astype(np.float64) @ Q[:, j]
+            y = R.astype(np.float64) @ W[:, j].astype(np.float64)
+            den = float(u @ u)
+            expect = float(y @ u) / den if den > 1e-12 else 0.0
+            np.testing.assert_allclose(c[j], expect, rtol=1e-4, atol=1e-6)

@@ -1,0 +1,60 @@
+"""Manifest contract tests: the JSON the Rust coordinator consumes must
+stay in lock-step with `common.py`. Runs against the built artifacts when
+present; otherwise builds a manifest dict in-memory via aot helpers."""
+
+import json
+import os
+
+import pytest
+
+from compile.aot import quant_layer_shapes, ALPH_PAD
+from compile.common import CONFIGS, param_spec, quantizable_layers
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+class TestShapes:
+    def test_quant_layer_shapes_unique(self):
+        cfg = CONFIGS["tiny-sim"]
+        shapes = quant_layer_shapes(cfg)
+        assert len(shapes) == len(set(shapes))
+        assert (64, 192) in shapes and (128, 64) in shapes
+
+    def test_alph_pad_covers_all_alphabets(self):
+        from compile.common import BIT_WIDTHS, alphabet
+
+        for b in BIT_WIDTHS:
+            assert len(alphabet(b)) <= ALPH_PAD
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "manifest__tiny-sim.json")),
+    reason="artifacts not built",
+)
+class TestBuiltManifest:
+    def setup_method(self):
+        with open(os.path.join(ART, "manifest__tiny-sim.json")) as f:
+            self.m = json.load(f)
+
+    def test_params_match_spec(self):
+        cfg = CONFIGS["tiny-sim"]
+        spec = [[n, list(sh)] for n, sh in param_spec(cfg)]
+        assert self.m["params"] == spec
+
+    def test_quantizable_match(self):
+        assert self.m["quantizable"] == quantizable_layers(CONFIGS["tiny-sim"])
+
+    def test_artifact_files_exist(self):
+        a = self.m["artifacts"]
+        for key in ("weights", "calib", "eval", "vit_logits",
+                    "collect_acts", "ln_tune_step"):
+            assert os.path.exists(os.path.join(ART, a[key])), key
+        for path in a["beacon_layer"].values():
+            assert os.path.exists(os.path.join(ART, path))
+
+    def test_beacon_layer_covers_quantizable(self):
+        cfg = CONFIGS["tiny-sim"]
+        spec = dict(param_spec(cfg))
+        for name in self.m["quantizable"]:
+            n, np_ = spec[name]
+            assert f"{n}x{np_}" in self.m["artifacts"]["beacon_layer"], name

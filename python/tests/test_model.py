@@ -1,0 +1,137 @@
+"""L2 graph tests: parameter contract, forward shapes, activation collection
+order, LN-tune step behaviour."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import data
+from compile.common import (CONFIGS, ln_param_names, param_spec,
+                            quantizable_layers)
+from compile.model import (collect_acts_fn, forward, init_params,
+                           ln_tune_step_fn, logits_fn, params_to_dict)
+
+CFG = CONFIGS["tiny-sim"]
+
+
+@pytest.fixture(scope="module")
+def params():
+    return [jnp.asarray(p) for p in init_params(CFG, seed=0)]
+
+
+@pytest.fixture(scope="module")
+def images():
+    imgs, _ = data.generate(CFG, 2, 4)
+    return jnp.asarray(imgs)
+
+
+class TestParamSpec:
+    def test_count(self):
+        # 4 stem + 12/block + 4 tail
+        assert len(param_spec(CFG)) == 4 + 12 * CFG.depth + 4
+
+    def test_quantizable_subset(self):
+        names = {n for n, _ in param_spec(CFG)}
+        for q in quantizable_layers(CFG):
+            assert q in names
+
+    def test_quantizable_shapes_are_matrices(self):
+        spec = dict(param_spec(CFG))
+        for q in quantizable_layers(CFG):
+            assert len(spec[q]) == 2
+
+    def test_ln_names_subset(self):
+        names = {n for n, _ in param_spec(CFG)}
+        for n in ln_param_names(CFG):
+            assert n in names
+
+    def test_init_deterministic(self):
+        a = init_params(CFG, seed=0)
+        b = init_params(CFG, seed=0)
+        for x, y in zip(a, b):
+            np.testing.assert_array_equal(x, y)
+
+    def test_init_seed_sensitivity(self):
+        a = init_params(CFG, seed=0)
+        b = init_params(CFG, seed=1)
+        assert any(not np.array_equal(x, y) for x, y in zip(a, b))
+
+
+class TestForward:
+    def test_logits_shape(self, params, images):
+        logits = forward(CFG, params, images)
+        assert logits.shape == (4, CFG.num_classes)
+        assert bool(jnp.all(jnp.isfinite(logits)))
+
+    def test_acts_order_and_shapes(self, params, images):
+        _, acts = forward(CFG, params, images, want_acts=True)
+        qnames = quantizable_layers(CFG)
+        assert len(acts) == len(qnames)
+        spec = dict(param_spec(CFG))
+        m = 4 * CFG.tokens
+        for name, a in zip(qnames, acts):
+            assert a.shape == (m, spec[name][0]), name
+
+    def test_logits_fn_matches_forward(self, params, images):
+        (l1,) = logits_fn(CFG)(*params, images)
+        l2 = forward(CFG, params, images)
+        np.testing.assert_allclose(np.asarray(l1), np.asarray(l2))
+
+    def test_collect_fn_consistent(self, params, images):
+        out = collect_acts_fn(CFG)(*params, images)
+        l2 = forward(CFG, params, images)
+        np.testing.assert_allclose(np.asarray(out[0]), np.asarray(l2))
+        assert len(out) == 1 + len(quantizable_layers(CFG))
+
+    def test_weight_perturbation_changes_logits(self, params, images):
+        """Quantizable weights actually participate in the graph."""
+        spec = [n for n, _ in param_spec(CFG)]
+        idx = spec.index(quantizable_layers(CFG)[0])
+        p2 = list(params)
+        p2[idx] = p2[idx] + 0.1
+        a = forward(CFG, params, images)
+        b = forward(CFG, p2, images)
+        assert not np.allclose(np.asarray(a), np.asarray(b))
+
+
+class TestLnTune:
+    def test_step_returns_loss_and_ln_params(self, params, images):
+        step, ln_idx = ln_tune_step_fn(CFG)
+        teacher = forward(CFG, params, images)
+        out = step(*params, images, teacher, jnp.float32(0.01))
+        assert len(out) == 1 + len(ln_idx)
+        assert float(out[0]) >= 0.0
+
+    def test_zero_loss_at_teacher(self, params, images):
+        """Student == teacher -> loss 0, gradient step is a no-op."""
+        step, ln_idx = ln_tune_step_fn(CFG)
+        teacher = forward(CFG, params, images)
+        out = step(*params, images, teacher, jnp.float32(0.5))
+        assert float(out[0]) < 1e-10
+        for j, i in enumerate(ln_idx):
+            np.testing.assert_allclose(
+                np.asarray(out[1 + j]), np.asarray(params[i]), atol=1e-5
+            )
+
+    def test_step_reduces_loss(self, params, images):
+        """A few steps on perturbed LN params must reduce the distill loss."""
+        step, ln_idx = ln_tune_step_fn(CFG)
+        teacher = forward(CFG, params, images)
+        perturbed = list(params)
+        rng = np.random.default_rng(0)
+        for i in ln_idx:
+            perturbed[i] = params[i] * (
+                1.0 + 0.2 * rng.normal(size=params[i].shape).astype(np.float32)
+            )
+        losses = []
+        cur = perturbed
+        for _ in range(15):
+            out = step(*cur, images, teacher, jnp.float32(0.5))
+            losses.append(float(out[0]))
+            cur = list(cur)
+            for j, i in enumerate(ln_idx):
+                cur[i] = out[1 + j]
+        assert losses[-1] < losses[0] * 0.8, losses
+        # and it is monotone at this lr on this problem
+        assert all(b <= a for a, b in zip(losses, losses[1:])), losses

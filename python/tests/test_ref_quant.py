@@ -1,0 +1,222 @@
+"""Properties of the numpy oracles: the paper's propositions, baselines'
+sanity, and the orderings the evaluation section reports."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.common import alphabet
+from compile.kernels import ref
+
+
+def make_case(seed, m=64, n=12, cond=0.3):
+    rng = np.random.default_rng(seed)
+    X = rng.normal(size=(m, n)) @ (np.eye(n) + cond * rng.normal(size=(n, n)))
+    w = rng.normal(size=(n,)) * 0.3
+    return X.astype(np.float32), w.astype(np.float32)
+
+
+class TestAlphabet:
+    def test_grids(self):
+        assert alphabet(1.58) == [-1.0, 0.0, 1.0]
+        assert alphabet(2.0) == [-1.5, -0.5, 0.5, 1.5]
+        assert alphabet(2.58) == [-2.5, -1.5, -0.5, 0.5, 1.5, 2.5]
+        assert len(alphabet(3.0)) == 8
+        assert len(alphabet(4.0)) == 16
+
+    @pytest.mark.parametrize("bits", [1.58, 2.0, 2.58, 3.0, 4.0])
+    def test_symmetric(self, bits):
+        a = np.asarray(alphabet(bits))
+        np.testing.assert_allclose(sorted(a), sorted(-a))
+
+
+class TestBeaconChannel:
+    @pytest.mark.parametrize("bits", [1.58, 2.0, 3.0])
+    @pytest.mark.parametrize("seed", [0, 1, 2])
+    def test_objective_monotone_in_loops(self, bits, seed):
+        """Prop 3.1: e_l is non-decreasing in the sweep count."""
+        X, w = make_case(seed)
+        _, R = np.linalg.qr(X)
+        A = alphabet(bits)
+        objs = []
+        for loops in range(0, 6):
+            q, _ = ref.beacon_channel(R, R, w, A, loops)
+            objs.append(ref.beacon_objective(R, R, w, q))
+        assert all(b >= a - 1e-12 for a, b in zip(objs, objs[1:])), objs
+
+    @pytest.mark.parametrize("seed", [0, 1, 2, 3])
+    def test_coordinatewise_local_optimum(self, seed):
+        """After convergence no single-coordinate change improves cos∠."""
+        X, w = make_case(seed, n=8)
+        _, R = np.linalg.qr(X)
+        A = alphabet(2.0)
+        q, _ = ref.beacon_channel(R, R, w, A, loops=12)
+        base = ref.beacon_objective(R, R, w, q)
+        for t in range(len(w)):
+            for p in A:
+                q2 = q.copy()
+                q2[t] = p
+                assert ref.beacon_objective(R, R, w, q2) <= base + 1e-9
+
+    @pytest.mark.parametrize("seed", [0, 5])
+    def test_scale_is_least_squares_optimal(self, seed):
+        """Prop 2.1: perturbing c away from the closed form increases
+        ||Xw − cXq||."""
+        X, w = make_case(seed)
+        _, R = np.linalg.qr(X)
+        A = alphabet(2.0)
+        q, c = ref.beacon_channel(R, R, w, A, loops=4)
+
+        def err(cc):
+            return np.linalg.norm(R @ w - cc * (R @ q))
+
+        e0 = err(c)
+        for dc in (-0.1, -0.01, 0.01, 0.1):
+            assert err(float(c) * (1 + dc)) >= e0 - 1e-9
+
+    def test_ternary_small_exhaustive(self):
+        """N=4 ternary: the converged q must match the best exhaustively
+        enumerated single-coordinate-stable point's objective within the
+        greedy's reach (and never exceed the global optimum)."""
+        X, w = make_case(7, m=32, n=4)
+        _, R = np.linalg.qr(X)
+        A = alphabet(1.58)
+        q, _ = ref.beacon_channel(R, R, w, A, loops=10)
+        got = ref.beacon_objective(R, R, w, q)
+        best = -1.0
+        from itertools import product
+        for cand in product(A, repeat=4):
+            best = max(best, ref.beacon_objective(R, R, w, np.asarray(cand)))
+        assert got <= best + 1e-12
+        assert got >= 0.8 * best  # greedy+sweeps should be near-global here
+
+    def test_values_in_alphabet(self):
+        X, w = make_case(3)
+        _, R = np.linalg.qr(X)
+        for bits in (1.58, 2.0, 4.0):
+            A = alphabet(bits)
+            q, _ = ref.beacon_channel(R, R, w, A, loops=3)
+            assert set(np.unique(q)).issubset(set(np.float32(A)))
+
+    def test_zero_weight_channel(self):
+        X, _ = make_case(0)
+        _, R = np.linalg.qr(X)
+        q, c = ref.beacon_channel(R, R, np.zeros(12), alphabet(2.0), 3)
+        # degenerate target: scale must be finite
+        assert np.isfinite(c)
+
+    def test_sign_symmetry(self):
+        """Negating w should negate the optimal scaled vector (alphabet is
+        symmetric): reconstruction errors must match."""
+        X, w = make_case(11)
+        _, R = np.linalg.qr(X)
+        A = alphabet(2.0)
+        q1, c1 = ref.beacon_channel(R, R, w, A, 4)
+        q2, c2 = ref.beacon_channel(R, R, -w, A, 4)
+        e1 = np.linalg.norm(R @ w - c1 * (R @ q1))
+        e2 = np.linalg.norm(R @ (-w) - c2 * (R @ q2))
+        np.testing.assert_allclose(e1, e2, rtol=1e-5, atol=1e-7)
+
+
+class TestQRReduction:
+    @pytest.mark.parametrize("seed", [0, 1])
+    def test_rotation_invariance(self, seed):
+        """cos∠(Xw, Xq) == cos∠(Rw, Rq) — the memory-efficient claim."""
+        X, w = make_case(seed)
+        _, R = np.linalg.qr(X)
+        rng = np.random.default_rng(seed + 100)
+        q = rng.choice(alphabet(2.0), size=w.shape)
+        a = ref.beacon_objective(X, X, w, q)
+        b = ref.beacon_objective(R, R, w, q)
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-6)
+
+    def test_ec_reduction_identity(self):
+        """⟨Xw, X̃q⟩/||X̃q|| == ⟨UᵀXw, Rq⟩/||Rq|| (eq. 5)."""
+        X, w = make_case(0)
+        Xt = X + 0.05 * np.random.default_rng(1).normal(size=X.shape)
+        U, R = np.linalg.qr(Xt)
+        L = U.T @ X
+        q = np.random.default_rng(2).choice(alphabet(2.0), size=w.shape)
+        lhs = float((X @ w) @ (Xt @ q)) / np.linalg.norm(Xt @ q)
+        rhs = float((L @ w) @ (R @ q)) / np.linalg.norm(R @ q)
+        np.testing.assert_allclose(lhs, rhs, rtol=1e-4)
+
+
+class TestLayerAndBaselines:
+    def setup_method(self):
+        rng = np.random.default_rng(42)
+        self.X = (rng.normal(size=(128, 16)) @
+                  (np.eye(16) + 0.2 * rng.normal(size=(16, 16)))).astype(np.float32)
+        self.W = (rng.normal(size=(16, 8)) * 0.2).astype(np.float32)
+
+    def test_rtn_idempotent_on_grid(self):
+        q = ref.rtn_channel(self.W[:, 0], 3.0)
+        np.testing.assert_allclose(ref.rtn_channel(q, 3.0), q, atol=1e-6)
+
+    def test_rtn_preserves_extremes(self):
+        w = self.W[:, 0]
+        q = ref.rtn_channel(w, 2.0)
+        assert abs(float(q.min()) - float(w.min())) < 1e-5
+        assert abs(float(q.max()) - float(w.max())) < 1e-5
+
+    @pytest.mark.parametrize("bits", [2.0, 3.0, 4.0])
+    def test_gptq_beats_rtn(self, bits):
+        rtn = np.stack(
+            [ref.rtn_channel(self.W[:, j], bits) for j in range(8)], axis=1
+        )
+        gq = ref.gptq_layer(self.X, self.W, bits)
+        assert (ref.layer_recon_error(self.X, self.W, gq)
+                < ref.layer_recon_error(self.X, self.W, rtn) + 1e-9)
+
+    @pytest.mark.parametrize("bits", [2.0, 3.0])
+    def test_comq_beats_rtn(self, bits):
+        rtn = np.stack(
+            [ref.rtn_channel(self.W[:, j], bits) for j in range(8)], axis=1
+        )
+        cq = ref.comq_layer(self.X, self.W, bits)
+        assert (ref.layer_recon_error(self.X, self.W, cq)
+                < ref.layer_recon_error(self.X, self.W, rtn) + 1e-9)
+
+    def test_beacon_best_at_2bit(self):
+        """The paper's headline ordering at 2-bit."""
+        bits = 2.0
+        gq = ref.gptq_layer(self.X, self.W, bits)
+        bq = ref.beacon_layer(self.X, self.X, self.W, alphabet(bits), 4)
+        assert (ref.layer_recon_error(self.X, self.W, bq)
+                < ref.layer_recon_error(self.X, self.W, gq))
+
+    def test_centering_helps_offset_weights(self):
+        """Asymmetric weights: centering must reduce reconstruction error."""
+        W = self.W + 0.3  # strong common offset
+        A = alphabet(2.0)
+        plain = ref.beacon_layer(self.X, self.X, W, A, 4, centering=False)
+        cent = ref.beacon_layer(self.X, self.X, W, A, 4, centering=True)
+        assert (ref.layer_recon_error(self.X, W, cent)
+                < ref.layer_recon_error(self.X, W, plain))
+
+    def test_ec_accounts_for_input_mismatch(self):
+        """With X̃ ≠ X, EC should reconstruct XW from X̃Q better than
+        ignoring the mismatch."""
+        rng = np.random.default_rng(9)
+        Xt = self.X + 0.15 * rng.normal(size=self.X.shape).astype(np.float32)
+        A = alphabet(2.0)
+        ec = ref.beacon_layer(self.X, Xt, self.W, A, 4)
+        no_ec = ref.beacon_layer(self.X, self.X, self.W, A, 4)
+
+        def err(Q):
+            num = np.linalg.norm(self.X @ self.W - Xt @ Q)
+            return num / np.linalg.norm(self.X @ self.W)
+
+        assert err(ec) < err(no_ec) + 1e-9
+
+    @given(st.integers(min_value=0, max_value=10_000))
+    @settings(max_examples=25, deadline=None)
+    def test_gptq_output_on_grid(self, seed):
+        rng = np.random.default_rng(seed)
+        W = (rng.normal(size=(8, 4)) * 0.3).astype(np.float32)
+        X = rng.normal(size=(32, 8)).astype(np.float32)
+        Q = ref.gptq_layer(X, W, 2.0)
+        # every output column lives on a 4-level grid
+        for j in range(4):
+            assert len(np.unique(np.round(Q[:, j], 5))) <= 4

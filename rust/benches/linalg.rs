@@ -1,0 +1,42 @@
+//! Linear-algebra substrate benches: QR factorization (the §3 memory-
+//! efficient reduction) and the gram/matmul kernels under GPTQ/COMQ.
+
+use beacon_ptq::data::rng::SplitMix64;
+use beacon_ptq::linalg::{qr_factor, Matrix};
+use beacon_ptq::util::bench::{bench, black_box};
+use beacon_ptq::util::prop::Gen;
+
+fn random(seed: u64, r: usize, c: usize) -> Matrix {
+    let mut g = Gen { rng: SplitMix64::new(seed) };
+    Matrix::from_vec(r, c, g.vec_normal(r * c, 1.0))
+}
+
+fn main() {
+    println!("== linalg benches ==\n");
+    for &(m, n) in &[(1088usize, 64usize), (2176, 64), (1088, 128)] {
+        let x = random(1, m, n);
+        bench(&format!("qr_factor {m}x{n} (no EC)"), 1, 5, || {
+            black_box(qr_factor(&x, &x));
+        });
+        let xt = random(2, m, n);
+        bench(&format!("qr_factor {m}x{n} (EC: Qᵀ applied to X too)"), 1, 5, || {
+            black_box(qr_factor(&xt, &x));
+        });
+    }
+    println!();
+    for &n in &[64usize, 128, 256] {
+        let x = random(3, 8 * n, n);
+        bench(&format!("gram {}x{n}", 8 * n), 1, 5, || {
+            black_box(x.gram());
+        });
+    }
+    let a = random(4, 256, 256);
+    let b = random(5, 256, 256);
+    bench("matmul 256x256 * 256x256", 1, 5, || {
+        black_box(a.matmul(&b));
+    });
+    let v: Vec<f64> = (0..256).map(|i| i as f64).collect();
+    bench("matvec 256x256", 5, 20, || {
+        black_box(a.matvec(&v));
+    });
+}

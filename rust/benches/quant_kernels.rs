@@ -1,0 +1,83 @@
+//! Microbenchmarks of the quantization algorithms (native path): the
+//! per-channel Beacon sweep across layer sizes / bit widths / sweep
+//! counts, and the per-layer cost of every baseline. These are the
+//! numbers behind EXPERIMENTS.md §Perf (L3).
+
+use beacon_ptq::data::rng::SplitMix64;
+use beacon_ptq::linalg::{qr_factor, Matrix};
+use beacon_ptq::quant::alphabet::{alphabet, BitWidth};
+use beacon_ptq::quant::beacon::{beacon_channel, beacon_layer, BeaconOpts};
+use beacon_ptq::quant::{comq_layer, gptq_layer, rtn_layer};
+use beacon_ptq::util::bench::{bench, black_box};
+use beacon_ptq::util::prop::Gen;
+
+fn case(seed: u64, m: usize, n: usize, np: usize) -> (Matrix, Matrix) {
+    let mut g = Gen { rng: SplitMix64::new(seed) };
+    let x = Matrix::from_vec(m, n, g.vec_normal(m * n, 1.0));
+    let w = Matrix::from_vec(n, np, g.vec_normal(n * np, 0.3));
+    (x, w)
+}
+
+fn main() {
+    println!("== quant kernel microbenches (native) ==\n");
+
+    // --- beacon_channel across N (the inner hot path) ---------------------
+    for &n in &[64usize, 128, 256] {
+        let (x, w) = case(1, 4 * n, n, 1);
+        let f = qr_factor(&x, &x);
+        let l_cols = f.l.columns();
+        let lt_cols = f.r.columns();
+        let nnz: Vec<usize> = (0..n).map(|t| t + 1).collect();
+        let wcol = w.col(0);
+        let a = alphabet(BitWidth::B2);
+        bench(&format!("beacon_channel N={n} 2-bit K=4"), 2, 10, || {
+            black_box(beacon_channel(&l_cols, &lt_cols, &nnz, &wcol, &a, 4));
+        });
+    }
+
+    // --- beacon_channel across bit widths ----------------------------------
+    let n = 128;
+    let (x, w) = case(2, 4 * n, n, 1);
+    let f = qr_factor(&x, &x);
+    let l_cols = f.l.columns();
+    let lt_cols = f.r.columns();
+    let nnz: Vec<usize> = (0..n).map(|t| t + 1).collect();
+    let wcol = w.col(0);
+    for bits in BitWidth::ALL {
+        let a = alphabet(bits);
+        bench(&format!("beacon_channel N={n} {} K=4", bits.label()), 2, 10, || {
+            black_box(beacon_channel(&l_cols, &lt_cols, &nnz, &wcol, &a, 4));
+        });
+    }
+
+    // --- sweep count scaling ------------------------------------------------
+    for &loops in &[0usize, 2, 4, 8] {
+        let a = alphabet(BitWidth::B2);
+        bench(&format!("beacon_channel N={n} 2-bit K={loops}"), 2, 10, || {
+            black_box(beacon_channel(&l_cols, &lt_cols, &nnz, &wcol, &a, loops));
+        });
+    }
+
+    // --- whole-layer comparison across methods ------------------------------
+    println!();
+    let (x, w) = case(3, 1088, 64, 192); // tiny-sim qkv shape at full calib
+    let a2 = alphabet(BitWidth::B2);
+    bench("layer 64x192 beacon (K=4)", 1, 5, || {
+        black_box(beacon_layer(&x, &x, &w, &a2, &BeaconOpts::default()));
+    });
+    bench("layer 64x192 beacon+centering", 1, 5, || {
+        black_box(beacon_layer(
+            &x, &x, &w, &a2,
+            &BeaconOpts { loops: 4, centering: true },
+        ));
+    });
+    bench("layer 64x192 gptq", 1, 5, || {
+        black_box(gptq_layer(&x, &w, BitWidth::B2, 0.01));
+    });
+    bench("layer 64x192 comq (K=4)", 1, 5, || {
+        black_box(comq_layer(&x, &w, BitWidth::B2, 4));
+    });
+    bench("layer 64x192 rtn", 1, 5, || {
+        black_box(rtn_layer(&w, BitWidth::B2));
+    });
+}

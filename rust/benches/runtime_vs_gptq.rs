@@ -1,0 +1,42 @@
+//! Table 1's runtime row: wall-clock of each Beacon variant relative to
+//! GPTQ on the same machine and calibration set (the paper reports
+//! 1–1.5× w/o EC, 2–2.5× w/ EC, 2–3× w/ LN) — plus the PJRT-Pallas vs
+//! native kernel backend comparison for §Perf.
+
+use beacon_ptq::config::QuantConfig;
+use beacon_ptq::coordinator::{experiments, KernelBackend, Pipeline};
+use beacon_ptq::quant::alphabet::BitWidth;
+
+fn main() {
+    let mut pipe = match Pipeline::from_artifacts("artifacts", "tiny-sim") {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("skipping runtime bench (artifacts missing): {e:#}");
+            return;
+        }
+    };
+
+    let table = experiments::runtime_row(&mut pipe, BitWidth::B2, 4)
+        .expect("runtime row");
+    println!("{}", table.render());
+
+    // backend comparison: the same 2-bit run through the AOT Pallas kernel
+    // vs the native twin
+    for backend in [KernelBackend::Pjrt, KernelBackend::Native] {
+        pipe.backend = backend;
+        let qc = QuantConfig { bits: 2.0, loops: 4, ..QuantConfig::default() };
+        let t = std::time::Instant::now();
+        let report = pipe.quantize(&qc).expect("quantize");
+        println!(
+            "backend {:?}: quantize {:.2}s (top-1 {:.2}%)",
+            backend,
+            t.elapsed().as_secs_f64(),
+            report.top1 * 100.0
+        );
+    }
+    let stats = pipe.runtime.stats();
+    println!(
+        "runtime totals: {} compilations {:.0} ms, {} executions {:.0} ms",
+        stats.compilations, stats.compile_ms, stats.executions, stats.exec_ms
+    );
+}

@@ -1,0 +1,47 @@
+//! Regenerates the paper's evaluation tables end-to-end (DESIGN.md §5):
+//! Table 1 (Beacon variants × bit widths), Table 2 (vs GPTQ/COMQ),
+//! F1 (objective vs sweep count), A1 (calibration size), A2 (EC per-layer
+//! errors). Requires `make artifacts`.
+//!
+//! This is a *reporting* bench: it prints the tables EXPERIMENTS.md quotes.
+
+use beacon_ptq::coordinator::{experiments, Pipeline};
+use beacon_ptq::quant::alphabet::BitWidth;
+
+fn main() {
+    let mut pipe = match Pipeline::from_artifacts("artifacts", "tiny-sim") {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("skipping table benches (artifacts missing): {e:#}");
+            return;
+        }
+    };
+
+    let grid = vec![
+        (BitWidth::B158, 6usize),
+        (BitWidth::B2, 4),
+        (BitWidth::B258, 4),
+        (BitWidth::B3, 6),
+        (BitWidth::B4, 4),
+    ];
+    let t0 = std::time::Instant::now();
+    let (t1, _) = experiments::table1(&mut pipe, &grid).expect("table1");
+    println!("{}", t1.render());
+    println!("(table 1 wall: {:.1}s)\n", t0.elapsed().as_secs_f64());
+
+    let t0 = std::time::Instant::now();
+    let grid2 = vec![(BitWidth::B2, 4usize), (BitWidth::B3, 6), (BitWidth::B4, 4)];
+    let (t2, _) = experiments::table2(&mut pipe, &grid2).expect("table2");
+    println!("{}", t2.render());
+    println!("(table 2 wall: {:.1}s)\n", t0.elapsed().as_secs_f64());
+
+    let f1 = experiments::convergence(&mut pipe, 8).expect("convergence");
+    println!("{}", f1.render());
+
+    let a1 = experiments::ablate_calib(&mut pipe, &[8, 16, 32, 64, 128])
+        .expect("ablate_calib");
+    println!("{}", a1.render());
+
+    let a2 = experiments::ablate_ec(&mut pipe, BitWidth::B2).expect("ablate_ec");
+    println!("{}", a2.render());
+}

@@ -1,0 +1,271 @@
+//! Run configuration: quantization method/variant selection and pipeline
+//! knobs, parseable from CLI flags and from a simple `key = value` config
+//! file (INI-style sections; TOML subset — the offline environment has no
+//! serde/toml).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+use crate::quant::alphabet::BitWidth;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Method {
+    Beacon,
+    Gptq,
+    Rtn,
+    Comq,
+}
+
+impl Method {
+    pub fn parse(s: &str) -> Option<Method> {
+        match s.to_ascii_lowercase().as_str() {
+            "beacon" => Some(Method::Beacon),
+            "gptq" => Some(Method::Gptq),
+            "rtn" => Some(Method::Rtn),
+            "comq" => Some(Method::Comq),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::Beacon => "beacon",
+            Method::Gptq => "gptq",
+            Method::Rtn => "rtn",
+            Method::Comq => "comq",
+        }
+    }
+}
+
+/// When the pipeline recaptures X̃ activations for error correction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RecapturePolicy {
+    /// before every quantizable layer (max fidelity; paper's Algorithm 1)
+    PerLayer,
+    /// once per transformer block (4 layers) — cheaper, slightly staler X̃
+    PerBlock,
+}
+
+#[derive(Debug, Clone)]
+pub struct QuantConfig {
+    pub method: Method,
+    pub bits: f64,
+    /// K — Beacon/COMQ refinement sweeps
+    pub loops: usize,
+    /// Beacon error correction (use X̃ from the partially quantized model)
+    pub error_correction: bool,
+    /// Beacon asymmetric quantization via centering
+    pub centering: bool,
+    /// post-quantization LayerNorm tuning
+    pub ln_tune: bool,
+    pub ln_tune_steps: usize,
+    pub ln_tune_lr: f32,
+    /// GPTQ Hessian damping factor
+    pub gptq_damp: f64,
+    pub recapture: RecapturePolicy,
+    /// calibration images to use (0 = all available)
+    pub calib_count: usize,
+    /// evaluation images to use (0 = all available)
+    pub eval_count: usize,
+}
+
+impl Default for QuantConfig {
+    fn default() -> Self {
+        QuantConfig {
+            method: Method::Beacon,
+            bits: 2.0,
+            loops: 4,
+            error_correction: false,
+            centering: false,
+            ln_tune: false,
+            ln_tune_steps: 30,
+            ln_tune_lr: 0.05,
+            gptq_damp: 0.01,
+            recapture: RecapturePolicy::PerLayer,
+            calib_count: 0,
+            eval_count: 0,
+        }
+    }
+}
+
+impl QuantConfig {
+    pub fn bit_width(&self) -> BitWidth {
+        BitWidth::parse(&format!("{}", self.bits))
+            .unwrap_or_else(|| panic!("unsupported bit width {}", self.bits))
+    }
+
+    /// Human label like "beacon-2bit+ec+centering".
+    pub fn label(&self) -> String {
+        let mut s = format!("{}-{}", self.method.name(), self.bit_width().label());
+        if self.method == Method::Beacon {
+            if self.error_correction {
+                s.push_str("+ec");
+            }
+            if self.centering {
+                s.push_str("+centering");
+            }
+            if self.ln_tune {
+                s.push_str("+ln");
+            }
+        }
+        s
+    }
+
+    /// Apply `key = value` overrides (config-file entries or CLI flags).
+    pub fn set(&mut self, key: &str, value: &str) -> Result<()> {
+        match key {
+            "method" => {
+                self.method = Method::parse(value)
+                    .ok_or_else(|| anyhow::anyhow!("unknown method '{value}'"))?
+            }
+            "bits" => {
+                self.bits = value.parse()?;
+                // validate early
+                let _ = BitWidth::parse(value)
+                    .ok_or_else(|| anyhow::anyhow!("unsupported bits '{value}'"))?;
+            }
+            "loops" => self.loops = value.parse()?,
+            "error_correction" | "ec" => self.error_correction = parse_bool(value)?,
+            "centering" => self.centering = parse_bool(value)?,
+            "ln_tune" => self.ln_tune = parse_bool(value)?,
+            "ln_tune_steps" => self.ln_tune_steps = value.parse()?,
+            "ln_tune_lr" => self.ln_tune_lr = value.parse()?,
+            "gptq_damp" => self.gptq_damp = value.parse()?,
+            "calib_count" => self.calib_count = value.parse()?,
+            "eval_count" => self.eval_count = value.parse()?,
+            "recapture" => {
+                self.recapture = match value {
+                    "layer" => RecapturePolicy::PerLayer,
+                    "block" => RecapturePolicy::PerBlock,
+                    _ => bail!("recapture must be 'layer' or 'block'"),
+                }
+            }
+            _ => bail!("unknown config key '{key}'"),
+        }
+        Ok(())
+    }
+
+    /// Load from an INI-style file: `key = value` lines, `#` comments,
+    /// optional `[quant]` section header (other sections ignored).
+    pub fn from_file(path: &Path) -> Result<QuantConfig> {
+        let text = std::fs::read_to_string(path)?;
+        let mut cfg = QuantConfig::default();
+        let mut section = String::from("quant");
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+                section = name.trim().to_string();
+                continue;
+            }
+            if section != "quant" {
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| anyhow::anyhow!("line {}: expected key = value", lineno + 1))?;
+            cfg.set(k.trim(), v.trim())?;
+        }
+        Ok(cfg)
+    }
+
+    /// Parse all recognized keys out of a flag map (unknown keys are left
+    /// for the caller).
+    pub fn apply_flags(&mut self, flags: &BTreeMap<String, String>, switches: &[String]) -> Result<()> {
+        for (k, v) in flags {
+            if self.is_known_key(k) {
+                self.set(k, v)?;
+            }
+        }
+        for s in switches {
+            if self.is_known_key(s) {
+                self.set(s, "true")?;
+            }
+        }
+        Ok(())
+    }
+
+    fn is_known_key(&self, k: &str) -> bool {
+        matches!(
+            k,
+            "method" | "bits" | "loops" | "error_correction" | "ec"
+                | "centering" | "ln_tune" | "ln_tune_steps" | "ln_tune_lr"
+                | "gptq_damp" | "calib_count" | "eval_count" | "recapture"
+        )
+    }
+}
+
+fn parse_bool(v: &str) -> Result<bool> {
+    match v.to_ascii_lowercase().as_str() {
+        "true" | "1" | "yes" | "on" => Ok(true),
+        "false" | "0" | "no" | "off" => Ok(false),
+        _ => bail!("expected bool, got '{v}'"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_sane() {
+        let c = QuantConfig::default();
+        assert_eq!(c.method, Method::Beacon);
+        assert_eq!(c.loops, 4);
+        assert!(!c.error_correction);
+    }
+
+    #[test]
+    fn set_and_label() {
+        let mut c = QuantConfig::default();
+        c.set("bits", "1.58").unwrap();
+        c.set("ec", "true").unwrap();
+        c.set("centering", "on").unwrap();
+        assert_eq!(c.label(), "beacon-1.58-bit+ec+centering");
+    }
+
+    #[test]
+    fn rejects_unknown() {
+        let mut c = QuantConfig::default();
+        assert!(c.set("bogus", "1").is_err());
+        assert!(c.set("bits", "7.3").is_err());
+        assert!(c.set("method", "awq").is_err());
+    }
+
+    #[test]
+    fn config_file_roundtrip() {
+        let dir = std::env::temp_dir().join("beacon_ptq_cfg_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("run.cfg");
+        std::fs::write(
+            &p,
+            "# table-1 column 3\n[quant]\nmethod = beacon\nbits = 2.58\nloops = 4\nec = true\ncentering = true\n\n[ignored]\nfoo = bar\n",
+        )
+        .unwrap();
+        let c = QuantConfig::from_file(&p).unwrap();
+        assert_eq!(c.bits, 2.58);
+        assert!(c.error_correction && c.centering);
+        assert_eq!(c.method, Method::Beacon);
+    }
+
+    #[test]
+    fn bad_file_line_reported() {
+        let dir = std::env::temp_dir().join("beacon_ptq_cfg_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("bad.cfg");
+        std::fs::write(&p, "not a kv line\n").unwrap();
+        let e = QuantConfig::from_file(&p).unwrap_err().to_string();
+        assert!(e.contains("line 1"), "{e}");
+    }
+
+    #[test]
+    fn method_parse() {
+        assert_eq!(Method::parse("GPTQ"), Some(Method::Gptq));
+        assert_eq!(Method::parse("beacon"), Some(Method::Beacon));
+        assert_eq!(Method::parse("x"), None);
+    }
+}

@@ -1,0 +1,65 @@
+//! Top-1 evaluation through the `vit_logits` PJRT artifact.
+//!
+//! The artifact is shape-specialized to `eval_batch` images; the evaluator
+//! chunks the eval split, padding the final partial batch (padded logits
+//! are ignored).
+
+use anyhow::Result;
+
+use crate::model::WeightStore;
+use crate::runtime::client::{literal_f32, literal_to_f32};
+
+use super::pipeline::Pipeline;
+
+/// Top-1 accuracy of `store` on the eval split (first `count` images;
+/// 0 = all).
+pub fn top1(pipe: &Pipeline, store: &WeightStore, count: usize) -> Result<f64> {
+    let m = &pipe.artifacts.manifest;
+    let cfg = &m.cfg;
+    let ds = &pipe.eval;
+    let total = if count == 0 { ds.count } else { count.min(ds.count) };
+    anyhow::ensure!(total > 0, "empty eval set");
+    let b = m.eval_batch;
+    let img_len = ds.shape.len();
+
+    // weight literals once per call
+    let mut weight_inputs = Vec::new();
+    for t in store.ordered() {
+        let dims: Vec<i64> = t.shape.iter().map(|d| *d as i64).collect();
+        weight_inputs.push(literal_f32(&t.data, &dims)?);
+    }
+
+    let mut correct = 0usize;
+    let mut lo = 0usize;
+    while lo < total {
+        let hi = (lo + b).min(total);
+        // build a full batch, padding with the last image if needed
+        let mut batch = Vec::with_capacity(b * img_len);
+        batch.extend_from_slice(ds.batch(lo, hi));
+        while batch.len() < b * img_len {
+            batch.extend_from_slice(ds.image(hi - 1));
+        }
+        let mut inputs = weight_inputs.clone();
+        inputs.push(literal_f32(
+            &batch,
+            &[b as i64, cfg.image as i64, cfg.image as i64, cfg.channels as i64],
+        )?);
+        let out = pipe.runtime.exec(&m.vit_logits, &inputs)?;
+        let logits = literal_to_f32(&out[0])?;
+        let k = cfg.num_classes;
+        for (bi, item) in (lo..hi).enumerate() {
+            let row = &logits[bi * k..(bi + 1) * k];
+            let pred = row
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(i, _)| i)
+                .unwrap();
+            if pred as i32 == ds.labels[item] {
+                correct += 1;
+            }
+        }
+        lo = hi;
+    }
+    Ok(correct as f64 / total as f64)
+}

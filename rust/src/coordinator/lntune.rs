@@ -1,0 +1,71 @@
+//! LayerNorm tuning (paper §3 "Normalization Tuning"): after the whole
+//! model is quantized, lightly train ONLY the LN parameters to match the
+//! FP model's calibration logits. The gradient step itself is an AOT
+//! artifact (`ln_tune_step`); Rust drives the epoch loop and writes the
+//! updated parameters back into the store — no Python, no optimizer state.
+
+use anyhow::Result;
+
+use crate::config::QuantConfig;
+use crate::model::spec::{ln_param_names, param_spec};
+use crate::model::WeightStore;
+use crate::runtime::client::{literal_f32, literal_to_f32};
+use xla::Literal;
+
+use super::pipeline::Pipeline;
+
+/// Run `qc.ln_tune_steps` SGD steps; returns the per-step distill losses.
+pub fn tune(
+    pipe: &Pipeline,
+    store: &mut WeightStore,
+    teacher_logits: &[f32],
+    qc: &QuantConfig,
+) -> Result<Vec<f32>> {
+    let m = &pipe.artifacts.manifest;
+    let cfg = &m.cfg;
+    let b = m.ln_batch;
+    let k = cfg.num_classes;
+    anyhow::ensure!(
+        pipe.calib.count >= b,
+        "calibration set ({}) smaller than LN batch ({b})",
+        pipe.calib.count
+    );
+    let ln_names = ln_param_names(cfg);
+    let spec_names: Vec<String> =
+        param_spec(cfg).iter().map(|p| p.name.clone()).collect();
+
+    let mut losses = Vec::with_capacity(qc.ln_tune_steps);
+    let nchunks = pipe.calib.count / b;
+    for step in 0..qc.ln_tune_steps {
+        let chunk = step % nchunks;
+        let (lo, hi) = (chunk * b, (chunk + 1) * b);
+
+        let mut inputs = Vec::with_capacity(spec_names.len() + 3);
+        for t in store.ordered() {
+            let dims: Vec<i64> = t.shape.iter().map(|d| *d as i64).collect();
+            inputs.push(literal_f32(&t.data, &dims)?);
+        }
+        inputs.push(literal_f32(
+            pipe.calib.batch(lo, hi),
+            &[b as i64, cfg.image as i64, cfg.image as i64, cfg.channels as i64],
+        )?);
+        inputs.push(literal_f32(
+            &teacher_logits[lo * k..hi * k],
+            &[b as i64, k as i64],
+        )?);
+        inputs.push(Literal::from(qc.ln_tune_lr));
+
+        let out = pipe.runtime.exec(&m.ln_tune_step, &inputs)?;
+        anyhow::ensure!(
+            out.len() == 1 + ln_names.len(),
+            "ln_tune_step returned {} outputs, expected {}",
+            out.len(),
+            1 + ln_names.len()
+        );
+        losses.push(out[0].get_first_element::<f32>()?);
+        for (j, name) in ln_names.iter().enumerate() {
+            store.set_data(name, literal_to_f32(&out[1 + j])?);
+        }
+    }
+    Ok(losses)
+}

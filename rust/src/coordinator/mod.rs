@@ -1,0 +1,13 @@
+//! The L3 coordinator: a layer-sequential, channel-parallel PTQ pipeline
+//! that drives the whole stack — calibration capture, QR factorization,
+//! per-channel Beacon (native or via the AOT Pallas kernel), baselines,
+//! error-correction recapture, centering, LayerNorm tuning, and
+//! evaluation — entirely from Rust over PJRT artifacts.
+
+pub mod eval;
+pub mod experiments;
+pub mod lntune;
+pub mod pipeline;
+pub mod report;
+
+pub use pipeline::{KernelBackend, Pipeline, QuantReport};

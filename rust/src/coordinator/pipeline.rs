@@ -1,0 +1,380 @@
+//! The quantization pipeline (the system around Algorithm 1).
+//!
+//! Data flow per quantizable layer (pipeline order = forward order):
+//!
+//! ```text
+//!   calib images ─► collect_acts(FP weights)     ─► X   (cached once)
+//!                 └► collect_acts(work weights)  ─► X̃  (EC recapture)
+//!   QR(X̃) ─► L = UᵀX, L̃ = R          (rust/src/linalg — §3 memory form)
+//!   channels ─► beacon kernel (PJRT pallas artifact or native twin)
+//!   W ← Q·Diag(s) (+ centering row)   (mutates the WeightStore in place)
+//! ```
+//!
+//! after all layers: optional LN tuning (PJRT grad-step artifact), then
+//! top-1 evaluation through the `vit_logits` artifact.
+
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::{Method, QuantConfig, RecapturePolicy};
+use crate::data::Dataset;
+use crate::linalg::{qr_factor, Matrix};
+use crate::model::spec::param_spec;
+use crate::model::WeightStore;
+use crate::quant::alphabet::alphabet;
+use crate::quant::beacon::{beacon_layer_prefactored, BeaconOpts, LayerQuant};
+use crate::quant::{comq_layer, gptq_layer, rtn_layer};
+use crate::runtime::client::{literal_f32, literal_to_f32};
+use crate::runtime::{Artifacts, Runtime};
+
+/// Which implementation executes the Beacon inner sweep.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KernelBackend {
+    /// The AOT-compiled Pallas kernel through PJRT (the paper stack).
+    Pjrt,
+    /// The native Rust twin (bit-compatible contract; used for perf
+    /// comparison and as fallback when an artifact shape is missing).
+    Native,
+}
+
+#[derive(Debug, Clone)]
+pub struct QuantReport {
+    pub label: String,
+    pub fp_top1: f64,
+    pub top1: f64,
+    pub layer_errors: Vec<(String, f64)>,
+    pub quantize_secs: f64,
+    pub ln_tune_secs: f64,
+    pub eval_secs: f64,
+    pub ln_tune_losses: Vec<f32>,
+}
+
+impl QuantReport {
+    pub fn accuracy_drop(&self) -> f64 {
+        (self.fp_top1 - self.top1) * 100.0
+    }
+}
+
+pub struct Pipeline {
+    pub runtime: Runtime,
+    pub artifacts: Artifacts,
+    pub weights_fp: WeightStore,
+    pub calib: Dataset,
+    pub eval: Dataset,
+    pub backend: KernelBackend,
+    /// cached FP activations (inputs to each quantizable layer) + logits
+    acts_fp: Option<Vec<Matrix>>,
+    fp_logits_calib: Option<Vec<f32>>,
+    fp_top1: Option<f64>,
+}
+
+impl Pipeline {
+    pub fn from_artifacts(dir: impl AsRef<Path>, config_name: &str) -> Result<Pipeline> {
+        let artifacts = Artifacts::load(dir.as_ref(), config_name)?;
+        let cfg = artifacts.manifest.cfg.clone();
+        let weights_fp = WeightStore::load(&artifacts.manifest.weights, &cfg)?;
+        let calib = Dataset::load(&artifacts.manifest.calib)?;
+        let eval = Dataset::load(&artifacts.manifest.eval)?;
+        let runtime = Runtime::cpu()?;
+        Ok(Pipeline {
+            runtime,
+            artifacts,
+            weights_fp,
+            calib,
+            eval,
+            backend: KernelBackend::Pjrt,
+            acts_fp: None,
+            fp_logits_calib: None,
+            fp_top1: None,
+        })
+    }
+
+    pub fn cfg(&self) -> &crate::model::spec::ViTConfig {
+        &self.artifacts.manifest.cfg
+    }
+
+    /// Run the collect_acts artifact for the given weights over the whole
+    /// calibration set. Returns (logits, per-layer activation matrices).
+    pub fn collect_acts(&self, store: &WeightStore) -> Result<(Vec<f32>, Vec<Matrix>)> {
+        let m = &self.artifacts.manifest;
+        let cfg = &m.cfg;
+        anyhow::ensure!(
+            self.calib.count == m.calib_count,
+            "calib dataset size {} != artifact batch {}",
+            self.calib.count,
+            m.calib_count
+        );
+        let mut inputs = Vec::new();
+        for t in store.ordered() {
+            let dims: Vec<i64> = t.shape.iter().map(|d| *d as i64).collect();
+            inputs.push(literal_f32(&t.data, &dims)?);
+        }
+        inputs.push(literal_f32(
+            &self.calib.images,
+            &[
+                self.calib.count as i64,
+                cfg.image as i64,
+                cfg.image as i64,
+                cfg.channels as i64,
+            ],
+        )?);
+        let out = self.runtime.exec(&m.collect_acts, &inputs)?;
+        anyhow::ensure!(
+            out.len() == 1 + m.quantizable.len(),
+            "collect_acts returned {} outputs, expected {}",
+            out.len(),
+            1 + m.quantizable.len()
+        );
+        let logits = literal_to_f32(&out[0])?;
+        let tokens = self.calib.count * cfg.tokens();
+        let spec: std::collections::BTreeMap<String, Vec<usize>> = param_spec(cfg)
+            .into_iter()
+            .map(|p| (p.name, p.shape))
+            .collect();
+        let mut acts = Vec::with_capacity(m.quantizable.len());
+        for (i, lname) in m.quantizable.iter().enumerate() {
+            let n = spec[lname][0];
+            let data = literal_to_f32(&out[1 + i])?;
+            anyhow::ensure!(
+                data.len() == tokens * n,
+                "activation {lname}: {} values, expected {}",
+                data.len(),
+                tokens * n
+            );
+            acts.push(Matrix::from_f32(tokens, n, &data));
+        }
+        Ok((logits, acts))
+    }
+
+    fn ensure_fp_acts(&mut self) -> Result<()> {
+        if self.acts_fp.is_none() {
+            let (logits, acts) = self.collect_acts(&self.weights_fp.clone())?;
+            self.acts_fp = Some(acts);
+            self.fp_logits_calib = Some(logits);
+        }
+        Ok(())
+    }
+
+    pub fn fp_top1(&mut self) -> Result<f64> {
+        if let Some(v) = self.fp_top1 {
+            return Ok(v);
+        }
+        let store = self.weights_fp.clone();
+        let v = crate::coordinator::eval::top1(self, &store, 0)?;
+        self.fp_top1 = Some(v);
+        Ok(v)
+    }
+
+    /// Quantize one layer's weights with the configured method.
+    /// `x` is the FP activation matrix, `xt` the (possibly identical)
+    /// partially-quantized-model activations.
+    pub fn quantize_layer(
+        &self,
+        qc: &QuantConfig,
+        x: &Matrix,
+        xt: &Matrix,
+        w: &Matrix,
+    ) -> Result<Matrix> {
+        Ok(match qc.method {
+            Method::Rtn => rtn_layer(w, qc.bit_width()),
+            Method::Gptq => gptq_layer(xt, w, qc.bit_width(), qc.gptq_damp),
+            Method::Comq => comq_layer(xt, w, qc.bit_width(), qc.loops),
+            Method::Beacon => {
+                let lq = self.beacon_layer(qc, x, xt, w)?;
+                lq.dequant
+            }
+        })
+    }
+
+    /// Beacon over one layer, dispatching to the PJRT Pallas kernel or the
+    /// native twin. Centering (§3) is handled here — the kernel sees the
+    /// centered weights either way.
+    pub fn beacon_layer(
+        &self,
+        qc: &QuantConfig,
+        x: &Matrix,
+        xt: &Matrix,
+        w: &Matrix,
+    ) -> Result<LayerQuant> {
+        let alph = alphabet(qc.bit_width());
+        let opts = BeaconOpts { loops: qc.loops, centering: qc.centering };
+        let f = qr_factor(xt, x);
+        match self.backend {
+            KernelBackend::Native => Ok(beacon_layer_prefactored(
+                &f.l, &f.r, x, xt, w, &alph, &opts,
+            )),
+            KernelBackend::Pjrt => {
+                self.beacon_layer_pjrt(qc, &f.l, &f.r, x, xt, w, &alph, &opts)
+            }
+        }
+    }
+
+    /// Execute the AOT Pallas kernel artifact for one layer.
+    #[allow(clippy::too_many_arguments)]
+    fn beacon_layer_pjrt(
+        &self,
+        _qc: &QuantConfig,
+        l: &Matrix,
+        r: &Matrix,
+        x: &Matrix,
+        xt: &Matrix,
+        w: &Matrix,
+        alph: &[f64],
+        opts: &BeaconOpts,
+    ) -> Result<LayerQuant> {
+        let (n, np) = (w.rows, w.cols);
+        let hlo = self.artifacts.beacon_layer_hlo(n, np)?;
+        let pad = self.artifacts.manifest.alph_pad;
+        if alph.len() > pad {
+            bail!("alphabet {} wider than artifact pad {}", alph.len(), pad);
+        }
+
+        // center weights if requested (mirror of the native path)
+        let z_w: Vec<f64> = (0..np)
+            .map(|j| (0..n).map(|i| w[(i, j)]).sum::<f64>() / n as f64)
+            .collect();
+        let mut w_in = w.clone();
+        if opts.centering {
+            for i in 0..n {
+                for j in 0..np {
+                    w_in[(i, j)] -= z_w[j];
+                }
+            }
+        }
+
+        // pad alphabet by repeating the max (inert under first-max argmax)
+        let mut alph_pad: Vec<f32> = alph.iter().map(|v| *v as f32).collect();
+        while alph_pad.len() < pad {
+            alph_pad.push(*alph_pad.last().unwrap());
+        }
+
+        let inputs = vec![
+            literal_f32(&l.to_f32(), &[n as i64, n as i64])?,
+            literal_f32(&r.to_f32(), &[n as i64, n as i64])?,
+            literal_f32(&w_in.to_f32(), &[n as i64, np as i64])?,
+            crate::runtime::literal_f32_1d(&alph_pad),
+            crate::runtime::literal_i32_1d(&[opts.loops as i32]),
+        ];
+        let out = self.runtime.exec(hlo, &inputs)?;
+        anyhow::ensure!(out.len() == 2, "beacon artifact returned {}", out.len());
+        let q_flat = literal_to_f32(&out[0])?;
+        let scales_f32 = literal_to_f32(&out[1])?;
+        anyhow::ensure!(q_flat.len() == n * np && scales_f32.len() == np);
+
+        let codes_m = Matrix::from_f32(n, np, &q_flat);
+        let scales: Vec<f64> = scales_f32.iter().map(|v| f64::from(*v)).collect();
+
+        // centering restore: z_Q = (⟨X̃1, X1⟩/‖X̃1‖²)·z_W
+        let offsets: Vec<f64> = if opts.centering {
+            let ones = vec![1.0f64; n];
+            let x1 = x.matvec(&ones);
+            let xt1 = xt.matvec(&ones);
+            let den = crate::linalg::matrix::dot(&xt1, &xt1);
+            let z_scale = if den > 1e-12 {
+                crate::linalg::matrix::dot(&x1, &xt1) / den
+            } else {
+                1.0
+            };
+            z_w.iter().map(|z| z_scale * z).collect()
+        } else {
+            vec![0.0; np]
+        };
+
+        let mut dequant = Matrix::zeros(n, np);
+        let mut codes = Vec::with_capacity(np);
+        for j in 0..np {
+            let mut col = Vec::with_capacity(n);
+            for i in 0..n {
+                let q = f64::from(codes_m[(i, j)] as f32);
+                dequant[(i, j)] = scales[j] * q + offsets[j];
+                col.push(q);
+            }
+            codes.push(col);
+        }
+        Ok(LayerQuant { codes, scales, offsets, dequant })
+    }
+
+    /// Run the full PTQ pipeline and evaluate. The FP model is left
+    /// untouched; the quantized weights are returned inside the report
+    /// via `out_store` when provided.
+    pub fn quantize(&mut self, qc: &QuantConfig) -> Result<QuantReport> {
+        let (report, _) = self.quantize_with_weights(qc)?;
+        Ok(report)
+    }
+
+    pub fn quantize_with_weights(
+        &mut self,
+        qc: &QuantConfig,
+    ) -> Result<(QuantReport, WeightStore)> {
+        self.ensure_fp_acts()?;
+        let fp_top1 = self.fp_top1()?;
+        let acts_fp = self.acts_fp.clone().expect("ensured");
+        let quantizable = self.artifacts.manifest.quantizable.clone();
+        let use_ec = qc.method == Method::Beacon && qc.error_correction;
+
+        let t0 = Instant::now();
+        let mut work = self.weights_fp.clone();
+        let mut layer_errors = Vec::with_capacity(quantizable.len());
+        let mut acts_q: Option<Vec<Matrix>> = None;
+
+        for (li, lname) in quantizable.iter().enumerate() {
+            let x = &acts_fp[li];
+            // error-correction recapture of X̃ from the current weights
+            let xt: &Matrix = if use_ec {
+                let refresh = match qc.recapture {
+                    RecapturePolicy::PerLayer => true,
+                    RecapturePolicy::PerBlock => li % 4 == 0,
+                };
+                if refresh || acts_q.is_none() {
+                    let (_, acts) = self
+                        .collect_acts(&work)
+                        .context("EC recapture")?;
+                    acts_q = Some(acts);
+                }
+                &acts_q.as_ref().unwrap()[li]
+            } else {
+                x
+            };
+
+            let w = work.matrix(lname);
+            let dequant = self.quantize_layer(qc, x, xt, &w)?;
+            // gram-based metric: avoids two m×N×N' products per layer
+            layer_errors.push((
+                lname.clone(),
+                crate::quant::metrics::layer_recon_error_gram(&x.gram(), &w, &dequant),
+            ));
+            work.set_matrix(lname, &dequant);
+        }
+        let quantize_secs = t0.elapsed().as_secs_f64();
+
+        // optional LN tuning (distillation against the FP calib logits)
+        let t_ln = Instant::now();
+        let ln_tune_losses = if qc.ln_tune {
+            let teacher = self.fp_logits_calib.clone().expect("ensured");
+            crate::coordinator::lntune::tune(self, &mut work, &teacher, qc)?
+        } else {
+            Vec::new()
+        };
+        let ln_tune_secs = t_ln.elapsed().as_secs_f64();
+
+        let t1 = Instant::now();
+        let top1 = crate::coordinator::eval::top1(self, &work, qc.eval_count)?;
+        let eval_secs = t1.elapsed().as_secs_f64();
+
+        Ok((
+            QuantReport {
+                label: qc.label(),
+                fp_top1,
+                top1,
+                layer_errors,
+                quantize_secs,
+                ln_tune_secs,
+                eval_secs,
+                ln_tune_losses,
+            },
+            work,
+        ))
+    }
+}

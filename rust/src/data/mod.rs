@@ -1,0 +1,10 @@
+//! Deterministic data substrate: the splitmix64 RNG shared with the Python
+//! build path, the synthetic 'structured blobs' dataset generator (exact
+//! mirror of `python/compile/data.py`), and the DSET binary reader/writer.
+
+pub mod rng;
+pub mod store;
+pub mod synthetic;
+
+pub use rng::{combine, mix64, SplitMix64};
+pub use store::Dataset;

@@ -1,0 +1,114 @@
+//! splitmix64 — the cross-language deterministic RNG.
+//!
+//! EXACT mirror of `python/compile/common.py` (same constants, same draw
+//! order); the golden values in the tests below are duplicated in
+//! `python/tests/test_rng_data.py` and pin the contract.
+
+pub const GOLDEN: u64 = 0x9E37_79B9_7F4A_7C15;
+
+#[inline]
+pub fn mix64(mut z: u64) -> u64 {
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Order-sensitive seed combiner.
+#[inline]
+pub fn combine(a: u64, b: u64) -> u64 {
+    mix64(a ^ mix64(b.wrapping_add(GOLDEN)))
+}
+
+#[derive(Debug, Clone)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        SplitMix64 { state: seed }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(GOLDEN);
+        mix64(self.state)
+    }
+
+    /// Uniform in [0, 1) with 24 bits of entropy — exactly representable in
+    /// f32, so the Python and Rust streams agree bit-for-bit.
+    #[inline]
+    pub fn next_f32(&mut self) -> f32 {
+        (self.next_u64() >> 40) as f32 / (1u32 << 24) as f32
+    }
+
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    pub fn fill_f32(&mut self, out: &mut [f32]) {
+        for v in out {
+            *v = self.next_f32();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mix64_golden() {
+        assert_eq!(mix64(0), 0x0);
+        assert_eq!(mix64(1), 0x5692_161D_100B_05E5);
+        assert_eq!(mix64(0xDEAD_BEEF), 0x4E06_2702_EC92_9EEA);
+    }
+
+    #[test]
+    fn combine_golden() {
+        assert_eq!(combine(1, 2), 0xF282_6F98_653E_9E57);
+    }
+
+    #[test]
+    fn stream_golden() {
+        let mut s = SplitMix64::new(42);
+        assert_eq!(s.next_u64(), 0xBDD7_3226_2FEB_6E95);
+        assert_eq!(s.next_u64(), 0x28EF_E333_B266_F103);
+        assert_eq!(s.next_u64(), 0x4752_6757_130F_9F52);
+    }
+
+    #[test]
+    fn f32_golden() {
+        let mut s = SplitMix64::new(42);
+        let got: Vec<f32> = (0..4).map(|_| s.next_f32()).collect();
+        assert_eq!(
+            got,
+            vec![0.74156487, 0.15991038, 0.27860111, 0.34419066]
+        );
+    }
+
+    #[test]
+    fn f32_in_unit_interval() {
+        let mut s = SplitMix64::new(0xFFFF_FFFF_FFFF_FFFF);
+        for _ in 0..10_000 {
+            let v = s.next_f32();
+            assert!((0.0..1.0).contains(&v));
+        }
+    }
+
+    #[test]
+    fn distinct_seeds_distinct_streams() {
+        let mut a = SplitMix64::new(1);
+        let mut b = SplitMix64::new(2);
+        assert_ne!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn mix64_injective_sample() {
+        let mut seen = std::collections::HashSet::new();
+        for i in 0..10_000u64 {
+            assert!(seen.insert(mix64(i)));
+        }
+    }
+}

@@ -1,0 +1,155 @@
+//! DSET binary dataset reader/writer (mirror of `python/compile/data.py`
+//! `save_dataset`/`load_dataset`).
+//!
+//! Layout: magic "DSET" | u32 count,h,w,c | f32 images | i32 labels.
+
+use std::fs::File;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::synthetic::ImageShape;
+
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub shape: ImageShape,
+    pub count: usize,
+    /// row-major [count, h, w, c]
+    pub images: Vec<f32>,
+    pub labels: Vec<i32>,
+}
+
+impl Dataset {
+    pub fn image(&self, i: usize) -> &[f32] {
+        let n = self.shape.len();
+        &self.images[i * n..(i + 1) * n]
+    }
+
+    /// Concatenate images `lo..hi` into one contiguous batch buffer.
+    pub fn batch(&self, lo: usize, hi: usize) -> &[f32] {
+        let n = self.shape.len();
+        &self.images[lo * n..hi * n]
+    }
+
+    pub fn load(path: &Path) -> Result<Dataset> {
+        let mut r = BufReader::new(
+            File::open(path).with_context(|| format!("open {path:?}"))?,
+        );
+        let mut magic = [0u8; 4];
+        r.read_exact(&mut magic)?;
+        if &magic != b"DSET" {
+            bail!("bad DSET magic in {path:?}");
+        }
+        let count = read_u32(&mut r)? as usize;
+        let h = read_u32(&mut r)? as usize;
+        let w = read_u32(&mut r)? as usize;
+        let c = read_u32(&mut r)? as usize;
+        let shape = ImageShape { h, w, c };
+        let mut images = vec![0f32; count * shape.len()];
+        read_f32_into(&mut r, &mut images)?;
+        let mut labels = vec![0i32; count];
+        for l in labels.iter_mut() {
+            let mut b = [0u8; 4];
+            r.read_exact(&mut b)?;
+            *l = i32::from_le_bytes(b);
+        }
+        Ok(Dataset { shape, count, images, labels })
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut w = BufWriter::new(File::create(path)?);
+        w.write_all(b"DSET")?;
+        for v in [
+            self.count as u32,
+            self.shape.h as u32,
+            self.shape.w as u32,
+            self.shape.c as u32,
+        ] {
+            w.write_all(&v.to_le_bytes())?;
+        }
+        for v in &self.images {
+            w.write_all(&v.to_le_bytes())?;
+        }
+        for l in &self.labels {
+            w.write_all(&l.to_le_bytes())?;
+        }
+        Ok(())
+    }
+
+    /// Take the first `n` samples (used for calibration-size ablations).
+    pub fn take(&self, n: usize) -> Dataset {
+        let n = n.min(self.count);
+        Dataset {
+            shape: self.shape,
+            count: n,
+            images: self.images[..n * self.shape.len()].to_vec(),
+            labels: self.labels[..n].to_vec(),
+        }
+    }
+}
+
+fn read_u32<R: Read>(r: &mut R) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_f32_into<R: Read>(r: &mut R, out: &mut [f32]) -> Result<()> {
+    let mut buf = vec![0u8; out.len() * 4];
+    r.read_exact(&mut buf)?;
+    for (i, v) in out.iter_mut().enumerate() {
+        *v = f32::from_le_bytes(buf[i * 4..i * 4 + 4].try_into().unwrap());
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::synthetic::{generate, ImageShape};
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let shape = ImageShape { h: 4, w: 4, c: 3 };
+        let (images, labels) = generate(shape, 10, 2, 6);
+        let ds = Dataset { shape, count: 6, images, labels };
+        let dir = std::env::temp_dir().join("beacon_ptq_test_store");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("ds.bin");
+        ds.save(&p).unwrap();
+        let back = Dataset::load(&p).unwrap();
+        assert_eq!(back.count, 6);
+        assert_eq!(back.images, ds.images);
+        assert_eq!(back.labels, ds.labels);
+    }
+
+    #[test]
+    fn take_truncates() {
+        let shape = ImageShape { h: 2, w: 2, c: 1 };
+        let (images, labels) = generate(shape, 10, 2, 8);
+        let ds = Dataset { shape, count: 8, images, labels };
+        let t = ds.take(3);
+        assert_eq!(t.count, 3);
+        assert_eq!(t.images.len(), 3 * 4);
+        assert_eq!(t.images[..], ds.images[..12]);
+    }
+
+    #[test]
+    fn batch_slicing() {
+        let shape = ImageShape { h: 2, w: 2, c: 1 };
+        let (images, labels) = generate(shape, 10, 2, 5);
+        let ds = Dataset { shape, count: 5, images, labels };
+        assert_eq!(ds.batch(1, 3).len(), 2 * 4);
+        assert_eq!(ds.batch(1, 3)[0], ds.image(1)[0]);
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let dir = std::env::temp_dir().join("beacon_ptq_test_store2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("bad.bin");
+        std::fs::write(&p, b"NOPE____").unwrap();
+        assert!(Dataset::load(&p).is_err());
+    }
+}

@@ -1,0 +1,144 @@
+//! Synthetic 'structured blobs' dataset — exact mirror of
+//! `python/compile/data.py` (see DESIGN.md §7).
+//!
+//! Class templates are split-independent; a sample blends its class
+//! template with fresh noise (weak blend → FP ceiling ≈ 90%, giving
+//! low-bit quantization a visible cliff). Seeds: train=1, calib=2, eval=3.
+
+use super::rng::{combine, SplitMix64};
+
+pub const TEMPLATE_TAG: u64 = 0x7E3A_17E5;
+pub const SAMPLE_TAG: u64 = 0x5EED;
+
+pub const TRAIN_SEED: u64 = 1;
+pub const CALIB_SEED: u64 = 2;
+pub const EVAL_SEED: u64 = 3;
+
+#[derive(Debug, Clone, Copy)]
+pub struct ImageShape {
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+}
+
+impl ImageShape {
+    pub fn len(&self) -> usize {
+        self.h * self.w * self.c
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Deterministic per-class template (shared across all splits).
+pub fn class_template(shape: ImageShape, k: usize) -> Vec<f32> {
+    let mut rng = SplitMix64::new(combine(TEMPLATE_TAG, k as u64));
+    let mut out = vec![0f32; shape.len()];
+    rng.fill_f32(&mut out);
+    out
+}
+
+/// One sample: (image in [0,1], label). `templates` is the stacked output
+/// of [`class_template`] for k = 0..num_classes.
+pub fn sample(
+    shape: ImageShape,
+    seed: u64,
+    i: usize,
+    num_classes: usize,
+    templates: &[Vec<f32>],
+) -> (Vec<f32>, i32) {
+    let label = (i % num_classes) as i32;
+    let mut rng = SplitMix64::new(combine(combine(seed, SAMPLE_TAG), i as u64));
+    let alpha = 0.16 + 0.14 * rng.next_f32();
+    let brightness = (rng.next_f32() - 0.5) * 0.2;
+    let t = &templates[label as usize];
+    let mut img = vec![0f32; shape.len()];
+    // draw order matters: noise is a single contiguous fill, as in Python
+    let mut noise = vec![0f32; shape.len()];
+    rng.fill_f32(&mut noise);
+    for j in 0..shape.len() {
+        let v = alpha * t[j] + (1.0 - alpha) * noise[j] + brightness;
+        img[j] = v.clamp(0.0, 1.0);
+    }
+    (img, label)
+}
+
+/// Generate `count` samples of split `seed`.
+pub fn generate(
+    shape: ImageShape,
+    num_classes: usize,
+    seed: u64,
+    count: usize,
+) -> (Vec<f32>, Vec<i32>) {
+    let templates: Vec<Vec<f32>> =
+        (0..num_classes).map(|k| class_template(shape, k)).collect();
+    let mut images = Vec::with_capacity(count * shape.len());
+    let mut labels = Vec::with_capacity(count);
+    for i in 0..count {
+        let (img, label) = sample(shape, seed, i, num_classes, &templates);
+        images.extend_from_slice(&img);
+        labels.push(label);
+    }
+    (images, labels)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SHAPE: ImageShape = ImageShape { h: 16, w: 16, c: 3 };
+
+    #[test]
+    fn golden_matches_python() {
+        // duplicated in python/tests/test_rng_data.py::test_golden_sample
+        let (imgs, labels) = generate(SHAPE, 10, CALIB_SEED, 3);
+        let expect = [
+            0.5070157051086426,
+            0.16118144989013672,
+            0.40140822529792786,
+            0.29602834582328796,
+            0.2174665927886963,
+        ];
+        for (g, e) in imgs.iter().take(5).zip(expect.iter()) {
+            assert!((f64::from(*g) - e).abs() < 1e-7, "{g} vs {e}");
+        }
+        assert_eq!(labels, vec![0, 1, 2]);
+        let sum: f64 = imgs.iter().map(|v| f64::from(*v)).sum();
+        assert!((sum - 1109.60693359375).abs() < 1e-2, "sum {sum}");
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = generate(SHAPE, 10, 7, 4);
+        let b = generate(SHAPE, 10, 7, 4);
+        assert_eq!(a.0, b.0);
+        assert_eq!(a.1, b.1);
+    }
+
+    #[test]
+    fn templates_split_independent() {
+        assert_eq!(class_template(SHAPE, 2), class_template(SHAPE, 2));
+    }
+
+    #[test]
+    fn values_in_unit_interval() {
+        let (imgs, _) = generate(SHAPE, 10, 5, 8);
+        assert!(imgs.iter().all(|v| (0.0..=1.0).contains(v)));
+    }
+
+    #[test]
+    fn labels_round_robin() {
+        let (_, labels) = generate(SHAPE, 10, 5, 23);
+        for (i, l) in labels.iter().enumerate() {
+            assert_eq!(*l, (i % 10) as i32);
+        }
+    }
+
+    #[test]
+    fn splits_differ() {
+        let (a, _) = generate(SHAPE, 10, CALIB_SEED, 2);
+        let (b, _) = generate(SHAPE, 10, EVAL_SEED, 2);
+        assert_ne!(a, b);
+    }
+}

@@ -1,0 +1,41 @@
+//! # beacon-ptq
+//!
+//! A production-grade reproduction of **"Beacon: Post-Training Quantization
+//! with Integrated Grid Selection"** (Zhang & Saab, 2025) as a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! * **Layer 3 (this crate)** — the quantization *coordinator*: a layer-
+//!   sequential, channel-parallel PTQ pipeline with error-correction
+//!   recapture, centering, LayerNorm tuning, evaluation, baselines
+//!   (GPTQ / RTN / COMQ) and a native linear-algebra substrate.
+//! * **Layer 2 (python/compile, build time only)** — JAX ViT graphs lowered
+//!   AOT to HLO text artifacts executed here through PJRT.
+//! * **Layer 1 (python/compile/kernels, build time only)** — the Beacon
+//!   inner sweep as a Pallas kernel embedded in those artifacts.
+//!
+//! Python never runs at quantization/serving time: `artifacts/` is built
+//! once by `make artifacts` and the `beacon` binary is self-contained.
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use beacon_ptq::config::{QuantConfig, Method};
+//! use beacon_ptq::coordinator::Pipeline;
+//!
+//! let cfg = QuantConfig { bits: 2.0, ..QuantConfig::default() };
+//! let mut pipe = Pipeline::from_artifacts("artifacts", "tiny-sim").unwrap();
+//! let report = pipe.quantize(&cfg).unwrap();
+//! println!("top-1 after 2-bit Beacon: {:.2}%", 100.0 * report.top1);
+//! ```
+
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod linalg;
+pub mod model;
+pub mod quant;
+pub mod runtime;
+pub mod util;
+
+pub use config::{Method, QuantConfig};
+pub use coordinator::Pipeline;

@@ -1,0 +1,10 @@
+//! Native dense linear algebra substrate (f64): matrices, Householder QR,
+//! Cholesky, triangular utilities. Replaces LAPACK on the quantization
+//! path — the PJRT artifacts only carry model graphs, so factorizations
+//! stay in Rust and stay profileable.
+
+pub mod matrix;
+pub mod qr;
+
+pub use matrix::Matrix;
+pub use qr::{cholesky_lower, qr_factor, QrFactors};

@@ -1,0 +1,270 @@
+//! Householder QR (reduced) and Cholesky — the factorizations behind the
+//! paper's memory-efficient form (§3) and the GPTQ baseline.
+//!
+//! For Beacon with error correction we need, given X̃ = U·R and the FP
+//! calibration matrix X:  L = UᵀX and L̃ = R (both N×N). [`qr_factor`]
+//! computes the Householder reflectors of X̃ in place and applies Qᵀ to X,
+//! returning the two square factors without ever forming U (m×N) —
+//! exactly the memory saving the paper claims.
+
+use super::matrix::Matrix;
+
+#[derive(Debug, Clone)]
+pub struct QrFactors {
+    /// R (N×N upper triangular): the paper's L̃.
+    pub r: Matrix,
+    /// UᵀX (N×N): the paper's L. Equals R when `x` aliases `xt`.
+    pub l: Matrix,
+}
+
+/// Factor `xt = U R` (Householder, reduced) and return `L̃ = R`,
+/// `L = UᵀX`. `xt` and `x` must be m×N with m ≥ N.
+///
+/// Works on column-major copies so the reflector builds and applications
+/// stream contiguous memory (the row-major indexed version walked an
+/// m-stride per element and was ~8× slower at m = 2176 — §Perf).
+pub fn qr_factor(xt: &Matrix, x: &Matrix) -> QrFactors {
+    assert_eq!(xt.rows, x.rows, "X and X̃ must share sample count");
+    assert_eq!(xt.cols, x.cols, "X and X̃ must share width");
+    let (m, n) = (xt.rows, xt.cols);
+    assert!(m >= n, "QR requires m >= N (got {m} < {n})");
+
+    // column-major working copies; a -> R (upper part), b -> QᵀX
+    let mut a = xt.columns();
+    let same = std::ptr::eq(xt, x) || xt.data == x.data;
+    let mut b = if same { a.clone() } else { x.columns() };
+
+    let mut v = vec![0.0f64; m]; // Householder vector scratch
+
+    for k in 0..n {
+        // build reflector from column k, rows k..m (contiguous slice)
+        let colk = &a[k][k..];
+        let normx = crate::linalg::matrix::dot(colk, colk).sqrt();
+        if normx == 0.0 {
+            continue; // zero column: skip reflector (R gets a zero diag)
+        }
+        let alpha = if a[k][k] >= 0.0 { -normx } else { normx };
+        v[k..m].copy_from_slice(&a[k][k..]);
+        v[k] -= alpha;
+        let vk = &v[k..m];
+        let vnorm2 = crate::linalg::matrix::dot(vk, vk);
+        if vnorm2 == 0.0 {
+            continue;
+        }
+        let beta = 2.0 / vnorm2;
+
+        // apply (I - beta v vᵀ) to remaining columns of a
+        for col in a.iter_mut().skip(k) {
+            let tail = &mut col[k..];
+            let s = beta * crate::linalg::matrix::dot(vk, tail);
+            crate::linalg::matrix::axpy(-s, vk, tail);
+        }
+        // and to all columns of b (accumulating QᵀX)
+        for col in b.iter_mut() {
+            let tail = &mut col[k..];
+            let s = beta * crate::linalg::matrix::dot(vk, tail);
+            crate::linalg::matrix::axpy(-s, vk, tail);
+        }
+    }
+
+    // R = upper triangle of a's first n rows; L = first n rows of b
+    let mut r = Matrix::zeros(n, n);
+    let mut l = Matrix::zeros(n, n);
+    for j in 0..n {
+        for i in 0..n {
+            if j >= i {
+                r[(i, j)] = a[j][i];
+            }
+            l[(i, j)] = b[j][i];
+        }
+    }
+    QrFactors { r, l }
+}
+
+/// Lower Cholesky factor L with `a = L Lᵀ`. Panics if `a` is not positive
+/// definite (callers damp their Hessians first).
+pub fn cholesky_lower(a: &Matrix) -> Matrix {
+    assert_eq!(a.rows, a.cols);
+    let n = a.rows;
+    let mut l = Matrix::zeros(n, n);
+    for i in 0..n {
+        for j in 0..=i {
+            let mut s = a[(i, j)];
+            for k in 0..j {
+                s -= l[(i, k)] * l[(j, k)];
+            }
+            if i == j {
+                assert!(
+                    s > 0.0,
+                    "matrix not positive definite at pivot {i} (s = {s})"
+                );
+                l[(i, j)] = s.sqrt();
+            } else {
+                l[(i, j)] = s / l[(j, j)];
+            }
+        }
+    }
+    l
+}
+
+/// Invert a lower-triangular matrix by forward substitution.
+pub fn invert_lower(l: &Matrix) -> Matrix {
+    let n = l.rows;
+    let mut inv = Matrix::zeros(n, n);
+    for j in 0..n {
+        inv[(j, j)] = 1.0 / l[(j, j)];
+        for i in j + 1..n {
+            let mut s = 0.0;
+            for k in j..i {
+                s += l[(i, k)] * inv[(k, j)];
+            }
+            inv[(i, j)] = -s / l[(i, i)];
+        }
+    }
+    inv
+}
+
+/// Symmetric positive-definite inverse via Cholesky: a⁻¹ = L⁻ᵀ L⁻¹.
+pub fn spd_inverse(a: &Matrix) -> Matrix {
+    let l = cholesky_lower(a);
+    let linv = invert_lower(&l);
+    linv.transpose().matmul(&linv)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{prop_check, Gen};
+
+    fn random_tall(g: &mut Gen, m: usize, n: usize) -> Matrix {
+        Matrix::from_vec(m, n, g.vec_normal(m * n, 1.0))
+    }
+
+    #[test]
+    fn qr_reconstructs_norms() {
+        // rotation invariance: ||R w|| == ||X w|| for any w
+        prop_check(20, |g| {
+            let (m, n) = (24, 6);
+            let x = random_tall(g, m, n);
+            let f = qr_factor(&x, &x);
+            let w = g.vec_normal(n, 1.0);
+            let xw = x.matvec(&w);
+            let rw = f.r.matvec(&w);
+            let a: f64 = xw.iter().map(|v| v * v).sum::<f64>().sqrt();
+            let b: f64 = rw.iter().map(|v| v * v).sum::<f64>().sqrt();
+            if (a - b).abs() > 1e-8 * a.max(1.0) {
+                return Err(format!("norms differ: {a} vs {b}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn qr_r_upper_triangular() {
+        let mut g = Gen { rng: crate::data::rng::SplitMix64::new(3) };
+        let x = random_tall(&mut g, 20, 5);
+        let f = qr_factor(&x, &x);
+        for i in 0..5 {
+            for j in 0..i {
+                assert_eq!(f.r[(i, j)], 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn qr_inner_products_preserved() {
+        // ⟨Xw, Xq⟩ == ⟨Rw, Rq⟩ — the identity Beacon's reduction rests on
+        prop_check(20, |g| {
+            let (m, n) = (32, 8);
+            let x = random_tall(g, m, n);
+            let f = qr_factor(&x, &x);
+            let w = g.vec_normal(n, 1.0);
+            let q = g.vec_normal(n, 1.0);
+            let lhs = crate::linalg::matrix::dot(&x.matvec(&w), &x.matvec(&q));
+            let rhs = crate::linalg::matrix::dot(&f.r.matvec(&w), &f.r.matvec(&q));
+            if (lhs - rhs).abs() > 1e-7 * lhs.abs().max(1.0) {
+                return Err(format!("{lhs} vs {rhs}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn qr_ec_identity() {
+        // ⟨Xw, X̃q⟩ == ⟨Lw, Rq⟩ with L = UᵀX (eq. 5 of the paper)
+        prop_check(20, |g| {
+            let (m, n) = (32, 6);
+            let xt = random_tall(g, m, n);
+            let mut x = xt.clone();
+            for v in x.data.iter_mut() {
+                *v += 0.05 * g.normal();
+            }
+            let f = qr_factor(&xt, &x);
+            let w = g.vec_normal(n, 1.0);
+            let q = g.vec_normal(n, 1.0);
+            let lhs = crate::linalg::matrix::dot(&x.matvec(&w), &xt.matvec(&q));
+            let rhs = crate::linalg::matrix::dot(&f.l.matvec(&w), &f.r.matvec(&q));
+            if (lhs - rhs).abs() > 1e-7 * lhs.abs().max(1.0) {
+                return Err(format!("{lhs} vs {rhs}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn cholesky_roundtrip() {
+        prop_check(20, |g| {
+            let n = 6;
+            let b = random_tall(g, 12, n);
+            let mut a = b.gram();
+            for i in 0..n {
+                a[(i, i)] += 0.5; // damp to SPD
+            }
+            let l = cholesky_lower(&a);
+            let back = l.matmul(&l.transpose());
+            if a.sub(&back).frob_norm() > 1e-8 * a.frob_norm() {
+                return Err("LL^T != A".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn spd_inverse_correct() {
+        prop_check(10, |g| {
+            let n = 5;
+            let b = random_tall(g, 15, n);
+            let mut a = b.gram();
+            for i in 0..n {
+                a[(i, i)] += 1.0;
+            }
+            let inv = spd_inverse(&a);
+            let ident = a.matmul(&inv);
+            if ident.sub(&Matrix::eye(n)).frob_norm() > 1e-7 {
+                return Err("A * A^-1 != I".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn invert_lower_correct() {
+        let mut g = Gen { rng: crate::data::rng::SplitMix64::new(5) };
+        let b = random_tall(&mut g, 12, 4);
+        let mut a = b.gram();
+        for i in 0..4 {
+            a[(i, i)] += 1.0;
+        }
+        let l = cholesky_lower(&a);
+        let li = invert_lower(&l);
+        let ident = l.matmul(&li);
+        assert!(ident.sub(&Matrix::eye(4)).frob_norm() < 1e-9);
+    }
+
+    #[test]
+    #[should_panic(expected = "positive definite")]
+    fn cholesky_rejects_indefinite() {
+        let a = Matrix::from_rows(&[&[1.0, 2.0], &[2.0, 1.0]]);
+        cholesky_lower(&a);
+    }
+}

@@ -1,0 +1,170 @@
+//! `beacon` — the leader CLI for the Beacon PTQ stack.
+//!
+//! Subcommands:
+//!   info                       artifact + model summary
+//!   quantize [flags]           run one PTQ configuration, report top-1
+//!   eval                       evaluate the FP model
+//!   table1 / table2            regenerate the paper's tables
+//!   convergence                F1: objective vs sweep count
+//!   ablate-calib / ablate-ec   ablations A1 / A2
+//!   runtime-row                Table 1 runtime row (× GPTQ)
+//!
+//! Common flags: --artifacts DIR (default `artifacts`), --model NAME
+//! (default `tiny-sim`), --backend pjrt|native, --config FILE, plus any
+//! QuantConfig key (--bits 2 --loops 4 --ec --centering --ln_tune ...).
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Result};
+
+use beacon_ptq::config::QuantConfig;
+use beacon_ptq::coordinator::experiments;
+use beacon_ptq::coordinator::report::pct;
+use beacon_ptq::coordinator::{KernelBackend, Pipeline};
+use beacon_ptq::quant::alphabet::BitWidth;
+use beacon_ptq::util::cli::Args;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn pipeline(args: &Args) -> Result<Pipeline> {
+    let dir = PathBuf::from(args.str("artifacts", "artifacts"));
+    let model = args.str("model", "tiny-sim");
+    let mut pipe = Pipeline::from_artifacts(&dir, &model)?;
+    pipe.backend = match args.str("backend", "pjrt").as_str() {
+        "pjrt" => KernelBackend::Pjrt,
+        "native" => KernelBackend::Native,
+        other => bail!("unknown backend '{other}' (pjrt|native)"),
+    };
+    Ok(pipe)
+}
+
+fn quant_config(args: &Args) -> Result<QuantConfig> {
+    let mut qc = match args.get("config") {
+        Some(path) => QuantConfig::from_file(std::path::Path::new(path))?,
+        None => QuantConfig::default(),
+    };
+    qc.apply_flags(&args.flags, &args.switches)?;
+    Ok(qc)
+}
+
+/// Default Table-1 grid: (bit width, K) as in the paper.
+fn table_bits() -> Vec<(BitWidth, usize)> {
+    vec![
+        (BitWidth::B158, 6),
+        (BitWidth::B2, 4),
+        (BitWidth::B258, 4),
+        (BitWidth::B3, 6),
+        (BitWidth::B4, 4),
+    ]
+}
+
+fn run() -> Result<()> {
+    let args = Args::from_env();
+    let sub = args.subcommand.clone().unwrap_or_else(|| "help".into());
+    match sub.as_str() {
+        "help" => {
+            println!("{}", HELP);
+            Ok(())
+        }
+        "info" => {
+            let pipe = pipeline(&args)?;
+            let m = &pipe.artifacts.manifest;
+            println!("model        : {}", m.cfg.name);
+            println!("params       : {}", m.cfg.param_count());
+            println!("depth/d_model: {}/{}", m.cfg.depth, m.cfg.d_model);
+            println!("quantizable  : {} layers", m.quantizable.len());
+            println!("calib/eval   : {}/{} images", m.calib_count, m.eval_count);
+            println!("platform     : {}", pipe.runtime.platform());
+            println!("beacon HLO   : {:?}", m.beacon_layer.keys().collect::<Vec<_>>());
+            Ok(())
+        }
+        "eval" => {
+            let mut pipe = pipeline(&args)?;
+            let top1 = pipe.fp_top1()?;
+            println!("FP top-1: {}%", pct(top1));
+            Ok(())
+        }
+        "quantize" => {
+            let mut pipe = pipeline(&args)?;
+            let qc = quant_config(&args)?;
+            println!("running {} (backend {:?})...", qc.label(), pipe.backend);
+            let report = pipe.quantize(&qc)?;
+            println!("FP top-1     : {}%", pct(report.fp_top1));
+            println!("quant top-1  : {}%", pct(report.top1));
+            println!("accuracy drop: {:.2}%", report.accuracy_drop());
+            println!("quantize time: {:.2}s  eval time: {:.2}s",
+                report.quantize_secs, report.eval_secs);
+            if args.switch("verbose") {
+                println!("\nper-layer relative recon error:");
+                for (name, e) in &report.layer_errors {
+                    println!("  {name:<22} {e:.4}");
+                }
+                if !report.ln_tune_losses.is_empty() {
+                    println!("ln-tune loss: {:?}", report.ln_tune_losses);
+                }
+            }
+            if let Some(out) = args.get("save") {
+                let (_, store) = pipe.quantize_with_weights(&qc)?;
+                store.save(std::path::Path::new(out))?;
+                println!("saved quantized weights to {out}");
+            }
+            Ok(())
+        }
+        "table1" => {
+            let mut pipe = pipeline(&args)?;
+            let (table, _) = experiments::table1(&mut pipe, &table_bits())?;
+            println!("{}", table.render());
+            Ok(())
+        }
+        "table2" => {
+            let mut pipe = pipeline(&args)?;
+            let grid = vec![
+                (BitWidth::B2, 4usize),
+                (BitWidth::B3, 6),
+                (BitWidth::B4, 4),
+            ];
+            let (table, _) = experiments::table2(&mut pipe, &grid)?;
+            println!("{}", table.render());
+            Ok(())
+        }
+        "convergence" => {
+            let mut pipe = pipeline(&args)?;
+            let table = experiments::convergence(&mut pipe, args.usize("max-loops", 8))?;
+            println!("{}", table.render());
+            Ok(())
+        }
+        "ablate-calib" => {
+            let mut pipe = pipeline(&args)?;
+            let sizes = [8, 16, 32, 64, 128];
+            let table = experiments::ablate_calib(&mut pipe, &sizes)?;
+            println!("{}", table.render());
+            Ok(())
+        }
+        "ablate-ec" => {
+            let mut pipe = pipeline(&args)?;
+            let bits = BitWidth::parse(&args.str("bits", "2")).unwrap();
+            let table = experiments::ablate_ec(&mut pipe, bits)?;
+            println!("{}", table.render());
+            Ok(())
+        }
+        "runtime-row" => {
+            let mut pipe = pipeline(&args)?;
+            let bits = BitWidth::parse(&args.str("bits", "2")).unwrap();
+            let table = experiments::runtime_row(&mut pipe, bits, args.usize("loops", 4))?;
+            println!("{}", table.render());
+            Ok(())
+        }
+        other => bail!("unknown subcommand '{other}'\n{HELP}"),
+    }
+}
+
+const HELP: &str = "beacon — Beacon PTQ coordinator
+usage: beacon <info|eval|quantize|table1|table2|convergence|ablate-calib|ablate-ec|runtime-row> [flags]
+flags: --artifacts DIR --model NAME --backend pjrt|native --config FILE
+       --method beacon|gptq|rtn|comq --bits B --loops K --ec --centering
+       --ln_tune --save OUT.bin --verbose";

@@ -1,0 +1,9 @@
+//! Model substrate: the ViT architecture description mirrored from
+//! `python/compile/common.py` (the parameter-ordering ABI with the AOT
+//! artifacts) and the WTS1 tensor-bundle store.
+
+pub mod spec;
+pub mod store;
+
+pub use spec::{ln_param_names, param_spec, quantizable_layers, ParamSpec, ViTConfig};
+pub use store::{TensorBundle, WeightStore};

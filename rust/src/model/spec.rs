@@ -1,0 +1,193 @@
+//! ViT architecture description — EXACT mirror of
+//! `python/compile/common.py` (`ViTConfig`, `param_spec`,
+//! `quantizable_layers`, `ln_param_names`). The flat parameter order is
+//! the ABI between this coordinator and the AOT HLO artifacts; a mismatch
+//! is caught by `python/tests` + the manifest cross-check in
+//! [`crate::runtime::Artifacts`].
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct ViTConfig {
+    pub name: String,
+    pub image: usize,
+    pub channels: usize,
+    pub patch: usize,
+    pub d_model: usize,
+    pub depth: usize,
+    pub heads: usize,
+    pub mlp_ratio: usize,
+    pub num_classes: usize,
+}
+
+impl ViTConfig {
+    pub fn tiny_sim() -> ViTConfig {
+        ViTConfig {
+            name: "tiny-sim".into(),
+            image: 16,
+            channels: 3,
+            patch: 4,
+            d_model: 64,
+            depth: 4,
+            heads: 4,
+            mlp_ratio: 2,
+            num_classes: 10,
+        }
+    }
+
+    pub fn deit_b() -> ViTConfig {
+        ViTConfig {
+            name: "deit-b".into(),
+            image: 224,
+            channels: 3,
+            patch: 16,
+            d_model: 768,
+            depth: 12,
+            heads: 12,
+            mlp_ratio: 4,
+            num_classes: 1000,
+        }
+    }
+
+    pub fn tokens(&self) -> usize {
+        (self.image / self.patch) * (self.image / self.patch) + 1
+    }
+
+    pub fn patch_dim(&self) -> usize {
+        self.patch * self.patch * self.channels
+    }
+
+    pub fn d_mlp(&self) -> usize {
+        self.d_model * self.mlp_ratio
+    }
+
+    pub fn param_count(&self) -> usize {
+        param_spec(self).iter().map(|p| p.shape.iter().product::<usize>()).sum()
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+/// Flat (name, shape) list — THE ordering contract with L2.
+pub fn param_spec(cfg: &ViTConfig) -> Vec<ParamSpec> {
+    let d = cfg.d_model;
+    let f = cfg.d_mlp();
+    let p = cfg.patch_dim();
+    let mut spec = vec![
+        ps("patch_embed.w", &[p, d]),
+        ps("patch_embed.b", &[d]),
+        ps("cls_token", &[1, d]),
+        ps("pos_embed", &[cfg.tokens(), d]),
+    ];
+    for i in 0..cfg.depth {
+        let pre = format!("blocks.{i}.");
+        spec.push(ps(&format!("{pre}ln1.g"), &[d]));
+        spec.push(ps(&format!("{pre}ln1.b"), &[d]));
+        spec.push(ps(&format!("{pre}qkv.w"), &[d, 3 * d]));
+        spec.push(ps(&format!("{pre}qkv.b"), &[3 * d]));
+        spec.push(ps(&format!("{pre}proj.w"), &[d, d]));
+        spec.push(ps(&format!("{pre}proj.b"), &[d]));
+        spec.push(ps(&format!("{pre}ln2.g"), &[d]));
+        spec.push(ps(&format!("{pre}ln2.b"), &[d]));
+        spec.push(ps(&format!("{pre}fc1.w"), &[d, f]));
+        spec.push(ps(&format!("{pre}fc1.b"), &[f]));
+        spec.push(ps(&format!("{pre}fc2.w"), &[f, d]));
+        spec.push(ps(&format!("{pre}fc2.b"), &[d]));
+    }
+    spec.push(ps("ln_f.g", &[d]));
+    spec.push(ps("ln_f.b", &[d]));
+    spec.push(ps("head.w", &[d, cfg.num_classes]));
+    spec.push(ps("head.b", &[cfg.num_classes]));
+    spec
+}
+
+fn ps(name: &str, shape: &[usize]) -> ParamSpec {
+    ParamSpec { name: name.to_string(), shape: shape.to_vec() }
+}
+
+/// Weight matrices Beacon quantizes, in pipeline (activation-collection)
+/// order. Patch embed + head stay FP by default.
+pub fn quantizable_layers(cfg: &ViTConfig) -> Vec<String> {
+    let mut out = Vec::new();
+    for i in 0..cfg.depth {
+        out.push(format!("blocks.{i}.qkv.w"));
+        out.push(format!("blocks.{i}.proj.w"));
+        out.push(format!("blocks.{i}.fc1.w"));
+        out.push(format!("blocks.{i}.fc2.w"));
+    }
+    out
+}
+
+/// LayerNorm parameters tuned by the optional LN pass.
+pub fn ln_param_names(cfg: &ViTConfig) -> Vec<String> {
+    let mut out = Vec::new();
+    for i in 0..cfg.depth {
+        out.push(format!("blocks.{i}.ln1.g"));
+        out.push(format!("blocks.{i}.ln1.b"));
+        out.push(format!("blocks.{i}.ln2.g"));
+        out.push(format!("blocks.{i}.ln2.b"));
+    }
+    out.push("ln_f.g".into());
+    out.push("ln_f.b".into());
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_count_matches_python() {
+        let cfg = ViTConfig::tiny_sim();
+        assert_eq!(param_spec(&cfg).len(), 4 + 12 * cfg.depth + 4);
+    }
+
+    #[test]
+    fn tiny_sim_shapes() {
+        let cfg = ViTConfig::tiny_sim();
+        let spec = param_spec(&cfg);
+        assert_eq!(spec[0].shape, vec![48, 64]); // patch_embed.w
+        assert_eq!(spec[3].shape, vec![17, 64]); // pos_embed (16 patches + cls)
+        let qkv = spec.iter().find(|p| p.name == "blocks.0.qkv.w").unwrap();
+        assert_eq!(qkv.shape, vec![64, 192]);
+        let fc1 = spec.iter().find(|p| p.name == "blocks.2.fc1.w").unwrap();
+        assert_eq!(fc1.shape, vec![64, 128]);
+    }
+
+    #[test]
+    fn quantizable_are_matrices_in_spec() {
+        let cfg = ViTConfig::tiny_sim();
+        let spec = param_spec(&cfg);
+        for name in quantizable_layers(&cfg) {
+            let p = spec.iter().find(|p| p.name == name).unwrap();
+            assert_eq!(p.shape.len(), 2, "{name}");
+        }
+    }
+
+    #[test]
+    fn ln_names_in_spec() {
+        let cfg = ViTConfig::tiny_sim();
+        let names: Vec<String> =
+            param_spec(&cfg).iter().map(|p| p.name.clone()).collect();
+        for n in ln_param_names(&cfg) {
+            assert!(names.contains(&n), "{n}");
+        }
+    }
+
+    #[test]
+    fn deit_b_param_count() {
+        // DeiT-B is ~86M parameters; our mirror must land in that range
+        let n = ViTConfig::deit_b().param_count();
+        assert!((80_000_000..95_000_000).contains(&n), "{n}");
+    }
+
+    #[test]
+    fn tokens_and_dims() {
+        let cfg = ViTConfig::tiny_sim();
+        assert_eq!(cfg.tokens(), 17);
+        assert_eq!(cfg.patch_dim(), 48);
+        assert_eq!(cfg.d_mlp(), 128);
+    }
+}

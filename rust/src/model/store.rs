@@ -1,0 +1,281 @@
+//! WTS1 tensor-bundle reader/writer (mirror of `python/compile/io.py`) and
+//! the mutable [`WeightStore`] the pipeline quantizes in place.
+
+use std::collections::BTreeMap;
+use std::fs::File;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::spec::{param_spec, ViTConfig};
+use crate::linalg::Matrix;
+
+#[derive(Debug, Clone)]
+pub struct Tensor {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    /// View a rank-2 tensor as an f64 Matrix.
+    pub fn to_matrix(&self) -> Matrix {
+        assert_eq!(self.shape.len(), 2, "{} is not rank-2", self.name);
+        Matrix::from_f32(self.shape[0], self.shape[1], &self.data)
+    }
+
+    pub fn from_matrix(name: &str, m: &Matrix) -> Tensor {
+        Tensor {
+            name: name.to_string(),
+            shape: vec![m.rows, m.cols],
+            data: m.to_f32(),
+        }
+    }
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct TensorBundle {
+    pub tensors: Vec<Tensor>,
+}
+
+impl TensorBundle {
+    pub fn load(path: &Path) -> Result<TensorBundle> {
+        let mut r = BufReader::new(
+            File::open(path).with_context(|| format!("open {path:?}"))?,
+        );
+        let mut magic = [0u8; 4];
+        r.read_exact(&mut magic)?;
+        if &magic != b"WTS1" {
+            bail!("bad WTS1 magic in {path:?}");
+        }
+        let n = read_u32(&mut r)? as usize;
+        let mut tensors = Vec::with_capacity(n);
+        for _ in 0..n {
+            let name_len = read_u32(&mut r)? as usize;
+            let mut name = vec![0u8; name_len];
+            r.read_exact(&mut name)?;
+            let ndim = read_u32(&mut r)? as usize;
+            let mut shape = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                shape.push(read_u32(&mut r)? as usize);
+            }
+            let numel: usize = shape.iter().product::<usize>().max(1);
+            let mut buf = vec![0u8; numel * 4];
+            r.read_exact(&mut buf)?;
+            let data: Vec<f32> = buf
+                .chunks_exact(4)
+                .map(|b| f32::from_le_bytes(b.try_into().unwrap()))
+                .collect();
+            tensors.push(Tensor {
+                name: String::from_utf8(name)?,
+                shape,
+                data,
+            });
+        }
+        Ok(TensorBundle { tensors })
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut w = BufWriter::new(File::create(path)?);
+        w.write_all(b"WTS1")?;
+        w.write_all(&(self.tensors.len() as u32).to_le_bytes())?;
+        for t in &self.tensors {
+            w.write_all(&(t.name.len() as u32).to_le_bytes())?;
+            w.write_all(t.name.as_bytes())?;
+            w.write_all(&(t.shape.len() as u32).to_le_bytes())?;
+            for d in &t.shape {
+                w.write_all(&(*d as u32).to_le_bytes())?;
+            }
+            for v in &t.data {
+                w.write_all(&v.to_le_bytes())?;
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Named, ordered parameter set for one model; quantization mutates it in
+/// place and the runtime feeds it to executables in spec order.
+#[derive(Debug, Clone)]
+pub struct WeightStore {
+    pub cfg: ViTConfig,
+    order: Vec<String>,
+    tensors: BTreeMap<String, Tensor>,
+}
+
+impl WeightStore {
+    /// Load and validate against the config's parameter spec.
+    pub fn load(path: &Path, cfg: &ViTConfig) -> Result<WeightStore> {
+        let bundle = TensorBundle::load(path)?;
+        let spec = param_spec(cfg);
+        if bundle.tensors.len() != spec.len() {
+            bail!(
+                "weight bundle has {} tensors, spec wants {}",
+                bundle.tensors.len(),
+                spec.len()
+            );
+        }
+        let mut tensors = BTreeMap::new();
+        let mut order = Vec::with_capacity(spec.len());
+        for (t, s) in bundle.tensors.into_iter().zip(&spec) {
+            if t.name != s.name {
+                bail!("param order mismatch: got '{}', want '{}'", t.name, s.name);
+            }
+            if t.shape != s.shape {
+                bail!(
+                    "param '{}' shape {:?} != spec {:?}",
+                    t.name,
+                    t.shape,
+                    s.shape
+                );
+            }
+            order.push(t.name.clone());
+            tensors.insert(t.name.clone(), t);
+        }
+        Ok(WeightStore { cfg: cfg.clone(), order, tensors })
+    }
+
+    pub fn get(&self, name: &str) -> &Tensor {
+        self.tensors
+            .get(name)
+            .unwrap_or_else(|| panic!("unknown param '{name}'"))
+    }
+
+    pub fn matrix(&self, name: &str) -> Matrix {
+        self.get(name).to_matrix()
+    }
+
+    pub fn set_matrix(&mut self, name: &str, m: &Matrix) {
+        let t = self
+            .tensors
+            .get_mut(name)
+            .unwrap_or_else(|| panic!("unknown param '{name}'"));
+        assert_eq!(t.shape, vec![m.rows, m.cols], "{name} shape mismatch");
+        t.data = m.to_f32();
+    }
+
+    pub fn set_data(&mut self, name: &str, data: Vec<f32>) {
+        let t = self
+            .tensors
+            .get_mut(name)
+            .unwrap_or_else(|| panic!("unknown param '{name}'"));
+        assert_eq!(t.numel(), data.len(), "{name} numel mismatch");
+        t.data = data;
+    }
+
+    /// Tensors in spec order (the executable input order).
+    pub fn ordered(&self) -> Vec<&Tensor> {
+        self.order.iter().map(|n| &self.tensors[n]).collect()
+    }
+
+    pub fn names(&self) -> &[String] {
+        &self.order
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let bundle = TensorBundle {
+            tensors: self.ordered().into_iter().cloned().collect(),
+        };
+        bundle.save(path)
+    }
+}
+
+fn read_u32<R: Read>(r: &mut R) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("beacon_ptq_store_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    fn dummy_store(cfg: &ViTConfig) -> WeightStore {
+        let spec = param_spec(cfg);
+        let tensors: Vec<Tensor> = spec
+            .iter()
+            .enumerate()
+            .map(|(i, s)| Tensor {
+                name: s.name.clone(),
+                shape: s.shape.clone(),
+                data: vec![i as f32 * 0.01; s.shape.iter().product()],
+            })
+            .collect();
+        let p = tmp("dummy.bin");
+        TensorBundle { tensors }.save(&p).unwrap();
+        WeightStore::load(&p, cfg).unwrap()
+    }
+
+    #[test]
+    fn bundle_roundtrip() {
+        let b = TensorBundle {
+            tensors: vec![
+                Tensor { name: "a".into(), shape: vec![2, 3], data: vec![1.0; 6] },
+                Tensor { name: "b".into(), shape: vec![4], data: vec![2.0; 4] },
+            ],
+        };
+        let p = tmp("rt.bin");
+        b.save(&p).unwrap();
+        let back = TensorBundle::load(&p).unwrap();
+        assert_eq!(back.tensors.len(), 2);
+        assert_eq!(back.tensors[0].shape, vec![2, 3]);
+        assert_eq!(back.tensors[1].data, vec![2.0; 4]);
+    }
+
+    #[test]
+    fn store_validates_and_orders() {
+        let cfg = ViTConfig::tiny_sim();
+        let store = dummy_store(&cfg);
+        let ordered = store.ordered();
+        let spec = param_spec(&cfg);
+        for (t, s) in ordered.iter().zip(&spec) {
+            assert_eq!(t.name, s.name);
+        }
+    }
+
+    #[test]
+    fn store_mutation() {
+        let cfg = ViTConfig::tiny_sim();
+        let mut store = dummy_store(&cfg);
+        let m = Matrix::zeros(64, 192);
+        store.set_matrix("blocks.0.qkv.w", &m);
+        assert!(store.get("blocks.0.qkv.w").data.iter().all(|v| *v == 0.0));
+    }
+
+    #[test]
+    fn store_rejects_wrong_order() {
+        let cfg = ViTConfig::tiny_sim();
+        let spec = param_spec(&cfg);
+        let mut tensors: Vec<Tensor> = spec
+            .iter()
+            .map(|s| Tensor {
+                name: s.name.clone(),
+                shape: s.shape.clone(),
+                data: vec![0.0; s.shape.iter().product()],
+            })
+            .collect();
+        tensors.swap(0, 1);
+        let p = tmp("bad_order.bin");
+        TensorBundle { tensors }.save(&p).unwrap();
+        assert!(WeightStore::load(&p, &cfg).is_err());
+    }
+
+    #[test]
+    #[should_panic(expected = "shape mismatch")]
+    fn set_matrix_checks_shape() {
+        let cfg = ViTConfig::tiny_sim();
+        let mut store = dummy_store(&cfg);
+        store.set_matrix("blocks.0.qkv.w", &Matrix::zeros(2, 2));
+    }
+}

@@ -1,0 +1,136 @@
+//! Quantization grids (paper §1): the unscaled symmetric mid-rise alphabet
+//! A_b used by Beacon, the ternary "1.58-bit" and 6-level "2.58-bit"
+//! grids, and the level counts for the asymmetric min-max baselines.
+//! Mirror of `python/compile/common.py::alphabet`.
+
+/// Supported bit widths. Fractional widths name non-power-of-two level
+/// counts: 1.58 = log2(3), 2.58 = log2(6).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BitWidth(pub f64);
+
+impl BitWidth {
+    pub const B158: BitWidth = BitWidth(1.58);
+    pub const B2: BitWidth = BitWidth(2.0);
+    pub const B258: BitWidth = BitWidth(2.58);
+    pub const B3: BitWidth = BitWidth(3.0);
+    pub const B4: BitWidth = BitWidth(4.0);
+
+    pub const ALL: [BitWidth; 5] = [
+        Self::B158,
+        Self::B2,
+        Self::B258,
+        Self::B3,
+        Self::B4,
+    ];
+
+    pub fn parse(s: &str) -> Option<BitWidth> {
+        let v: f64 = s.parse().ok()?;
+        let known = [1.58, 2.0, 2.58, 3.0, 4.0, 5.0, 6.0, 8.0];
+        known
+            .iter()
+            .find(|k| (**k - v).abs() < 1e-9)
+            .map(|k| BitWidth(*k))
+    }
+
+    pub fn label(&self) -> String {
+        if (self.0 - self.0.round()).abs() < 1e-9 {
+            format!("{}-bit", self.0 as i64)
+        } else {
+            format!("{}-bit", self.0)
+        }
+    }
+
+    /// Storage bits per weight after packing (ceil of the nominal width).
+    pub fn storage_bits(&self) -> u32 {
+        self.0.ceil() as u32
+    }
+}
+
+/// Number of grid levels for width `b`.
+pub fn levels(b: BitWidth) -> usize {
+    let hundredths = (b.0 * 100.0).round() as i64;
+    match hundredths {
+        158 => 3,
+        258 => 6,
+        _ => 1usize << (b.0.round() as u32),
+    }
+}
+
+/// The unscaled symmetric alphabet A (ascending). Integer b ≥ 2 gives the
+/// mid-rise grid {−2^{b−1}+0.5, …, −0.5, 0.5, …, 2^{b−1}−0.5}; 1.58-bit is
+/// ternary {−1, 0, 1}; 2.58-bit is the 6-level half-integer grid.
+pub fn alphabet(b: BitWidth) -> Vec<f64> {
+    let hundredths = (b.0 * 100.0).round() as i64;
+    match hundredths {
+        158 => vec![-1.0, 0.0, 1.0],
+        258 => vec![-2.5, -1.5, -0.5, 0.5, 1.5, 2.5],
+        _ => {
+            let bb = b.0.round() as u32;
+            assert!(bb >= 1, "unsupported bit width {}", b.0);
+            let half = 1i64 << (bb - 1);
+            (0..2 * half)
+                .map(|k| (-half as f64 + 0.5) + k as f64)
+                .collect()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grids_match_python() {
+        assert_eq!(alphabet(BitWidth::B158), vec![-1.0, 0.0, 1.0]);
+        assert_eq!(alphabet(BitWidth::B2), vec![-1.5, -0.5, 0.5, 1.5]);
+        assert_eq!(
+            alphabet(BitWidth::B258),
+            vec![-2.5, -1.5, -0.5, 0.5, 1.5, 2.5]
+        );
+        assert_eq!(alphabet(BitWidth::B3).len(), 8);
+        assert_eq!(alphabet(BitWidth::B4).len(), 16);
+    }
+
+    #[test]
+    fn grids_symmetric() {
+        for b in BitWidth::ALL {
+            let a = alphabet(b);
+            let mut neg: Vec<f64> = a.iter().map(|v| -v).collect();
+            neg.sort_by(|x, y| x.partial_cmp(y).unwrap());
+            assert_eq!(a, neg, "{b:?}");
+        }
+    }
+
+    #[test]
+    fn grids_ascending() {
+        for b in BitWidth::ALL {
+            let a = alphabet(b);
+            assert!(a.windows(2).all(|w| w[0] < w[1]));
+        }
+    }
+
+    #[test]
+    fn level_counts() {
+        assert_eq!(levels(BitWidth::B158), 3);
+        assert_eq!(levels(BitWidth::B2), 4);
+        assert_eq!(levels(BitWidth::B258), 6);
+        assert_eq!(levels(BitWidth::B3), 8);
+        assert_eq!(levels(BitWidth::B4), 16);
+    }
+
+    #[test]
+    fn parse_and_label() {
+        assert_eq!(BitWidth::parse("2").unwrap().0, 2.0);
+        assert_eq!(BitWidth::parse("1.58").unwrap().0, 1.58);
+        assert!(BitWidth::parse("7.3").is_none());
+        assert_eq!(BitWidth::B2.label(), "2-bit");
+        assert_eq!(BitWidth::B158.label(), "1.58-bit");
+    }
+
+    #[test]
+    fn storage_bits_ceil() {
+        assert_eq!(BitWidth::B158.storage_bits(), 2);
+        assert_eq!(BitWidth::B258.storage_bits(), 3);
+        assert_eq!(BitWidth::B4.storage_bits(), 4);
+    }
+}

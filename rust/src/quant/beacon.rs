@@ -1,0 +1,474 @@
+//! Beacon (Algorithm 1): per-channel PTQ on the unscaled symmetric grid
+//! with the scale recovered *after* quantization from the geometry of the
+//! problem — `c = ⟨Lw, L̃q⟩ / ‖L̃q‖²` (Prop 2.1).
+//!
+//! This is the native Rust twin of the Pallas kernel
+//! (`python/compile/kernels/beacon.py`); both follow the oracle
+//! `python/compile/kernels/ref.py` including the tie-breaking contract:
+//! candidates scanned in ascending order, strict `>` replacement,
+//! zero-denominator candidates score −inf, and the degenerate u = 0 case
+//! picks the alphabet element nearest the least-squares coefficient.
+//!
+//! Complexity per channel: the 5-scalar expansion turns each coordinate
+//! update into O(N) dot products + O(|A|) candidate scoring, so a full
+//! sweep is O(N²); `lt` being upper-triangular (it is R from the QR) cuts
+//! the dot products to the leading `t+1` entries.
+
+use crate::linalg::matrix::{axpy, dot};
+use crate::linalg::{qr_factor, Matrix};
+
+pub const EPS: f64 = 1e-12;
+
+#[derive(Debug, Clone)]
+pub struct BeaconOpts {
+    /// K — number of cyclic refinement sweeps after the greedy pass.
+    pub loops: usize,
+    /// Asymmetric quantization via the centering trick (§3).
+    pub centering: bool,
+}
+
+impl Default for BeaconOpts {
+    fn default() -> Self {
+        BeaconOpts { loops: 4, centering: false }
+    }
+}
+
+/// argmax_{p ∈ A} cos∠(y, u + col·p) given the 5 scalars
+/// a = ⟨y,u⟩, b = ⟨y,col⟩, cc = ‖u‖², d = ⟨u,col⟩, e = ‖col‖².
+/// (The sweep maintains a/cc incrementally and precomputes b/e per
+/// column — §Perf; this is the pure scoring rule both backends share.)
+#[inline]
+fn argmax_scored(a: f64, b: f64, cc: f64, d: f64, e: f64, alph: &[f64]) -> f64 {
+    if cc <= EPS {
+        // degenerate u = 0: all same-sign candidates tie on cosine; pick
+        // nearest to the least-squares coefficient b/e (shared contract
+        // with ref.py / the Pallas kernel), excluding p with p²e ≈ 0.
+        let ls = if e > EPS { b / e } else { 0.0 };
+        let mut best_p = alph[0];
+        let mut best_d = f64::INFINITY;
+        for &p in alph {
+            let dist = if p * p * e > EPS { (p - ls).abs() } else { f64::INFINITY };
+            if dist < best_d {
+                best_d = dist;
+                best_p = p;
+            }
+        }
+        return best_p;
+    }
+
+    let mut best_p = alph[0];
+    let mut best_s = f64::NEG_INFINITY;
+    for &p in alph {
+        let den2 = cc + 2.0 * p * d + p * p * e;
+        let s = if den2 <= EPS {
+            f64::NEG_INFINITY
+        } else {
+            (a + p * b) / den2.sqrt()
+        };
+        if s > best_s {
+            best_s = s;
+            best_p = p;
+        }
+    }
+    best_p
+}
+
+/// Quantize one channel. `l_cols`/`lt_cols` are the column-gathered square
+/// factors (L = UᵀX, L̃ = R); `lt_nnz[t]` is the active-prefix length of
+/// L̃'s column t (t+1 for upper-triangular R, N otherwise). Returns
+/// (q ∈ A^N, scale c).
+pub fn beacon_channel(
+    l_cols: &[Vec<f64>],
+    lt_cols: &[Vec<f64>],
+    lt_nnz: &[usize],
+    w: &[f64],
+    alph: &[f64],
+    loops: usize,
+) -> (Vec<f64>, f64) {
+    let n = w.len();
+    let dim = l_cols[0].len();
+    let mut q = vec![0.0f64; n];
+    let mut u = vec![0.0f64; dim]; // running L̃ q
+    let mut y = vec![0.0f64; dim]; // running L_{≤t} w_{≤t}
+
+    // ‖L̃_t‖² is loop-invariant: precompute per column (§Perf).
+    let e_col: Vec<f64> = (0..n)
+        .map(|t| {
+            let col = &lt_cols[t][..lt_nnz[t]];
+            dot(col, col)
+        })
+        .collect();
+
+    // a = ⟨y,u⟩ and cc = ‖u‖² are maintained incrementally across the
+    // rank-1 updates of y and u (exact update formulas, no re-dots).
+    let mut a = 0.0f64;
+    let mut cc = 0.0f64;
+
+    // --- greedy path-following init (ℓ = 0) -------------------------------
+    for t in 0..n {
+        let nnz = lt_nnz[t];
+        let colt = &lt_cols[t][..nnz];
+        // y += w_t·L_t  ⇒  a += w_t·⟨L_t, u⟩
+        if w[t] != 0.0 {
+            a += w[t] * dot(&l_cols[t], &u);
+            axpy(w[t], &l_cols[t], &mut y);
+        }
+        let b = dot(&y[..nnz], colt);
+        let d = dot(&u[..nnz], colt);
+        let p = argmax_scored(a, b, cc, d, e_col[t], alph);
+        q[t] = p;
+        if p != 0.0 {
+            // u += p·L̃_t ⇒ a += p·b, cc += 2p·d + p²e
+            a += p * b;
+            cc += 2.0 * p * d + p * p * e_col[t];
+            axpy(p, colt, &mut u[..nnz]);
+        }
+    }
+
+    // --- K cyclic refinement sweeps (ℓ = 1..loops) -------------------------
+    // y is now fixed, so b_t = ⟨y, L̃_t⟩ is sweep-invariant: precompute.
+    let b_col: Vec<f64> = (0..n)
+        .map(|t| dot(&y[..lt_nnz[t]], &lt_cols[t][..lt_nnz[t]]))
+        .collect();
+    for _ in 0..loops {
+        for t in 0..n {
+            let nnz = lt_nnz[t];
+            let colt = &lt_cols[t][..nnz];
+            let e = e_col[t];
+            let b = b_col[t];
+            // d before removal: the one dot product per coordinate
+            let d_full = dot(&u[..nnz], colt);
+            let qt = q[t];
+            let (d, a_min, cc_min) = if qt != 0.0 {
+                // remove q_t·L̃_t from u (scalars exactly updated)
+                (
+                    d_full - qt * e,
+                    a - qt * b,
+                    cc - 2.0 * qt * d_full + qt * qt * e,
+                )
+            } else {
+                (d_full, a, cc)
+            };
+            let p = argmax_scored(a_min, b, cc_min.max(0.0), d, e, alph);
+            if p != qt {
+                // u += (p − q_t)·L̃_t
+                axpy(p - qt, colt, &mut u[..nnz]);
+                q[t] = p;
+            }
+            a = a_min + p * b;
+            cc = cc_min + 2.0 * p * d + p * p * e;
+        }
+    }
+
+    // --- integrated scale (Prop 2.1) ---------------------------------------
+    // final re-dots (not the drifted accumulators) for an exact scale
+    let den = dot(&u, &u);
+    let c = if den > EPS { dot(&y, &u) / den } else { 0.0 };
+    (q, c)
+}
+
+/// cos∠(Lw, L̃q) — the objective of Prop 3.1.
+pub fn beacon_objective(l: &Matrix, lt: &Matrix, w: &[f64], q: &[f64]) -> f64 {
+    let y = l.matvec(w);
+    let u = lt.matvec(q);
+    let ny = dot(&y, &y).sqrt();
+    let nu = dot(&u, &u).sqrt();
+    if ny <= EPS || nu <= EPS {
+        return 0.0;
+    }
+    dot(&y, &u) / (ny * nu)
+}
+
+/// Result of quantizing a full layer.
+#[derive(Debug, Clone)]
+pub struct LayerQuant {
+    /// q values per channel (column-major: `q[j]` is channel j's codes).
+    pub codes: Vec<Vec<f64>>,
+    /// per-channel scale
+    pub scales: Vec<f64>,
+    /// per-channel additive offset row (zero unless centering)
+    pub offsets: Vec<f64>,
+    /// dequantized weights W_q = Q·Diag(s) (+ 1·offsetᵀ), shape of W
+    pub dequant: Matrix,
+}
+
+/// Quantize a whole layer against calibration inputs.
+///
+/// * `x`  — FP-model activations (m×N)
+/// * `xt` — partially-quantized-model activations; pass `x` again for the
+///   no-error-correction variant
+/// * `w`  — layer weights (N×N'), channels = columns
+pub fn beacon_layer(
+    x: &Matrix,
+    xt: &Matrix,
+    w: &Matrix,
+    alph: &[f64],
+    opts: &BeaconOpts,
+) -> LayerQuant {
+    let f = qr_factor(xt, x);
+    beacon_layer_prefactored(&f.l, &f.r, x, xt, w, alph, opts)
+}
+
+/// Same as [`beacon_layer`] but with the square factors already computed
+/// (the coordinator reuses one QR across method variants).
+pub fn beacon_layer_prefactored(
+    l: &Matrix,
+    r: &Matrix,
+    x: &Matrix,
+    xt: &Matrix,
+    w: &Matrix,
+    alph: &[f64],
+    opts: &BeaconOpts,
+) -> LayerQuant {
+    let (n, np) = (w.rows, w.cols);
+
+    // centering: quantize Ŵ = W − 1·z_Wᵀ, restore with corrected mean
+    let z_w: Vec<f64> = (0..np)
+        .map(|j| (0..n).map(|i| w[(i, j)]).sum::<f64>() / n as f64)
+        .collect();
+
+    let l_cols = l.columns();
+    let lt_cols = r.columns();
+    // R is upper triangular: column t has t+1 leading nonzeros
+    let lt_nnz: Vec<usize> = (0..n).map(|t| (t + 1).min(n)).collect();
+
+    let w_cols = w.columns();
+    let nthreads = crate::util::pool::default_threads();
+    let results = crate::util::pool::par_map_indexed(np, nthreads, |j| {
+        let wj: Vec<f64> = if opts.centering {
+            w_cols[j].iter().map(|v| v - z_w[j]).collect()
+        } else {
+            w_cols[j].clone()
+        };
+        beacon_channel(&l_cols, &lt_cols, &lt_nnz, &wj, alph, opts.loops)
+    });
+
+    // corrected mean z_Q = (⟨X̃1, X1⟩ / ‖X̃1‖²)·z_W  (§3 centering)
+    let offsets: Vec<f64> = if opts.centering {
+        let ones = vec![1.0f64; n];
+        let x1 = x.matvec(&ones);
+        let xt1 = xt.matvec(&ones);
+        let den = dot(&xt1, &xt1);
+        let z_scale = if den > EPS { dot(&x1, &xt1) / den } else { 1.0 };
+        z_w.iter().map(|z| z_scale * z).collect()
+    } else {
+        vec![0.0; np]
+    };
+
+    let mut dequant = Matrix::zeros(n, np);
+    let mut codes = Vec::with_capacity(np);
+    let mut scales = Vec::with_capacity(np);
+    for (j, (q, c)) in results.into_iter().enumerate() {
+        for i in 0..n {
+            dequant[(i, j)] = c * q[i] + offsets[j];
+        }
+        codes.push(q);
+        scales.push(c);
+    }
+    LayerQuant { codes, scales, offsets, dequant }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::alphabet::{alphabet, BitWidth};
+    use crate::util::prop::{prop_check, Gen};
+
+    fn random_case(g: &mut Gen, m: usize, n: usize) -> (Matrix, Vec<f64>) {
+        let x = Matrix::from_vec(m, n, g.vec_normal(m * n, 1.0));
+        let w = g.vec_normal(n, 0.3);
+        (x, w)
+    }
+
+    fn channel_for(x: &Matrix, w: &[f64], bits: BitWidth, loops: usize) -> (Vec<f64>, f64) {
+        let f = qr_factor(x, x);
+        let l_cols = f.l.columns();
+        let lt_cols = f.r.columns();
+        let nnz: Vec<usize> = (0..w.len()).map(|t| t + 1).collect();
+        beacon_channel(&l_cols, &lt_cols, &nnz, w, &alphabet(bits), loops)
+    }
+
+    #[test]
+    fn objective_monotone_in_loops() {
+        // Prop 3.1
+        prop_check(10, |g| {
+            let (x, w) = random_case(g, 48, 10);
+            let f = qr_factor(&x, &x);
+            let a = alphabet(BitWidth::B2);
+            let l_cols = f.l.columns();
+            let lt_cols = f.r.columns();
+            let nnz: Vec<usize> = (0..10).map(|t| t + 1).collect();
+            let mut prev = -1.0;
+            for loops in 0..5 {
+                let (q, _) =
+                    beacon_channel(&l_cols, &lt_cols, &nnz, &w, &a, loops);
+                let obj = beacon_objective(&f.l, &f.r, &w, &q);
+                if obj < prev - 1e-10 {
+                    return Err(format!("objective decreased: {prev} -> {obj}"));
+                }
+                prev = obj;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn coordinatewise_local_optimum() {
+        prop_check(8, |g| {
+            let (x, w) = random_case(g, 32, 6);
+            let f = qr_factor(&x, &x);
+            let a = alphabet(BitWidth::B2);
+            let (q, _) = channel_for(&x, &w, BitWidth::B2, 10);
+            let base = beacon_objective(&f.l, &f.r, &w, &q);
+            for t in 0..w.len() {
+                for &p in &a {
+                    let mut q2 = q.clone();
+                    q2[t] = p;
+                    let o = beacon_objective(&f.l, &f.r, &w, &q2);
+                    if o > base + 1e-9 {
+                        return Err(format!(
+                            "coord {t} cand {p} improves {base} -> {o}"
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn scale_is_fixed_point() {
+        // Corollary 2.2
+        prop_check(10, |g| {
+            let (x, w) = random_case(g, 40, 8);
+            let f = qr_factor(&x, &x);
+            let (q, c) = channel_for(&x, &w, BitWidth::B2, 3);
+            let y = f.l.matvec(&w);
+            let u = f.r.matvec(&q);
+            let den = dot(&u, &u);
+            if den <= EPS {
+                return Ok(());
+            }
+            let expect = dot(&y, &u) / den;
+            if (c - expect).abs() > 1e-9 * expect.abs().max(1.0) {
+                return Err(format!("c {c} vs fixed point {expect}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn scale_beats_perturbations() {
+        // Prop 2.1: optimal c in least squares
+        let mut g = Gen { rng: crate::data::rng::SplitMix64::new(1) };
+        let (x, w) = random_case(&mut g, 40, 8);
+        let (q, c) = channel_for(&x, &w, BitWidth::B2, 3);
+        let xw = x.matvec(&w);
+        let xq = x.matvec(&q);
+        let err = |cc: f64| -> f64 {
+            xw.iter()
+                .zip(&xq)
+                .map(|(a, b)| (a - cc * b) * (a - cc * b))
+                .sum::<f64>()
+        };
+        let e0 = err(c);
+        for dc in [-0.1, -0.01, 0.01, 0.1] {
+            assert!(err(c * (1.0 + dc)) >= e0 - 1e-9);
+        }
+    }
+
+    #[test]
+    fn codes_live_on_alphabet() {
+        for bits in [BitWidth::B158, BitWidth::B2, BitWidth::B4] {
+            let mut g = Gen { rng: crate::data::rng::SplitMix64::new(2) };
+            let (x, w) = random_case(&mut g, 32, 9);
+            let a = alphabet(bits);
+            let (q, _) = channel_for(&x, &w, bits, 2);
+            for v in q {
+                assert!(a.iter().any(|p| (p - v).abs() < 1e-12), "{v} not in {bits:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn sign_symmetry() {
+        let mut g = Gen { rng: crate::data::rng::SplitMix64::new(3) };
+        let (x, w) = random_case(&mut g, 40, 8);
+        let wneg: Vec<f64> = w.iter().map(|v| -v).collect();
+        let (q1, c1) = channel_for(&x, &w, BitWidth::B2, 4);
+        let (q2, c2) = channel_for(&x, &wneg, BitWidth::B2, 4);
+        let e1: f64 = {
+            let xw = x.matvec(&w);
+            let xq = x.matvec(&q1);
+            xw.iter().zip(&xq).map(|(a, b)| (a - c1 * b).powi(2)).sum()
+        };
+        let e2: f64 = {
+            let xw = x.matvec(&wneg);
+            let xq = x.matvec(&q2);
+            xw.iter().zip(&xq).map(|(a, b)| (a - c2 * b).powi(2)).sum()
+        };
+        assert!((e1 - e2).abs() < 1e-8 * e1.max(1.0));
+    }
+
+    #[test]
+    fn zero_weights_finite_scale() {
+        let mut g = Gen { rng: crate::data::rng::SplitMix64::new(4) };
+        let (x, _) = random_case(&mut g, 24, 6);
+        let w = vec![0.0; 6];
+        let (_, c) = channel_for(&x, &w, BitWidth::B158, 3);
+        assert!(c.is_finite());
+    }
+
+    #[test]
+    fn layer_centering_helps_offset_weights() {
+        let mut g = Gen { rng: crate::data::rng::SplitMix64::new(5) };
+        let m = 64;
+        let n = 10;
+        let x = Matrix::from_vec(m, n, g.vec_normal(m * n, 1.0));
+        let mut w = Matrix::from_vec(n, 4, g.vec_normal(n * 4, 0.2));
+        for v in w.data.iter_mut() {
+            *v += 0.3; // strong common offset
+        }
+        let a = alphabet(BitWidth::B2);
+        let plain = beacon_layer(&x, &x, &w, &a, &BeaconOpts { loops: 4, centering: false });
+        let cent = beacon_layer(&x, &x, &w, &a, &BeaconOpts { loops: 4, centering: true });
+        let err = |d: &Matrix| x.matmul(&w.sub(d)).frob_norm();
+        assert!(err(&cent.dequant) < err(&plain.dequant));
+    }
+
+    #[test]
+    fn layer_ec_handles_input_mismatch() {
+        let mut g = Gen { rng: crate::data::rng::SplitMix64::new(6) };
+        let (m, n, np) = (48, 8, 3);
+        let x = Matrix::from_vec(m, n, g.vec_normal(m * n, 1.0));
+        let mut xt = x.clone();
+        for v in xt.data.iter_mut() {
+            *v += 0.15 * g.normal();
+        }
+        let w = Matrix::from_vec(n, np, g.vec_normal(n * np, 0.3));
+        let a = alphabet(BitWidth::B2);
+        let opts = BeaconOpts::default();
+        let ec = beacon_layer(&x, &xt, &w, &a, &opts);
+        let no_ec = beacon_layer(&x, &x, &w, &a, &opts);
+        // EC targets ||XW − X̃Q||; it must do at least as well there
+        let err = |d: &Matrix| x.matmul(&w).sub(&xt.matmul(d)).frob_norm();
+        assert!(err(&ec.dequant) <= err(&no_ec.dequant) + 1e-9);
+    }
+
+    #[test]
+    fn triangular_prefix_matches_full() {
+        // using lt_nnz = t+1 must give identical results to nnz = N
+        let mut g = Gen { rng: crate::data::rng::SplitMix64::new(7) };
+        let (x, w) = random_case(&mut g, 40, 8);
+        let f = qr_factor(&x, &x);
+        let a = alphabet(BitWidth::B2);
+        let l_cols = f.l.columns();
+        let lt_cols = f.r.columns();
+        let tri: Vec<usize> = (0..8).map(|t| t + 1).collect();
+        let full: Vec<usize> = vec![8; 8];
+        let (q1, c1) = beacon_channel(&l_cols, &lt_cols, &tri, &w, &a, 4);
+        let (q2, c2) = beacon_channel(&l_cols, &lt_cols, &full, &w, &a, 4);
+        assert_eq!(q1, q2);
+        assert!((c1 - c2).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,135 @@
+//! COMQ-style baseline (Zhang et al. 2025): backpropagation-free cyclic
+//! coordinate descent on the layer objective ‖X(w − v)‖² with each
+//! coordinate constrained to a *fixed* per-channel min-max grid.
+//!
+//! The contrast with Beacon is exactly the paper's point: COMQ's grid
+//! (scale) is chosen once up front from min/max, Beacon's scale emerges
+//! from the optimization itself.
+
+use crate::linalg::matrix::axpy;
+use crate::linalg::Matrix;
+
+use super::alphabet::{levels, BitWidth};
+use super::rtn::{minmax_scale, rtn_channel};
+
+pub const EPS: f64 = 1e-12;
+
+/// Quantize a layer with COMQ. Returns the dequantized weights.
+pub fn comq_layer(x: &Matrix, w: &Matrix, bits: BitWidth, loops: usize) -> Matrix {
+    let (n, np) = (w.rows, w.cols);
+    let g = x.gram(); // G = XᵀX
+    let g_cols = g.columns();
+    let gdiag: Vec<f64> = (0..n)
+        .map(|i| if g[(i, i)] > EPS { g[(i, i)] } else { 1.0 })
+        .collect();
+    let lv = levels(bits);
+
+    let w_cols = w.columns();
+    let nthreads = crate::util::pool::default_threads();
+    let cols = crate::util::pool::par_map_indexed(np, nthreads, |j| {
+        let wj = &w_cols[j];
+        let (c, z) = minmax_scale(wj, bits);
+        let grid: Vec<f64> = (0..lv).map(|k| c * (k as f64 + z)).collect();
+        let mut v = rtn_channel(wj, bits);
+        // residual gradient r = G (w − v)
+        let diff: Vec<f64> = wj.iter().zip(&v).map(|(a, b)| a - b).collect();
+        let mut r = g.matvec(&diff);
+        for _ in 0..loops {
+            for t in 0..n {
+                let opt = v[t] + r[t] / gdiag[t];
+                // nearest grid element (grid is ascending)
+                let mut best = grid[0];
+                let mut bd = f64::INFINITY;
+                for &gv in &grid {
+                    let d = (gv - opt).abs();
+                    if d < bd {
+                        bd = d;
+                        best = gv;
+                    }
+                }
+                if best != v[t] {
+                    axpy(-(best - v[t]), &g_cols[t], &mut r);
+                    v[t] = best;
+                }
+            }
+        }
+        v
+    });
+
+    let mut out = Matrix::zeros(n, np);
+    for (j, col) in cols.iter().enumerate() {
+        out.set_col(j, col);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::metrics::layer_recon_error;
+    use crate::quant::rtn::rtn_layer;
+    use crate::util::prop::{prop_check, Gen};
+
+    fn case(g: &mut Gen, m: usize, n: usize, np: usize) -> (Matrix, Matrix) {
+        let x = Matrix::from_vec(m, n, g.vec_normal(m * n, 1.0));
+        let w = Matrix::from_vec(n, np, g.vec_normal(n * np, 0.25));
+        (x, w)
+    }
+
+    #[test]
+    fn never_worse_than_rtn() {
+        // COMQ starts from RTN and each accepted move reduces the
+        // quadratic objective, so it can only improve.
+        prop_check(10, |g| {
+            let (x, w) = case(g, 80, 10, 5);
+            for bits in [BitWidth::B2, BitWidth::B3] {
+                let e_rtn = layer_recon_error(&x, &w, &rtn_layer(&w, bits));
+                let e_cq =
+                    layer_recon_error(&x, &w, &comq_layer(&x, &w, bits, 3));
+                if e_cq > e_rtn + 1e-9 {
+                    return Err(format!("comq {e_cq} worse than rtn {e_rtn}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn loops_monotone_improvement() {
+        let mut g = Gen { rng: crate::data::rng::SplitMix64::new(1) };
+        let (x, w) = case(&mut g, 80, 12, 4);
+        let mut prev = f64::INFINITY;
+        for loops in [0usize, 1, 2, 4] {
+            let e = layer_recon_error(&x, &w, &comq_layer(&x, &w, BitWidth::B2, loops));
+            assert!(e <= prev + 1e-9, "loops {loops}: {e} > {prev}");
+            prev = e;
+        }
+    }
+
+    #[test]
+    fn outputs_on_fixed_grid() {
+        let mut g = Gen { rng: crate::data::rng::SplitMix64::new(2) };
+        let (x, w) = case(&mut g, 64, 8, 3);
+        let q = comq_layer(&x, &w, BitWidth::B2, 3);
+        for j in 0..3 {
+            let col = w.col(j);
+            let (c, z) = minmax_scale(&col, BitWidth::B2);
+            for i in 0..8 {
+                let k = (q[(i, j)] / c - z).round();
+                assert!((q[(i, j)] - c * (k + z)).abs() < 1e-9);
+                assert!((0.0..=3.0).contains(&k));
+            }
+        }
+    }
+
+    #[test]
+    fn zero_loops_is_rtn() {
+        let mut g = Gen { rng: crate::data::rng::SplitMix64::new(3) };
+        let (x, w) = case(&mut g, 64, 8, 3);
+        let q = comq_layer(&x, &w, BitWidth::B2, 0);
+        let rtn = rtn_layer(&w, BitWidth::B2);
+        for (a, b) in q.data.iter().zip(&rtn.data) {
+            assert!((a - b).abs() < 1e-12);
+        }
+    }
+}

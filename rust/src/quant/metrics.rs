@@ -1,0 +1,111 @@
+//! Layer-reconstruction metrics (paper eq. 1) and summary statistics used
+//! by the ablation reports.
+
+use crate::linalg::Matrix;
+
+/// ‖XW − XQ‖_F / ‖XW‖_F — relative layer reconstruction error.
+pub fn layer_recon_error(x: &Matrix, w: &Matrix, q: &Matrix) -> f64 {
+    let num = x.matmul(&w.sub(q)).frob_norm();
+    let den = x.matmul(w).frob_norm() + 1e-12;
+    num / den
+}
+
+/// Same metric via the gram matrix G = XᵀX:
+/// ‖XD‖_F² = tr(DᵀGD). Turns two m×N×N' products into one m×N² gram
+/// (often already needed) plus N²×N' trace terms — the §Perf fast path
+/// for per-layer error reporting.
+pub fn layer_recon_error_gram(g: &Matrix, w: &Matrix, q: &Matrix) -> f64 {
+    let d = w.sub(q);
+    let num2 = quad_trace(g, &d);
+    let den2 = quad_trace(g, w) + 1e-24;
+    (num2 / den2).max(0.0).sqrt()
+}
+
+/// tr(AᵀGA) = Σ_j a_jᵀ G a_j.
+fn quad_trace(g: &Matrix, a: &Matrix) -> f64 {
+    let mut total = 0.0;
+    for j in 0..a.cols {
+        let col = a.col(j);
+        let gv = g.matvec(&col);
+        total += crate::linalg::matrix::dot(&col, &gv);
+    }
+    total
+}
+
+/// ‖XW − X̃Q‖_F / ‖XW‖_F — the error-corrected objective (§3).
+pub fn layer_recon_error_ec(x: &Matrix, xt: &Matrix, w: &Matrix, q: &Matrix) -> f64 {
+    let num = x.matmul(w).sub(&xt.matmul(q)).frob_norm();
+    let den = x.matmul(w).frob_norm() + 1e-12;
+    num / den
+}
+
+/// Mean and max absolute weight error (grid-only view, no activations).
+pub fn weight_error(w: &Matrix, q: &Matrix) -> (f64, f64) {
+    let mut sum = 0.0;
+    let mut max = 0.0f64;
+    for (a, b) in w.data.iter().zip(&q.data) {
+        let e = (a - b).abs();
+        sum += e;
+        max = max.max(e);
+    }
+    (sum / w.data.len() as f64, max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::Gen;
+
+    #[test]
+    fn zero_error_for_exact() {
+        let mut g = Gen { rng: crate::data::rng::SplitMix64::new(0) };
+        let x = Matrix::from_vec(16, 4, g.vec_normal(64, 1.0));
+        let w = Matrix::from_vec(4, 3, g.vec_normal(12, 1.0));
+        assert!(layer_recon_error(&x, &w, &w) < 1e-12);
+        assert_eq!(weight_error(&w, &w), (0.0, 0.0));
+    }
+
+    #[test]
+    fn scales_with_perturbation() {
+        let mut g = Gen { rng: crate::data::rng::SplitMix64::new(1) };
+        let x = Matrix::from_vec(16, 4, g.vec_normal(64, 1.0));
+        let w = Matrix::from_vec(4, 3, g.vec_normal(12, 1.0));
+        let mut q1 = w.clone();
+        let mut q2 = w.clone();
+        for v in q1.data.iter_mut() {
+            *v += 0.01;
+        }
+        for v in q2.data.iter_mut() {
+            *v += 0.1;
+        }
+        assert!(layer_recon_error(&x, &w, &q1) < layer_recon_error(&x, &w, &q2));
+    }
+
+    #[test]
+    fn gram_variant_matches_direct() {
+        let mut g = Gen { rng: crate::data::rng::SplitMix64::new(3) };
+        let x = Matrix::from_vec(32, 6, g.vec_normal(192, 1.0));
+        let w = Matrix::from_vec(6, 4, g.vec_normal(24, 1.0));
+        let mut q = w.clone();
+        for v in q.data.iter_mut() {
+            *v += 0.07 * g.normal();
+        }
+        let direct = layer_recon_error(&x, &w, &q);
+        let viagram = layer_recon_error_gram(&x.gram(), &w, &q);
+        assert!((direct - viagram).abs() < 1e-10, "{direct} vs {viagram}");
+    }
+
+    #[test]
+    fn ec_matches_plain_when_inputs_equal() {
+        let mut g = Gen { rng: crate::data::rng::SplitMix64::new(2) };
+        let x = Matrix::from_vec(16, 4, g.vec_normal(64, 1.0));
+        let w = Matrix::from_vec(4, 3, g.vec_normal(12, 1.0));
+        let mut q = w.clone();
+        for v in q.data.iter_mut() {
+            *v += 0.05;
+        }
+        let a = layer_recon_error(&x, &w, &q);
+        let b = layer_recon_error_ec(&x, &x, &w, &q);
+        assert!((a - b).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,23 @@
+//! The quantization algorithms: Beacon (the paper's contribution, with
+//! error correction + centering), the baselines it is evaluated against
+//! (GPTQ, RTN, COMQ), integer bit-packing for deployment, and the
+//! layer-reconstruction metrics of eq. (1).
+//!
+//! All algorithms run in f64 internally (matching the numpy oracles in
+//! `python/compile/kernels/ref.py`) and share the column-gathered layout
+//! produced by [`crate::linalg::Matrix::columns`].
+
+pub mod alphabet;
+pub mod beacon;
+pub mod comq;
+pub mod gptq;
+pub mod metrics;
+pub mod packing;
+pub mod rtn;
+
+pub use alphabet::{alphabet, levels, BitWidth};
+pub use beacon::{beacon_channel, beacon_layer, BeaconOpts};
+pub use comq::comq_layer;
+pub use gptq::gptq_layer;
+pub use metrics::layer_recon_error;
+pub use rtn::{minmax_scale, rtn_channel, rtn_layer};

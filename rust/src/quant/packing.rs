@@ -1,0 +1,131 @@
+//! Deployment bit-packing: Beacon's codes are indices into the (known,
+//! unscaled) alphabet, so a quantized channel ships as
+//! `ceil(bits)`-bit indices + one f32 scale (+ one f32 offset when
+//! centered) — the storage model the paper's memory numbers assume.
+
+use super::alphabet::{alphabet, BitWidth};
+
+#[derive(Debug, Clone)]
+pub struct PackedChannel {
+    pub bits: u32,
+    pub len: usize,
+    pub scale: f32,
+    pub offset: f32,
+    /// little-endian bit stream, `bits` bits per element
+    pub words: Vec<u64>,
+}
+
+/// Map code values (alphabet elements) to indices and pack.
+pub fn pack_channel(
+    codes: &[f64],
+    scale: f64,
+    offset: f64,
+    width: BitWidth,
+) -> PackedChannel {
+    let alph = alphabet(width);
+    let bits = width.storage_bits();
+    let mut words = vec![0u64; (codes.len() * bits as usize + 63) / 64];
+    for (i, v) in codes.iter().enumerate() {
+        let idx = alph
+            .iter()
+            .position(|a| (a - v).abs() < 1e-9)
+            .unwrap_or_else(|| panic!("code {v} not on {width:?} alphabet"))
+            as u64;
+        let bitpos = i * bits as usize;
+        let (word, off) = (bitpos / 64, bitpos % 64);
+        words[word] |= idx << off;
+        if off + bits as usize > 64 {
+            words[word + 1] |= idx >> (64 - off);
+        }
+    }
+    PackedChannel {
+        bits,
+        len: codes.len(),
+        scale: scale as f32,
+        offset: offset as f32,
+        words,
+    }
+}
+
+/// Unpack to dequantized f32 values (c·q + offset).
+pub fn unpack_channel(p: &PackedChannel, width: BitWidth) -> Vec<f32> {
+    let alph = alphabet(width);
+    let mask = if p.bits == 64 { u64::MAX } else { (1u64 << p.bits) - 1 };
+    (0..p.len)
+        .map(|i| {
+            let bitpos = i * p.bits as usize;
+            let (word, off) = (bitpos / 64, bitpos % 64);
+            let mut idx = p.words[word] >> off;
+            if off + p.bits as usize > 64 {
+                idx |= p.words[word + 1] << (64 - off);
+            }
+            let idx = (idx & mask) as usize;
+            p.scale * alph[idx] as f32 + p.offset
+        })
+        .collect()
+}
+
+/// Effective storage bytes for the packed channel (codes + metadata).
+pub fn packed_bytes(p: &PackedChannel) -> usize {
+    (p.len * p.bits as usize + 7) / 8 + 8 // + scale & offset f32s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::prop_check;
+
+    #[test]
+    fn roundtrip_all_widths() {
+        prop_check(20, |g| {
+            for width in BitWidth::ALL {
+                let alph = alphabet(width);
+                let n = g.usize_in(1, 70);
+                let codes: Vec<f64> =
+                    (0..n).map(|_| *g.pick(&alph)).collect();
+                let scale = g.f64_in(0.01, 2.0);
+                let off = g.f64_in(-0.2, 0.2);
+                let p = pack_channel(&codes, scale, off, width);
+                let back = unpack_channel(&p, width);
+                for (c, b) in codes.iter().zip(&back) {
+                    let expect = (scale as f32) * (*c as f32) + off as f32;
+                    if (expect - b).abs() > 1e-6 {
+                        return Err(format!("{width:?}: {expect} vs {b}"));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn compression_ratio() {
+        let width = BitWidth::B2;
+        let alph = alphabet(width);
+        let codes: Vec<f64> = (0..1024).map(|i| alph[i % 4]).collect();
+        let p = pack_channel(&codes, 0.1, 0.0, width);
+        let bytes = packed_bytes(&p);
+        // 1024 weights at f32 = 4096 bytes; 2-bit packed ≈ 256 + 8
+        assert!(bytes <= 264, "{bytes}");
+        assert!(4096 / bytes >= 15);
+    }
+
+    #[test]
+    fn word_boundary_crossing() {
+        // 3-bit codes cross u64 boundaries at element 21
+        let width = BitWidth::B3;
+        let alph = alphabet(width);
+        let codes: Vec<f64> = (0..64).map(|i| alph[i % 8]).collect();
+        let p = pack_channel(&codes, 1.0, 0.0, width);
+        let back = unpack_channel(&p, width);
+        for (i, b) in back.iter().enumerate() {
+            assert!((*b - alph[i % 8] as f32).abs() < 1e-6, "elem {i}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "not on")]
+    fn rejects_off_grid_codes() {
+        pack_channel(&[0.25], 1.0, 0.0, BitWidth::B2);
+    }
+}

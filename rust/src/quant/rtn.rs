@@ -1,0 +1,121 @@
+//! Round-to-nearest on the asymmetric per-channel min-max grid — the
+//! baseline quantizer Q of paper §1 and the initializer for COMQ.
+
+use crate::linalg::Matrix;
+
+use super::alphabet::{levels, BitWidth};
+
+pub const EPS: f64 = 1e-12;
+
+/// Per-channel min-max grid: (scale c, zero point z) with grid
+/// {c·(z+k) : k = 0..levels−1}.
+pub fn minmax_scale(w: &[f64], bits: BitWidth) -> (f64, f64) {
+    let lv = levels(bits) as f64;
+    let lo = w.iter().cloned().fold(f64::INFINITY, f64::min);
+    let hi = w.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let c = (hi - lo) / (lv - 1.0);
+    if c <= EPS {
+        return (1.0, 0.0);
+    }
+    (c, lo / c)
+}
+
+/// Index of the nearest grid level for value `v` on grid (c, z).
+#[inline]
+pub fn nearest_level(v: f64, c: f64, z: f64, lv: usize) -> usize {
+    let k = (v / c - z).round();
+    k.clamp(0.0, (lv - 1) as f64) as usize
+}
+
+/// RTN one channel; returns the dequantized values.
+pub fn rtn_channel(w: &[f64], bits: BitWidth) -> Vec<f64> {
+    let lv = levels(bits);
+    let (c, z) = minmax_scale(w, bits);
+    w.iter()
+        .map(|v| c * (nearest_level(*v, c, z, lv) as f64 + z))
+        .collect()
+}
+
+/// RTN a whole layer (channels = columns).
+pub fn rtn_layer(w: &Matrix, bits: BitWidth) -> Matrix {
+    let mut out = Matrix::zeros(w.rows, w.cols);
+    for j in 0..w.cols {
+        let col = w.col(j);
+        out.set_col(j, &rtn_channel(&col, bits));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::prop_check;
+
+    #[test]
+    fn idempotent_on_grid() {
+        prop_check(20, |g| {
+            let w = g.vec_normal(16, 0.5);
+            let q = rtn_channel(&w, BitWidth::B3);
+            let q2 = rtn_channel(&q, BitWidth::B3);
+            for (a, b) in q.iter().zip(&q2) {
+                if (a - b).abs() > 1e-9 {
+                    return Err(format!("not idempotent: {a} vs {b}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn preserves_extremes() {
+        prop_check(20, |g| {
+            let w = g.vec_normal(16, 0.5);
+            let q = rtn_channel(&w, BitWidth::B2);
+            let wmin = w.iter().cloned().fold(f64::INFINITY, f64::min);
+            let wmax = w.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+            let qmin = q.iter().cloned().fold(f64::INFINITY, f64::min);
+            let qmax = q.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+            if (wmin - qmin).abs() > 1e-9 || (wmax - qmax).abs() > 1e-9 {
+                return Err("extremes moved".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn error_bounded_by_half_step() {
+        prop_check(20, |g| {
+            let w = g.vec_normal(20, 0.5);
+            let (c, _) = minmax_scale(&w, BitWidth::B3);
+            let q = rtn_channel(&w, BitWidth::B3);
+            for (a, b) in w.iter().zip(&q) {
+                if (a - b).abs() > c / 2.0 + 1e-9 {
+                    return Err(format!("error {} > c/2 {}", (a - b).abs(), c / 2.0));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn constant_channel() {
+        let w = vec![0.7; 8];
+        let q = rtn_channel(&w, BitWidth::B2);
+        assert!(q.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn level_count_respected() {
+        prop_check(10, |g| {
+            let w = g.vec_normal(64, 0.5);
+            let q = rtn_channel(&w, BitWidth::B2);
+            let mut uniq: Vec<i64> = q.iter().map(|v| (v * 1e9).round() as i64).collect();
+            uniq.sort_unstable();
+            uniq.dedup();
+            if uniq.len() > 4 {
+                return Err(format!("{} distinct levels at 2-bit", uniq.len()));
+            }
+            Ok(())
+        });
+    }
+}

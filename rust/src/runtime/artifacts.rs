@@ -1,0 +1,204 @@
+//! Artifact manifest: the JSON file `manifest__{cfg}.json` written by the
+//! AOT build, describing datasets, weights, HLO graphs and the parameter
+//! ordering. Parsed with the in-crate JSON parser and cross-checked
+//! against the Rust [`param_spec`] mirror at load time, so an L2/L3 drift
+//! fails loudly before any execution.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::model::spec::{param_spec, ViTConfig};
+use crate::util::json::Value;
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub cfg: ViTConfig,
+    pub alph_pad: usize,
+    pub eval_batch: usize,
+    pub calib_count: usize,
+    pub eval_count: usize,
+    pub ln_batch: usize,
+    pub quantizable: Vec<String>,
+    pub weights: PathBuf,
+    pub calib: PathBuf,
+    pub eval: PathBuf,
+    pub vit_logits: PathBuf,
+    pub collect_acts: PathBuf,
+    pub ln_tune_step: PathBuf,
+    /// "NxN'" -> HLO path for the Beacon pallas-kernel artifact
+    pub beacon_layer: BTreeMap<String, PathBuf>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Artifacts {
+    pub dir: PathBuf,
+    pub manifest: Manifest,
+}
+
+impl Artifacts {
+    pub fn load(dir: &Path, config_name: &str) -> Result<Artifacts> {
+        let mpath = dir.join(format!("manifest__{config_name}.json"));
+        let text = std::fs::read_to_string(&mpath).with_context(|| {
+            format!(
+                "missing {mpath:?} — run `make artifacts` to build the AOT bundle"
+            )
+        })?;
+        let v = Value::parse(&text).context("manifest parse")?;
+
+        let c = v.at(&["config"]);
+        let cfg = ViTConfig {
+            name: req_str(c, "name")?,
+            image: req_usize(c, "image")?,
+            channels: req_usize(c, "channels")?,
+            patch: req_usize(c, "patch")?,
+            d_model: req_usize(c, "d_model")?,
+            depth: req_usize(c, "depth")?,
+            heads: req_usize(c, "heads")?,
+            mlp_ratio: req_usize(c, "mlp_ratio")?,
+            num_classes: req_usize(c, "num_classes")?,
+        };
+
+        // cross-check the parameter ordering ABI
+        let spec = param_spec(&cfg);
+        let params = v
+            .at(&["params"])
+            .as_arr()
+            .context("manifest params not an array")?;
+        if params.len() != spec.len() {
+            bail!(
+                "manifest has {} params, Rust spec has {} — L2/L3 drift",
+                params.len(),
+                spec.len()
+            );
+        }
+        for (p, s) in params.iter().zip(&spec) {
+            let arr = p.as_arr().context("param entry")?;
+            let name = arr[0].as_str().context("param name")?;
+            let shape: Vec<usize> = arr[1]
+                .as_arr()
+                .context("param shape")?
+                .iter()
+                .map(|d| d.as_usize().unwrap_or(0))
+                .collect();
+            if name != s.name || shape != s.shape {
+                bail!(
+                    "param ABI mismatch: manifest ({name} {shape:?}) vs rust ({} {:?})",
+                    s.name,
+                    s.shape
+                );
+            }
+        }
+
+        let quantizable = v
+            .at(&["quantizable"])
+            .as_arr()
+            .context("quantizable")?
+            .iter()
+            .map(|x| x.as_str().unwrap_or("").to_string())
+            .collect();
+
+        let a = v.at(&["artifacts"]);
+        let path_of = |key: &str| -> Result<PathBuf> {
+            Ok(dir.join(
+                a.get(key)
+                    .and_then(|x| x.as_str())
+                    .with_context(|| format!("artifact '{key}'"))?,
+            ))
+        };
+        let mut beacon_layer = BTreeMap::new();
+        if let Some(map) = a.get("beacon_layer").and_then(|x| x.as_obj()) {
+            for (k, val) in map {
+                beacon_layer.insert(
+                    k.clone(),
+                    dir.join(val.as_str().context("beacon_layer path")?),
+                );
+            }
+        }
+
+        let manifest = Manifest {
+            cfg,
+            alph_pad: v.at(&["alph_pad"]).as_usize().context("alph_pad")?,
+            eval_batch: v.at(&["eval_batch"]).as_usize().context("eval_batch")?,
+            calib_count: v.at(&["calib_count"]).as_usize().context("calib_count")?,
+            eval_count: v.at(&["eval_count"]).as_usize().context("eval_count")?,
+            ln_batch: v.at(&["ln_batch"]).as_usize().context("ln_batch")?,
+            quantizable,
+            weights: path_of("weights")?,
+            calib: path_of("calib")?,
+            eval: path_of("eval")?,
+            vit_logits: path_of("vit_logits")?,
+            collect_acts: path_of("collect_acts")?,
+            ln_tune_step: path_of("ln_tune_step")?,
+            beacon_layer,
+        };
+
+        // all referenced files must exist
+        for p in [
+            &manifest.weights,
+            &manifest.calib,
+            &manifest.eval,
+            &manifest.vit_logits,
+            &manifest.collect_acts,
+            &manifest.ln_tune_step,
+        ] {
+            if !p.exists() {
+                bail!("artifact {p:?} missing — re-run `make artifacts`");
+            }
+        }
+        Ok(Artifacts { dir: dir.to_path_buf(), manifest })
+    }
+
+    /// HLO path for the Beacon kernel artifact covering an N×N' layer.
+    pub fn beacon_layer_hlo(&self, n: usize, np: usize) -> Result<&Path> {
+        let key = format!("{n}x{np}");
+        self.manifest
+            .beacon_layer
+            .get(&key)
+            .map(|p| p.as_path())
+            .with_context(|| format!("no beacon_layer artifact for shape {key}"))
+    }
+}
+
+fn req_str(v: &Value, k: &str) -> Result<String> {
+    Ok(v.at(&[k]).as_str().with_context(|| format!("config.{k}"))?.to_string())
+}
+
+fn req_usize(v: &Value, k: &str) -> Result<usize> {
+    v.at(&[k]).as_usize().with_context(|| format!("config.{k}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Integration test against the real artifacts dir; skipped when the
+    /// AOT bundle hasn't been built (e.g. bare `cargo test` in CI without
+    /// `make artifacts`).
+    fn artifacts_dir() -> Option<PathBuf> {
+        let d = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        d.join("manifest__tiny-sim.json").exists().then_some(d)
+    }
+
+    #[test]
+    fn loads_and_cross_checks_real_manifest() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let a = Artifacts::load(&dir, "tiny-sim").unwrap();
+        assert_eq!(a.manifest.cfg.d_model, 64);
+        assert_eq!(a.manifest.quantizable.len(), 16);
+        assert!(a.beacon_layer_hlo(64, 192).is_ok());
+        assert!(a.beacon_layer_hlo(63, 1).is_err());
+    }
+
+    #[test]
+    fn missing_manifest_is_actionable() {
+        let e = Artifacts::load(Path::new("/nonexistent"), "tiny-sim")
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("make artifacts"), "{e}");
+    }
+}

@@ -1,0 +1,132 @@
+//! Thin wrapper over the `xla` crate's PJRT CPU client with a compiled-
+//! executable cache.
+//!
+//! Interchange is HLO *text* (`HloModuleProto::from_text_file`): jax ≥ 0.5
+//! serialized protos use 64-bit instruction ids that xla_extension 0.5.1
+//! rejects; the text parser reassigns ids (see /opt/xla-example/README.md
+//! and DESIGN.md).
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+use xla::{Literal, PjRtClient, PjRtLoadedExecutable};
+
+/// Compiled-executable cache keyed by artifact path. Compilation happens
+/// once per (artifact, process); execution is pure Rust → PJRT.
+pub struct Runtime {
+    client: PjRtClient,
+    cache: RefCell<HashMap<String, PjRtLoadedExecutable>>,
+    /// cumulative (compile_ms, exec_ms, exec_count) for metrics
+    stats: RefCell<RuntimeStats>,
+}
+
+#[derive(Debug, Default, Clone)]
+pub struct RuntimeStats {
+    pub compile_ms: f64,
+    pub exec_ms: f64,
+    pub executions: u64,
+    pub compilations: u64,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Runtime> {
+        let client = PjRtClient::cpu().context("create PJRT CPU client")?;
+        Ok(Runtime {
+            client,
+            cache: RefCell::new(HashMap::new()),
+            stats: RefCell::new(RuntimeStats::default()),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn stats(&self) -> RuntimeStats {
+        self.stats.borrow().clone()
+    }
+
+    fn compiled(&self, path: &Path) -> Result<()> {
+        let key = path.to_string_lossy().to_string();
+        if self.cache.borrow().contains_key(&key) {
+            return Ok(());
+        }
+        let t = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parse HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compile {path:?}"))?;
+        let mut stats = self.stats.borrow_mut();
+        stats.compile_ms += t.elapsed().as_secs_f64() * 1e3;
+        stats.compilations += 1;
+        drop(stats);
+        self.cache.borrow_mut().insert(key, exe);
+        Ok(())
+    }
+
+    /// Execute an artifact. All our graphs are lowered with
+    /// `return_tuple=True`, so the single output literal is a tuple which
+    /// this unpacks into its elements.
+    pub fn exec(&self, path: &Path, inputs: &[Literal]) -> Result<Vec<Literal>> {
+        self.compiled(path)?;
+        let key = path.to_string_lossy().to_string();
+        let cache = self.cache.borrow();
+        let exe = cache.get(&key).expect("just compiled");
+        let t = Instant::now();
+        let result = exe
+            .execute::<Literal>(inputs)
+            .with_context(|| format!("execute {path:?}"))?[0][0]
+            .to_literal_sync()?;
+        let mut stats = self.stats.borrow_mut();
+        stats.exec_ms += t.elapsed().as_secs_f64() * 1e3;
+        stats.executions += 1;
+        drop(stats);
+        let parts = result.to_tuple()?;
+        Ok(parts)
+    }
+}
+
+/// Literal from an f32 slice with the given dims.
+pub fn literal_f32(data: &[f32], dims: &[i64]) -> Result<Literal> {
+    let numel: i64 = dims.iter().product();
+    anyhow::ensure!(
+        numel as usize == data.len(),
+        "literal shape {dims:?} != data len {}",
+        data.len()
+    );
+    Ok(Literal::vec1(data).reshape(dims)?)
+}
+
+pub fn literal_f32_1d(data: &[f32]) -> Literal {
+    Literal::vec1(data)
+}
+
+pub fn literal_i32_1d(data: &[i32]) -> Literal {
+    Literal::vec1(data)
+}
+
+/// Read an f32 literal back into a Vec (any shape, row-major).
+pub fn literal_to_f32(l: &Literal) -> Result<Vec<f32>> {
+    Ok(l.to_vec::<f32>()?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_shape_checked() {
+        assert!(literal_f32(&[1.0, 2.0], &[3]).is_err());
+        assert!(literal_f32(&[1.0, 2.0, 3.0, 4.0], &[2, 2]).is_ok());
+    }
+
+    // Runtime execution is covered by rust/tests/runtime_integration.rs,
+    // which requires the artifacts bundle (and therefore runs under
+    // `make test`, not bare unit tests).
+}

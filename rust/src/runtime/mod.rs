@@ -1,0 +1,10 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py`, compiles them once on the CPU PJRT client, and
+//! executes them from the coordinator's hot path. Python is never invoked
+//! here — the artifacts directory is the entire L2/L1 interface.
+
+pub mod artifacts;
+pub mod client;
+
+pub use artifacts::{Artifacts, Manifest};
+pub use client::{literal_f32, literal_f32_1d, literal_i32_1d, Runtime};

@@ -1,0 +1,91 @@
+//! Tiny benchmark harness (criterion stand-in) for the `harness = false`
+//! bench targets: warmup, fixed-iteration timing, median/p95 reporting.
+
+use std::time::Instant;
+
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub median_ns: u128,
+    pub p95_ns: u128,
+    pub mean_ns: u128,
+}
+
+impl BenchResult {
+    pub fn print(&self) {
+        println!(
+            "{:<44} {:>10}  median {:>12}  p95 {:>12}",
+            self.name,
+            format!("x{}", self.iters),
+            fmt_ns(self.median_ns),
+            fmt_ns(self.p95_ns),
+        );
+    }
+}
+
+pub fn fmt_ns(ns: u128) -> String {
+    if ns >= 1_000_000_000 {
+        format!("{:.3} s", ns as f64 / 1e9)
+    } else if ns >= 1_000_000 {
+        format!("{:.3} ms", ns as f64 / 1e6)
+    } else if ns >= 1_000 {
+        format!("{:.3} µs", ns as f64 / 1e3)
+    } else {
+        format!("{ns} ns")
+    }
+}
+
+/// Time `f` for `iters` iterations after `warmup` runs; one sample per
+/// iteration so the spread is visible.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples: Vec<u128> = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_nanos());
+    }
+    samples.sort_unstable();
+    let median = samples[samples.len() / 2];
+    let p95 = samples[(samples.len() * 95 / 100).min(samples.len() - 1)];
+    let mean = samples.iter().sum::<u128>() / samples.len() as u128;
+    let r = BenchResult {
+        name: name.to_string(),
+        iters,
+        median_ns: median,
+        p95_ns: p95,
+        mean_ns: mean,
+    };
+    r.print();
+    r
+}
+
+/// Prevent the optimizer from discarding a value (std::hint::black_box is
+/// stable; this is a convenience re-export point).
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timing_is_positive_and_ordered() {
+        let r = bench("noop", 1, 16, || {
+            black_box(1 + 1);
+        });
+        assert!(r.median_ns <= r.p95_ns);
+        assert_eq!(r.iters, 16);
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert!(fmt_ns(500).contains("ns"));
+        assert!(fmt_ns(5_000).contains("µs"));
+        assert!(fmt_ns(5_000_000).contains("ms"));
+        assert!(fmt_ns(5_000_000_000).contains("s"));
+    }
+}

@@ -1,0 +1,119 @@
+//! Tiny subcommand + flag parser (clap stand-in).
+//!
+//! Grammar: `beacon <subcommand> [--flag value]... [--switch]...`
+//! Flags may be given as `--k v` or `--k=v`.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub flags: BTreeMap<String, String>,
+    pub switches: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Args {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.flags.insert(rest.to_string(), v);
+                } else {
+                    out.switches.push(rest.to_string());
+                }
+            } else if out.subcommand.is_none() && out.positional.is_empty() {
+                out.subcommand = Some(a);
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn str(&self, key: &str, default: &str) -> String {
+        self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn f64(&self, key: &str, default: f64) -> f64 {
+        self.flags
+            .get(key)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn usize(&self, key: &str, default: usize) -> usize {
+        self.flags
+            .get(key)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn switch(&self, key: &str) -> bool {
+        self.switches.iter().any(|s| s == key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = parse("quantize --bits 2 --method beacon --ec");
+        assert_eq!(a.subcommand.as_deref(), Some("quantize"));
+        assert_eq!(a.f64("bits", 0.0), 2.0);
+        assert_eq!(a.str("method", ""), "beacon");
+        assert!(a.switch("ec"));
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse("run --bits=2.58 --out=dir/x");
+        assert_eq!(a.f64("bits", 0.0), 2.58);
+        assert_eq!(a.str("out", ""), "dir/x");
+    }
+
+    #[test]
+    fn trailing_switch() {
+        let a = parse("eval --verbose");
+        assert!(a.switch("verbose"));
+        assert_eq!(a.get("verbose"), None);
+    }
+
+    #[test]
+    fn positional_args() {
+        let a = parse("report table1 table2");
+        assert_eq!(a.subcommand.as_deref(), Some("report"));
+        assert_eq!(a.positional, vec!["table1", "table2"]);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("quantize");
+        assert_eq!(a.usize("loops", 4), 4);
+        assert_eq!(a.f64("bits", 4.0), 4.0);
+        assert!(!a.switch("ec"));
+    }
+}

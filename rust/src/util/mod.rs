@@ -1,0 +1,10 @@
+//! Small self-contained substrates: JSON parsing, CLI flags, worker pool,
+//! property-test driver, bench timing. (The build environment is offline,
+//! so these replace serde_json / clap / rayon / proptest / criterion — see
+//! DESIGN.md "Environment note".)
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod pool;
+pub mod prop;

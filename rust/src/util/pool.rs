@@ -1,0 +1,88 @@
+//! Channel-based scoped worker pool (rayon stand-in).
+//!
+//! `par_map_indexed` fans a work list over `nthreads` OS threads and
+//! returns results in input order. On the single-core CI testbed this
+//! defaults to 1 thread (no overhead); on multi-core deployments set
+//! `BEACON_THREADS`.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+pub fn default_threads() -> usize {
+    std::env::var("BEACON_THREADS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or_else(|| {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1)
+        })
+}
+
+/// Apply `f` to `0..n` (sharing `f` across threads), collecting results in
+/// index order. Work-stealing via an atomic cursor, so uneven item costs
+/// balance out.
+pub fn par_map_indexed<T, F>(n: usize, nthreads: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let nthreads = nthreads.clamp(1, n.max(1));
+    if nthreads <= 1 || n <= 1 {
+        return (0..n).map(f).collect();
+    }
+    let cursor = AtomicUsize::new(0);
+    let out: Mutex<Vec<Option<T>>> =
+        Mutex::new((0..n).map(|_| None).collect());
+    std::thread::scope(|scope| {
+        for _ in 0..nthreads {
+            scope.spawn(|| loop {
+                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let r = f(i);
+                out.lock().unwrap()[i] = Some(r);
+            });
+        }
+    });
+    out.into_inner()
+        .unwrap()
+        .into_iter()
+        .map(|x| x.expect("worker failed to produce result"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_order() {
+        let r = par_map_indexed(100, 4, |i| i * 2);
+        assert_eq!(r, (0..100).map(|i| i * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn single_thread_path() {
+        let r = par_map_indexed(5, 1, |i| i + 1);
+        assert_eq!(r, vec![1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn empty_work() {
+        let r: Vec<usize> = par_map_indexed(0, 4, |i| i);
+        assert!(r.is_empty());
+    }
+
+    #[test]
+    fn uneven_costs_balance() {
+        let r = par_map_indexed(20, 3, |i| {
+            if i % 7 == 0 {
+                std::thread::sleep(std::time::Duration::from_millis(2));
+            }
+            i
+        });
+        assert_eq!(r, (0..20).collect::<Vec<_>>());
+    }
+}

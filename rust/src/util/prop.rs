@@ -1,0 +1,92 @@
+//! Seeded property-test driver (proptest stand-in).
+//!
+//! `prop_check(cases, |rng| ...)` runs the closure over `cases` independent
+//! deterministic splitmix64 streams and reports the failing seed so a
+//! reproduction is one function call away.
+
+use crate::data::rng::SplitMix64;
+
+pub struct Gen {
+    pub rng: SplitMix64,
+}
+
+impl Gen {
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.rng.next_f64()
+    }
+
+    /// Standard-normal-ish via the sum of 4 uniforms (Irwin–Hall, rescaled).
+    pub fn normal(&mut self) -> f64 {
+        let s: f64 = (0..4).map(|_| self.rng.next_f64()).sum();
+        (s - 2.0) * (3.0f64).sqrt()
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        lo + (self.rng.next_u64() as usize) % (hi - lo + 1)
+    }
+
+    pub fn vec_normal(&mut self, n: usize, scale: f64) -> Vec<f64> {
+        (0..n).map(|_| self.normal() * scale).collect()
+    }
+
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.usize_in(0, xs.len() - 1)]
+    }
+}
+
+/// Run `f` over `cases` deterministic generators; panic with the seed on
+/// the first failure (Err(description)).
+pub fn prop_check<F>(cases: u64, f: F)
+where
+    F: Fn(&mut Gen) -> Result<(), String>,
+{
+    for seed in 0..cases {
+        let mut g = Gen { rng: SplitMix64::new(0xBEAC0 + seed) };
+        if let Err(msg) = f(&mut g) {
+            panic!("property failed at seed {seed}: {msg}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_streams() {
+        let mut a = Gen { rng: SplitMix64::new(0xBEAC0) };
+        let mut b = Gen { rng: SplitMix64::new(0xBEAC0) };
+        for _ in 0..10 {
+            assert_eq!(a.rng.next_u64(), b.rng.next_u64());
+        }
+    }
+
+    #[test]
+    fn normal_is_centered() {
+        let mut g = Gen { rng: SplitMix64::new(7) };
+        let n = 20_000;
+        let mean: f64 = (0..n).map(|_| g.normal()).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.05, "mean {mean}");
+    }
+
+    #[test]
+    fn usize_in_bounds() {
+        let mut g = Gen { rng: SplitMix64::new(9) };
+        for _ in 0..1000 {
+            let v = g.usize_in(3, 7);
+            assert!((3..=7).contains(&v));
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed at seed")]
+    fn reports_failing_seed() {
+        prop_check(5, |g| {
+            if g.rng.next_u64() % 2 == 0 || true {
+                Err("always fails".into())
+            } else {
+                Ok(())
+            }
+        });
+    }
+}
