@@ -46,7 +46,11 @@ fn main() -> anyhow::Result<()> {
         ln_tune: true,
         ..QuantConfig::default()
     };
-    println!("\nquantizing with {} ...", qc.label());
+    println!(
+        "\nquantizing with {} (dispatch: dyn Quantizer `{}`) ...",
+        qc.label(),
+        qc.method.quantizer(&qc).name()
+    );
     let (report, store) = pipe.quantize_with_weights(&qc)?;
 
     println!("\nper-layer relative reconstruction error (eq. 1):");

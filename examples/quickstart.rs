@@ -15,8 +15,10 @@ fn main() -> anyhow::Result<()> {
     let mut pipe = Pipeline::from_artifacts("artifacts", "tiny-sim")?;
 
     // Beacon with integrated grid selection: no scale search, no alpha/beta
-    // tuning — just the bit width and the sweep count K.
-    let cfg = QuantConfig { bits: 2.0, loops: 4, ..QuantConfig::default() };
+    // tuning — just the bit width and the sweep count K. `threads: 0` lets
+    // the layer/channel scheduler size itself (BEACON_THREADS env var or
+    // the core count); any thread count gives bit-identical results.
+    let cfg = QuantConfig { bits: 2.0, loops: 4, threads: 0, ..QuantConfig::default() };
 
     let report = pipe.quantize(&cfg)?;
     println!("FP top-1        : {:.2}%", report.fp_top1 * 100.0);

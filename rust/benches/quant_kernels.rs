@@ -2,12 +2,22 @@
 //! per-channel Beacon sweep across layer sizes / bit widths / sweep
 //! counts, and the per-layer cost of every baseline. These are the
 //! numbers behind EXPERIMENTS.md §Perf (L3).
+//!
+//! Besides the human-readable report, this bench writes
+//! `BENCH_quant.json` — a machine-readable `method × bits × threads →
+//! ns/channel` record — so the perf trajectory is tracked across PRs.
+//! The beacon rows time the *prefactored* layer sweep (QR hoisted out),
+//! i.e. exactly the channel fan-out the engine scheduler parallelizes.
 
 use beacon_ptq::data::rng::SplitMix64;
 use beacon_ptq::linalg::{qr_factor, Matrix};
 use beacon_ptq::quant::alphabet::{alphabet, BitWidth};
-use beacon_ptq::quant::beacon::{beacon_channel, beacon_layer, BeaconOpts};
-use beacon_ptq::quant::{comq_layer, gptq_layer, rtn_layer};
+use beacon_ptq::quant::beacon::{
+    beacon_channel, beacon_layer, beacon_layer_prefactored, BeaconOpts,
+};
+use beacon_ptq::quant::{
+    comq_layer, comq_layer_threads, gptq_layer, rtn_layer, rtn_layer_threads,
+};
 use beacon_ptq::util::bench::{bench, black_box};
 use beacon_ptq::util::prop::Gen;
 
@@ -16,6 +26,14 @@ fn case(seed: u64, m: usize, n: usize, np: usize) -> (Matrix, Matrix) {
     let x = Matrix::from_vec(m, n, g.vec_normal(m * n, 1.0));
     let w = Matrix::from_vec(n, np, g.vec_normal(n * np, 0.3));
     (x, w)
+}
+
+struct Rec {
+    method: &'static str,
+    bits: String,
+    threads: usize,
+    median_ns: u128,
+    ns_per_channel: f64,
 }
 
 fn main() {
@@ -67,8 +85,11 @@ fn main() {
     });
     bench("layer 64x192 beacon+centering", 1, 5, || {
         black_box(beacon_layer(
-            &x, &x, &w, &a2,
-            &BeaconOpts { loops: 4, centering: true },
+            &x,
+            &x,
+            &w,
+            &a2,
+            &BeaconOpts { loops: 4, centering: true, ..Default::default() },
         ));
     });
     bench("layer 64x192 gptq", 1, 5, || {
@@ -80,4 +101,80 @@ fn main() {
     bench("layer 64x192 rtn", 1, 5, || {
         black_box(rtn_layer(&w, BitWidth::B2));
     });
+
+    // --- machine-readable perf record: BENCH_quant.json ---------------------
+    println!("\n== thread-scaling sweep (method × bits × threads) ==");
+    let (m, nn, np) = (512usize, 64usize, 128usize);
+    let (x, w) = case(7, m, nn, np);
+    let f = qr_factor(&x, &x);
+    let thread_grid = [1usize, 2, 4];
+    let mut recs: Vec<Rec> = Vec::new();
+    let mut push = |method: &'static str, bits: BitWidth, threads, median_ns| {
+        recs.push(Rec {
+            method,
+            bits: bits.label(),
+            threads,
+            median_ns,
+            ns_per_channel: median_ns as f64 / np as f64,
+        });
+    };
+    for &bits in &[BitWidth::B2, BitWidth::B4] {
+        let a = alphabet(bits);
+        for &threads in &thread_grid {
+            let opts = BeaconOpts { loops: 4, centering: false, threads };
+            let r = bench(
+                &format!("beacon sweep {nn}x{np} {} t={threads}", bits.label()),
+                1,
+                3,
+                || {
+                    black_box(beacon_layer_prefactored(
+                        &f.l, &f.r, &x, &x, &w, &a, &opts,
+                    ));
+                },
+            );
+            push("beacon", bits, threads, r.median_ns);
+        }
+    }
+    for &threads in &thread_grid {
+        let r = bench(&format!("rtn {nn}x{np} 2-bit t={threads}"), 1, 3, || {
+            black_box(rtn_layer_threads(&w, BitWidth::B2, threads));
+        });
+        push("rtn", BitWidth::B2, threads, r.median_ns);
+        let r = bench(&format!("comq {nn}x{np} 2-bit K=4 t={threads}"), 1, 3, || {
+            black_box(comq_layer_threads(&x, &w, BitWidth::B2, 4, threads));
+        });
+        push("comq", BitWidth::B2, threads, r.median_ns);
+    }
+    // GPTQ's row recursion is serial on the channel axis: one row, t=1
+    let r = bench(&format!("gptq {nn}x{np} 2-bit t=1"), 1, 3, || {
+        black_box(gptq_layer(&x, &w, BitWidth::B2, 0.01));
+    });
+    push("gptq", BitWidth::B2, 1, r.median_ns);
+
+    let host = std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1);
+    let mut s = String::new();
+    s.push_str("{\n  \"bench\": \"quant_kernels\",\n");
+    s.push_str(&format!(
+        "  \"layer\": {{\"rows\": {m}, \"n\": {nn}, \"channels\": {np}}},\n"
+    ));
+    s.push_str(&format!("  \"host_threads\": {host},\n"));
+    s.push_str("  \"results\": [\n");
+    for (i, r) in recs.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"method\": \"{}\", \"bits\": \"{}\", \"threads\": {}, \
+             \"median_ns\": {}, \"ns_per_channel\": {:.1}}}{}\n",
+            r.method,
+            r.bits,
+            r.threads,
+            r.median_ns,
+            r.ns_per_channel,
+            if i + 1 == recs.len() { "" } else { "," }
+        ));
+    }
+    s.push_str("  ]\n}\n");
+    std::fs::write("BENCH_quant.json", &s).expect("write BENCH_quant.json");
+    println!(
+        "\nwrote BENCH_quant.json ({} records, host_threads={host})",
+        recs.len()
+    );
 }

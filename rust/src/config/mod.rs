@@ -69,6 +69,10 @@ pub struct QuantConfig {
     pub calib_count: usize,
     /// evaluation images to use (0 = all available)
     pub eval_count: usize,
+    /// thread budget for the layer/channel scheduler (0 = auto: the
+    /// `BEACON_THREADS` env var, falling back to the core count). Output
+    /// is bit-identical at any value.
+    pub threads: usize,
 }
 
 impl Default for QuantConfig {
@@ -86,6 +90,7 @@ impl Default for QuantConfig {
             recapture: RecapturePolicy::PerLayer,
             calib_count: 0,
             eval_count: 0,
+            threads: 0,
         }
     }
 }
@@ -135,6 +140,7 @@ impl QuantConfig {
             "gptq_damp" => self.gptq_damp = value.parse()?,
             "calib_count" => self.calib_count = value.parse()?,
             "eval_count" => self.eval_count = value.parse()?,
+            "threads" => self.threads = value.parse()?,
             "recapture" => {
                 self.recapture = match value {
                     "layer" => RecapturePolicy::PerLayer,
@@ -195,6 +201,7 @@ impl QuantConfig {
             "method" | "bits" | "loops" | "error_correction" | "ec"
                 | "centering" | "ln_tune" | "ln_tune_steps" | "ln_tune_lr"
                 | "gptq_damp" | "calib_count" | "eval_count" | "recapture"
+                | "threads"
         )
     }
 }
@@ -226,6 +233,18 @@ mod tests {
         c.set("ec", "true").unwrap();
         c.set("centering", "on").unwrap();
         assert_eq!(c.label(), "beacon-1.58-bit+ec+centering");
+    }
+
+    #[test]
+    fn threads_key_parses() {
+        let mut c = QuantConfig::default();
+        assert_eq!(c.threads, 0, "default is auto");
+        c.set("threads", "4").unwrap();
+        assert_eq!(c.threads, 4);
+        assert!(c.set("threads", "x").is_err());
+        // threads never shows up in the run label (it does not affect
+        // the result — output is bit-identical at any thread count)
+        assert!(!c.label().contains("threads"));
     }
 
     #[test]

@@ -160,16 +160,20 @@ pub fn convergence(pipe: &mut Pipeline, max_loops: usize) -> Result<Table> {
         let l_cols = f.l.columns();
         let lt_cols = f.r.columns();
         let nnz: Vec<usize> = (0..w.rows).map(|t| t + 1).collect();
-        // average objective over the first 8 channels per sweep count
+        // average objective over the first 8 channels per sweep count;
+        // the probe channels are independent, so fan them over the pool
+        // (objectives summed in index order — deterministic).
         let nch = w.cols.min(8);
+        let nthreads = crate::util::pool::resolve_threads(0);
         let mut cells = vec![quantizable[li].clone()];
         for loops in 0..=max_loops {
-            let mut sum = 0.0;
-            for j in 0..nch {
+            let objs = crate::util::pool::par_map_indexed(nch, nthreads, |j| {
                 let wj = w.col(j);
-                let (q, _) = beacon_channel(&l_cols, &lt_cols, &nnz, &wj, &a, loops);
-                sum += beacon_objective(&f.l, &f.r, &wj, &q);
-            }
+                let (q, _) =
+                    beacon_channel(&l_cols, &lt_cols, &nnz, &wj, &a, loops);
+                beacon_objective(&f.l, &f.r, &wj, &q)
+            });
+            let sum: f64 = objs.iter().sum();
             cells.push(format!("{:.5}", sum / nch as f64));
         }
         table.row(cells);

@@ -1,8 +1,9 @@
-//! The L3 coordinator: a layer-sequential, channel-parallel PTQ pipeline
-//! that drives the whole stack — calibration capture, QR factorization,
-//! per-channel Beacon (native or via the AOT Pallas kernel), baselines,
-//! error-correction recapture, centering, LayerNorm tuning, and
-//! evaluation — entirely from Rust over PJRT artifacts.
+//! The L3 coordinator: a layer- and channel-parallel PTQ pipeline
+//! (layer-sequential only under error-correction recapture) that drives
+//! the whole stack — calibration capture, QR factorization, per-channel
+//! quantization through `Box<dyn Quantizer>` (native kernels or the AOT
+//! Pallas artifact), error-correction recapture, centering, LayerNorm
+//! tuning, and evaluation — entirely from Rust over PJRT artifacts.
 
 pub mod eval;
 pub mod experiments;

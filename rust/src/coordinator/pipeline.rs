@@ -6,9 +6,16 @@
 //!   calib images ─► collect_acts(FP weights)     ─► X   (cached once)
 //!                 └► collect_acts(work weights)  ─► X̃  (EC recapture)
 //!   QR(X̃) ─► L = UᵀX, L̃ = R          (rust/src/linalg — §3 memory form)
-//!   channels ─► beacon kernel (PJRT pallas artifact or native twin)
+//!   channels ─► quantizer kernel (PJRT pallas artifact or native twin)
 //!   W ← Q·Diag(s) (+ centering row)   (mutates the WeightStore in place)
 //! ```
+//!
+//! Method dispatch is entirely through `Box<dyn Quantizer>`
+//! ([`Pipeline::quantizer`]): this file contains no per-method logic.
+//! Without error-correction recapture the layers are independent and the
+//! engine scheduler fans them (and each layer's channels) over the
+//! `QuantConfig::threads` budget — results are gathered in index order,
+//! bit-identical to the serial run.
 //!
 //! after all layers: optional LN tuning (PJRT grad-step artifact), then
 //! top-1 evaluation through the `vit_logits` artifact.
@@ -24,8 +31,8 @@ use crate::linalg::{qr_factor, Matrix};
 use crate::model::spec::param_spec;
 use crate::model::WeightStore;
 use crate::quant::alphabet::alphabet;
-use crate::quant::beacon::{beacon_layer_prefactored, BeaconOpts, LayerQuant};
-use crate::quant::{comq_layer, gptq_layer, rtn_layer};
+use crate::quant::beacon::BeaconOpts;
+use crate::quant::engine::{self, LayerCtx, LayerQuant, Quantizer};
 use crate::runtime::client::{literal_f32, literal_to_f32};
 use crate::runtime::{Artifacts, Runtime};
 
@@ -167,6 +174,26 @@ impl Pipeline {
         Ok(v)
     }
 
+    /// The quantizer this pipeline dispatches through: the method's
+    /// native implementation, swapped for the PJRT kernel adapter when
+    /// the backend is [`KernelBackend::Pjrt`] and the method runs on the
+    /// prefactored form the AOT Pallas artifact implements.
+    pub fn quantizer<'a>(&'a self, qc: &QuantConfig) -> Box<dyn Quantizer + 'a> {
+        let native = qc.method.quantizer(qc);
+        // The only AOT kernel artifact the bundle ships is the Beacon
+        // sweep, so the adapter swap is gated on the method's identity,
+        // not just the prefactored capability — a future second
+        // prefactored-capable method must bring its own artifact +
+        // adapter rather than silently inheriting Beacon's.
+        if self.backend == KernelBackend::Pjrt
+            && native.supports_prefactored()
+            && native.name() == "beacon"
+        {
+            return Box::new(PjrtKernelQuantizer { pipe: self, qc: qc.clone() });
+        }
+        native
+    }
+
     /// Quantize one layer's weights with the configured method.
     /// `x` is the FP activation matrix, `xt` the (possibly identical)
     /// partially-quantized-model activations.
@@ -177,20 +204,16 @@ impl Pipeline {
         xt: &Matrix,
         w: &Matrix,
     ) -> Result<Matrix> {
-        Ok(match qc.method {
-            Method::Rtn => rtn_layer(w, qc.bit_width()),
-            Method::Gptq => gptq_layer(xt, w, qc.bit_width(), qc.gptq_damp),
-            Method::Comq => comq_layer(xt, w, qc.bit_width(), qc.loops),
-            Method::Beacon => {
-                let lq = self.beacon_layer(qc, x, xt, w)?;
-                lq.dequant
-            }
-        })
+        let threads = crate::util::pool::resolve_threads(qc.threads);
+        let lq = self
+            .quantizer(qc)
+            .quantize_layer(&LayerCtx { x, xt, w, threads })?;
+        Ok(lq.dequant)
     }
 
     /// Beacon over one layer, dispatching to the PJRT Pallas kernel or the
-    /// native twin. Centering (§3) is handled here — the kernel sees the
-    /// centered weights either way.
+    /// native twin (regardless of `qc.method` — this is the
+    /// beacon-specific entry point the kernel-parity tests drive).
     pub fn beacon_layer(
         &self,
         qc: &QuantConfig,
@@ -198,17 +221,11 @@ impl Pipeline {
         xt: &Matrix,
         w: &Matrix,
     ) -> Result<LayerQuant> {
-        let alph = alphabet(qc.bit_width());
-        let opts = BeaconOpts { loops: qc.loops, centering: qc.centering };
-        let f = qr_factor(xt, x);
-        match self.backend {
-            KernelBackend::Native => Ok(beacon_layer_prefactored(
-                &f.l, &f.r, x, xt, w, &alph, &opts,
-            )),
-            KernelBackend::Pjrt => {
-                self.beacon_layer_pjrt(qc, &f.l, &f.r, x, xt, w, &alph, &opts)
-            }
-        }
+        let mut qc_beacon = qc.clone();
+        qc_beacon.method = Method::Beacon;
+        let threads = crate::util::pool::resolve_threads(qc.threads);
+        self.quantizer(&qc_beacon)
+            .quantize_layer(&LayerCtx { x, xt, w, threads })
     }
 
     /// Execute the AOT Pallas kernel artifact for one layer.
@@ -312,41 +329,86 @@ impl Pipeline {
         let fp_top1 = self.fp_top1()?;
         let acts_fp = self.acts_fp.clone().expect("ensured");
         let quantizable = self.artifacts.manifest.quantizable.clone();
-        let use_ec = qc.method == Method::Beacon && qc.error_correction;
+
+        let quantizer = self.quantizer(qc);
+        let use_ec = quantizer.uses_recapture();
+        let threads = crate::util::pool::resolve_threads(qc.threads);
+        // EC couples consecutive layers (X̃ depends on the layers already
+        // quantized) and the PJRT adapter must stay on this thread; both
+        // force the layer axis serial — the whole budget then goes to the
+        // channel sweep inside each layer.
+        let layer_parallel = !use_ec && quantizer.parallel_safe();
+        let sched = engine::plan(threads, quantizable.len(), layer_parallel);
 
         let t0 = Instant::now();
         let mut work = self.weights_fp.clone();
         let mut layer_errors = Vec::with_capacity(quantizable.len());
-        let mut acts_q: Option<Vec<Matrix>> = None;
 
-        for (li, lname) in quantizable.iter().enumerate() {
-            let x = &acts_fp[li];
-            // error-correction recapture of X̃ from the current weights
-            let xt: &Matrix = if use_ec {
-                let refresh = match qc.recapture {
-                    RecapturePolicy::PerLayer => true,
-                    RecapturePolicy::PerBlock => li % 4 == 0,
+        if sched.layer_threads > 1 {
+            // independent layers: every layer quantizes the FP weights
+            // against the cached FP activations — fan them, gather in
+            // index order (bit-identical to the serial path), then apply.
+            let results = engine::run_layers(sched, quantizable.len(), |li| {
+                let lname = &quantizable[li];
+                let x = &acts_fp[li];
+                let w = work.matrix(lname);
+                let lq = quantizer.quantize_layer(&LayerCtx {
+                    x,
+                    xt: x,
+                    w: &w,
+                    threads: sched.channel_threads,
+                })?;
+                // gram-based metric: avoids two m×N×N' products per layer
+                let err = crate::quant::metrics::layer_recon_error_gram(
+                    &x.gram(),
+                    &w,
+                    &lq.dequant,
+                );
+                Ok((err, lq.dequant))
+            })?;
+            for (lname, (err, dequant)) in quantizable.iter().zip(results) {
+                layer_errors.push((lname.clone(), err));
+                work.set_matrix(lname, &dequant);
+            }
+        } else {
+            let mut acts_q: Option<Vec<Matrix>> = None;
+            for (li, lname) in quantizable.iter().enumerate() {
+                let x = &acts_fp[li];
+                // error-correction recapture of X̃ from the current weights
+                let xt: &Matrix = if use_ec {
+                    let refresh = match qc.recapture {
+                        RecapturePolicy::PerLayer => true,
+                        RecapturePolicy::PerBlock => li % 4 == 0,
+                    };
+                    if refresh || acts_q.is_none() {
+                        let (_, acts) =
+                            self.collect_acts(&work).context("EC recapture")?;
+                        acts_q = Some(acts);
+                    }
+                    &acts_q.as_ref().unwrap()[li]
+                } else {
+                    x
                 };
-                if refresh || acts_q.is_none() {
-                    let (_, acts) = self
-                        .collect_acts(&work)
-                        .context("EC recapture")?;
-                    acts_q = Some(acts);
-                }
-                &acts_q.as_ref().unwrap()[li]
-            } else {
-                x
-            };
 
-            let w = work.matrix(lname);
-            let dequant = self.quantize_layer(qc, x, xt, &w)?;
-            // gram-based metric: avoids two m×N×N' products per layer
-            layer_errors.push((
-                lname.clone(),
-                crate::quant::metrics::layer_recon_error_gram(&x.gram(), &w, &dequant),
-            ));
-            work.set_matrix(lname, &dequant);
+                let w = work.matrix(lname);
+                let lq = quantizer.quantize_layer(&LayerCtx {
+                    x,
+                    xt,
+                    w: &w,
+                    threads: sched.channel_threads,
+                })?;
+                layer_errors.push((
+                    lname.clone(),
+                    crate::quant::metrics::layer_recon_error_gram(
+                        &x.gram(),
+                        &w,
+                        &lq.dequant,
+                    ),
+                ));
+                work.set_matrix(lname, &lq.dequant);
+            }
         }
+        drop(quantizer);
         let quantize_secs = t0.elapsed().as_secs_f64();
 
         // optional LN tuning (distillation against the FP calib logits)
@@ -376,5 +438,57 @@ impl Pipeline {
             },
             work,
         ))
+    }
+}
+
+/// [`Quantizer`] adapter running the Beacon inner sweep through the
+/// AOT-compiled Pallas kernel artifact over PJRT. Selected by
+/// [`Pipeline::quantizer`] whenever the backend is PJRT and the method
+/// consumes the prefactored (L, L̃) form the artifact implements;
+/// centering is applied around the kernel call exactly as in the native
+/// twin.
+struct PjrtKernelQuantizer<'a> {
+    pipe: &'a Pipeline,
+    qc: QuantConfig,
+}
+
+impl Quantizer for PjrtKernelQuantizer<'_> {
+    fn name(&self) -> &'static str {
+        "beacon"
+    }
+
+    fn supports_prefactored(&self) -> bool {
+        true
+    }
+
+    /// PJRT executions are serialized behind the runtime's executable
+    /// lock, so fanning layers would only contend — keep the layer axis
+    /// on the coordinator thread.
+    fn parallel_safe(&self) -> bool {
+        false
+    }
+
+    fn uses_recapture(&self) -> bool {
+        self.qc.error_correction
+    }
+
+    fn quantize_layer(&self, ctx: &LayerCtx) -> Result<LayerQuant> {
+        let alph = alphabet(self.qc.bit_width());
+        let opts = BeaconOpts {
+            loops: self.qc.loops,
+            centering: self.qc.centering,
+            threads: ctx.threads,
+        };
+        let f = qr_factor(ctx.xt, ctx.x);
+        self.pipe.beacon_layer_pjrt(
+            &self.qc,
+            &f.l,
+            &f.r,
+            ctx.x,
+            ctx.xt,
+            ctx.w,
+            &alph,
+            &opts,
+        )
     }
 }

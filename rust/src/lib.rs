@@ -39,3 +39,4 @@ pub mod util;
 
 pub use config::{Method, QuantConfig};
 pub use coordinator::Pipeline;
+pub use quant::{LayerCtx, LayerQuant, Quantizer};

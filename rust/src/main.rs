@@ -11,7 +11,10 @@
 //!
 //! Common flags: --artifacts DIR (default `artifacts`), --model NAME
 //! (default `tiny-sim`), --backend pjrt|native, --config FILE, plus any
-//! QuantConfig key (--bits 2 --loops 4 --ec --centering --ln_tune ...).
+//! QuantConfig key (--bits 2 --loops 4 --ec --centering --ln_tune
+//! --threads 4 ...). `--threads N` sets the layer/channel scheduler
+//! budget (0 = auto via BEACON_THREADS / core count); results are
+//! bit-identical at any thread count.
 
 use std::path::PathBuf;
 
@@ -92,7 +95,12 @@ fn run() -> Result<()> {
         "quantize" => {
             let mut pipe = pipeline(&args)?;
             let qc = quant_config(&args)?;
-            println!("running {} (backend {:?})...", qc.label(), pipe.backend);
+            println!(
+                "running {} (backend {:?}, {} threads)...",
+                qc.label(),
+                pipe.backend,
+                beacon_ptq::util::pool::resolve_threads(qc.threads)
+            );
             let report = pipe.quantize(&qc)?;
             println!("FP top-1     : {}%", pct(report.fp_top1));
             println!("quant top-1  : {}%", pct(report.top1));
@@ -167,4 +175,4 @@ const HELP: &str = "beacon — Beacon PTQ coordinator
 usage: beacon <info|eval|quantize|table1|table2|convergence|ablate-calib|ablate-ec|runtime-row> [flags]
 flags: --artifacts DIR --model NAME --backend pjrt|native --config FILE
        --method beacon|gptq|rtn|comq --bits B --loops K --ec --centering
-       --ln_tune --save OUT.bin --verbose";
+       --ln_tune --threads N --save OUT.bin --verbose";

@@ -25,11 +25,15 @@ pub struct BeaconOpts {
     pub loops: usize,
     /// Asymmetric quantization via the centering trick (§3).
     pub centering: bool,
+    /// Channel-sweep thread budget; 0 = auto
+    /// ([`crate::util::pool::resolve_threads`]). Any value yields
+    /// bit-identical output — channels are gathered in index order.
+    pub threads: usize,
 }
 
 impl Default for BeaconOpts {
     fn default() -> Self {
-        BeaconOpts { loops: 4, centering: false }
+        BeaconOpts { loops: 4, centering: false, threads: 0 }
     }
 }
 
@@ -179,18 +183,9 @@ pub fn beacon_objective(l: &Matrix, lt: &Matrix, w: &[f64], q: &[f64]) -> f64 {
     dot(&y, &u) / (ny * nu)
 }
 
-/// Result of quantizing a full layer.
-#[derive(Debug, Clone)]
-pub struct LayerQuant {
-    /// q values per channel (column-major: `q[j]` is channel j's codes).
-    pub codes: Vec<Vec<f64>>,
-    /// per-channel scale
-    pub scales: Vec<f64>,
-    /// per-channel additive offset row (zero unless centering)
-    pub offsets: Vec<f64>,
-    /// dequantized weights W_q = Q·Diag(s) (+ 1·offsetᵀ), shape of W
-    pub dequant: Matrix,
-}
+// The per-layer result type now lives with the method-agnostic engine;
+// re-exported here so `quant::beacon::LayerQuant` keeps resolving.
+pub use super::engine::LayerQuant;
 
 /// Quantize a whole layer against calibration inputs.
 ///
@@ -233,7 +228,7 @@ pub fn beacon_layer_prefactored(
     let lt_nnz: Vec<usize> = (0..n).map(|t| (t + 1).min(n)).collect();
 
     let w_cols = w.columns();
-    let nthreads = crate::util::pool::default_threads();
+    let nthreads = crate::util::pool::resolve_threads(opts.threads);
     let results = crate::util::pool::par_map_indexed(np, nthreads, |j| {
         let wj: Vec<f64> = if opts.centering {
             w_cols[j].iter().map(|v| v - z_w[j]).collect()
@@ -430,8 +425,20 @@ mod tests {
             *v += 0.3; // strong common offset
         }
         let a = alphabet(BitWidth::B2);
-        let plain = beacon_layer(&x, &x, &w, &a, &BeaconOpts { loops: 4, centering: false });
-        let cent = beacon_layer(&x, &x, &w, &a, &BeaconOpts { loops: 4, centering: true });
+        let plain = beacon_layer(
+            &x,
+            &x,
+            &w,
+            &a,
+            &BeaconOpts { loops: 4, centering: false, ..Default::default() },
+        );
+        let cent = beacon_layer(
+            &x,
+            &x,
+            &w,
+            &a,
+            &BeaconOpts { loops: 4, centering: true, ..Default::default() },
+        );
         let err = |d: &Matrix| x.matmul(&w.sub(d)).frob_norm();
         assert!(err(&cent.dequant) < err(&plain.dequant));
     }
@@ -453,6 +460,66 @@ mod tests {
         // EC targets ||XW − X̃Q||; it must do at least as well there
         let err = |d: &Matrix| x.matmul(&w).sub(&xt.matmul(d)).frob_norm();
         assert!(err(&ec.dequant) <= err(&no_ec.dequant) + 1e-9);
+    }
+
+    // --- tie-breaking contract regression tests ---------------------------
+    // These lock the scoring-rule contract shared with ref.py and the
+    // Pallas kernel (module docs above): candidates scanned in ascending
+    // order with strict `>` replacement, zero-denominator candidates score
+    // −inf, and the degenerate u = 0 case picks the alphabet element
+    // nearest the least-squares coefficient. The Quantizer-trait refactor
+    // must never silently change any of these.
+
+    #[test]
+    fn tiebreak_ascending_scan_keeps_first() {
+        // a = b = 0 ⇒ every candidate scores exactly 0; strict `>` keeps
+        // the FIRST (most negative) alphabet element.
+        let a = alphabet(BitWidth::B2);
+        assert_eq!(argmax_scored(0.0, 0.0, 1.0, 0.0, 1.0, &a), -1.5);
+    }
+
+    #[test]
+    fn zero_denominator_scores_neg_inf() {
+        // den²(p) = cc + 2pd + p²e = (1 − p)² vanishes at p = 1: that
+        // candidate must be skipped (−inf) even though its raw numerator
+        // a + p·b = 5 is the largest on the grid.
+        let tern = [-1.0, 0.0, 1.0];
+        // scores: p=−1 → (0−5)/2 = −2.5, p=0 → 0, p=1 → −inf
+        assert_eq!(argmax_scored(0.0, 5.0, 1.0, -1.0, 1.0, &tern), 0.0);
+    }
+
+    #[test]
+    fn degenerate_u_picks_nearest_to_least_squares() {
+        let a = alphabet(BitWidth::B2);
+        // cc = 0 ⇒ least-squares coefficient b/e = 1.3 ⇒ nearest is 1.5
+        assert_eq!(argmax_scored(0.0, 2.6, 0.0, 0.0, 2.0, &a), 1.5);
+        // exact tie (ls = 0, dist 0.5 to ±0.5): ascending scan with
+        // strict `<` keeps −0.5
+        assert_eq!(argmax_scored(0.0, 0.0, 0.0, 0.0, 2.0, &a), -0.5);
+    }
+
+    #[test]
+    fn degenerate_u_excludes_zero_energy_candidates() {
+        // p = 0 has p²e = 0 ≤ EPS and is excluded even though it is the
+        // nearest grid point to ls = 0.2; 1.0 (dist 0.8) wins over −1.0
+        // (dist 1.2).
+        let tern = [-1.0, 0.0, 1.0];
+        assert_eq!(argmax_scored(0.0, 0.4, 0.0, 0.0, 2.0, &tern), 1.0);
+    }
+
+    #[test]
+    fn zero_weight_channel_greedy_contract() {
+        // End-to-end greedy pass over an all-zero channel: t = 0 goes
+        // through the u = 0 branch (ls = 0 ⇒ first-nearest = −0.5); every
+        // later coordinate ties at score 0 and keeps alph[0] = −1.5; the
+        // integrated scale is exactly 0 (y = 0).
+        let mut g = Gen { rng: crate::data::rng::SplitMix64::new(42) };
+        let (x, _) = random_case(&mut g, 40, 8);
+        let w = vec![0.0; 8];
+        let (q, c) = channel_for(&x, &w, BitWidth::B2, 0);
+        assert_eq!(q[0], -0.5);
+        assert!(q[1..].iter().all(|&v| v == -1.5), "{q:?}");
+        assert_eq!(c, 0.0);
     }
 
     #[test]

@@ -15,7 +15,22 @@ use super::rtn::{minmax_scale, rtn_channel};
 pub const EPS: f64 = 1e-12;
 
 /// Quantize a layer with COMQ. Returns the dequantized weights.
+/// Channel fan-out width comes from the environment (0 = auto); see
+/// [`comq_layer_threads`] for an explicit budget.
 pub fn comq_layer(x: &Matrix, w: &Matrix, bits: BitWidth, loops: usize) -> Matrix {
+    comq_layer_threads(x, w, bits, loops, 0)
+}
+
+/// [`comq_layer`] with an explicit channel thread budget (0 = auto).
+/// Bit-identical at any thread count — channels are independent and
+/// gathered in index order.
+pub fn comq_layer_threads(
+    x: &Matrix,
+    w: &Matrix,
+    bits: BitWidth,
+    loops: usize,
+    threads: usize,
+) -> Matrix {
     let (n, np) = (w.rows, w.cols);
     let g = x.gram(); // G = XᵀX
     let g_cols = g.columns();
@@ -25,7 +40,7 @@ pub fn comq_layer(x: &Matrix, w: &Matrix, bits: BitWidth, loops: usize) -> Matri
     let lv = levels(bits);
 
     let w_cols = w.columns();
-    let nthreads = crate::util::pool::default_threads();
+    let nthreads = crate::util::pool::resolve_threads(threads);
     let cols = crate::util::pool::par_map_indexed(np, nthreads, |j| {
         let wj = &w_cols[j];
         let (c, z) = minmax_scale(wj, bits);

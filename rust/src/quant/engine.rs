@@ -1,0 +1,427 @@
+//! The method-agnostic quantization engine: the [`Quantizer`] trait that
+//! every PTQ algorithm implements, the per-layer work description
+//! ([`LayerCtx`]) and result ([`LayerQuant`]), construction of boxed
+//! quantizers from a [`QuantConfig`] (`Method::quantizer`), and the
+//! layer/channel scheduler that splits one thread budget across the two
+//! independent axes of the problem.
+//!
+//! Beacon's key structural property — the scale is recovered *after*
+//! quantization, per channel — makes every channel an independent unit of
+//! work, and (without error-correction recapture) every layer too. The
+//! system around the algorithms (pipeline, recapture, metrics, serving)
+//! talks only to `dyn Quantizer`, so adding a method, mixing precisions,
+//! or selecting methods per layer never touches the coordinator again.
+//!
+//! Determinism contract: all fan-out goes through
+//! [`crate::util::pool::par_map_indexed`], which gathers results in index
+//! order and runs each item exactly once — the output is bit-identical to
+//! the serial path at any thread count.
+
+use anyhow::Result;
+
+use crate::config::{Method, QuantConfig};
+use crate::linalg::Matrix;
+use crate::util::pool;
+
+use super::alphabet::{alphabet, levels, BitWidth};
+use super::beacon::{beacon_layer, BeaconOpts};
+use super::comq::comq_layer_threads;
+use super::gptq::gptq_layer;
+use super::rtn::{minmax_scale, nearest_level};
+
+/// Result of quantizing a full layer, for every method.
+///
+/// The reconstruction model is `W_q ≈ Q·Diag(s) + 1·offsetᵀ`: column j of
+/// `dequant` is `scales[j]·codes[j] + offsets[j]`. For Beacon the identity
+/// is exact by construction (the scale is the Prop 2.1 least-squares
+/// coefficient). For the min-max grid methods (RTN/GPTQ/COMQ) `codes` are
+/// the integer grid indices and `scales`/`offsets` the per-channel grid
+/// `(c, c·z)`; `dequant` is the authoritative output (computed as
+/// `c·(k + z)` inside the kernels) and the factored form reproduces it up
+/// to one floating-point rounding.
+#[derive(Debug, Clone)]
+pub struct LayerQuant {
+    /// q values per channel (column-major: `codes[j]` is channel j's codes).
+    pub codes: Vec<Vec<f64>>,
+    /// per-channel scale
+    pub scales: Vec<f64>,
+    /// per-channel additive offset row (zero unless centering / min-max z)
+    pub offsets: Vec<f64>,
+    /// dequantized weights, shape of W
+    pub dequant: Matrix,
+}
+
+/// Everything a quantizer may look at for one layer.
+///
+/// * `x`  — FP-model activations feeding the layer (m×N)
+/// * `xt` — activations from the partially quantized model (X̃); equal to
+///   `x` unless the pipeline is running error-correction recapture
+/// * `w`  — the layer weights (N×N'), channels = columns
+/// * `threads` — resolved channel-axis thread budget (≥ 1) for this call;
+///   the scheduler shrinks it when it is already fanning layers
+pub struct LayerCtx<'a> {
+    pub x: &'a Matrix,
+    pub xt: &'a Matrix,
+    pub w: &'a Matrix,
+    pub threads: usize,
+}
+
+impl<'a> LayerCtx<'a> {
+    /// Context for the no-error-correction case (X̃ = X).
+    pub fn plain(x: &'a Matrix, w: &'a Matrix, threads: usize) -> LayerCtx<'a> {
+        LayerCtx { x, xt: x, w, threads: threads.max(1) }
+    }
+}
+
+/// One PTQ algorithm behind a uniform, scheduler-friendly interface.
+///
+/// Implementations must be pure functions of the context (no hidden
+/// state), so the scheduler may invoke them concurrently on independent
+/// layers whenever [`Quantizer::parallel_safe`] holds.
+pub trait Quantizer: Send + Sync {
+    /// Short method name ("beacon", "gptq", ...), used in labels/reports.
+    fn name(&self) -> &'static str;
+
+    /// Whether the method consumes the prefactored square form
+    /// (L = UᵀX, L̃ = R from the QR) — i.e. whether an AOT kernel artifact
+    /// built for that form can stand in for the native implementation.
+    fn supports_prefactored(&self) -> bool {
+        false
+    }
+
+    /// Whether independent layers may be quantized concurrently. Native
+    /// implementations are pure and return `true`; adapters that route
+    /// through a single-threaded runtime (PJRT) return `false`.
+    fn parallel_safe(&self) -> bool {
+        true
+    }
+
+    /// Whether the pipeline should recapture X̃ from the partially
+    /// quantized model between layers (§3 error correction). Only
+    /// meaningful for methods that read `ctx.xt`.
+    fn uses_recapture(&self) -> bool {
+        false
+    }
+
+    /// Quantize one layer.
+    fn quantize_layer(&self, ctx: &LayerCtx) -> Result<LayerQuant>;
+}
+
+impl Method {
+    /// The native quantizer for this method, configured from `qc`.
+    ///
+    /// This is the single construction point the coordinator dispatches
+    /// through — `coordinator/pipeline.rs` holds no per-method logic.
+    pub fn quantizer(&self, qc: &QuantConfig) -> Box<dyn Quantizer> {
+        match self {
+            Method::Beacon => Box::new(BeaconQuantizer {
+                alph: alphabet(qc.bit_width()),
+                opts: BeaconOpts {
+                    loops: qc.loops,
+                    centering: qc.centering,
+                    threads: 0,
+                },
+                error_correction: qc.error_correction,
+            }),
+            Method::Gptq => Box::new(GptqQuantizer {
+                bits: qc.bit_width(),
+                damp: qc.gptq_damp,
+            }),
+            Method::Rtn => Box::new(RtnQuantizer { bits: qc.bit_width() }),
+            Method::Comq => Box::new(ComqQuantizer {
+                bits: qc.bit_width(),
+                loops: qc.loops,
+            }),
+        }
+    }
+}
+
+/// Beacon (Algorithm 1) through the native Rust twin of the Pallas
+/// kernel: integrated grid selection with the scale recovered after the
+/// per-channel sweep; optional centering (§3).
+pub struct BeaconQuantizer {
+    pub alph: Vec<f64>,
+    pub opts: BeaconOpts,
+    pub error_correction: bool,
+}
+
+impl Quantizer for BeaconQuantizer {
+    fn name(&self) -> &'static str {
+        "beacon"
+    }
+
+    fn supports_prefactored(&self) -> bool {
+        true
+    }
+
+    fn uses_recapture(&self) -> bool {
+        self.error_correction
+    }
+
+    fn quantize_layer(&self, ctx: &LayerCtx) -> Result<LayerQuant> {
+        let opts = BeaconOpts { threads: ctx.threads, ..self.opts.clone() };
+        Ok(beacon_layer(ctx.x, ctx.xt, ctx.w, &self.alph, &opts))
+    }
+}
+
+/// GPTQ/OPTQ baseline: row-sequential rounding with Hessian feedback on
+/// the per-channel min-max grid. The row recursion couples all rows, so
+/// the channel axis stays serial inside a layer (`ctx.threads` is
+/// ignored); the layer axis still fans.
+pub struct GptqQuantizer {
+    pub bits: BitWidth,
+    pub damp: f64,
+}
+
+impl Quantizer for GptqQuantizer {
+    fn name(&self) -> &'static str {
+        "gptq"
+    }
+
+    fn quantize_layer(&self, ctx: &LayerCtx) -> Result<LayerQuant> {
+        let dequant = gptq_layer(ctx.xt, ctx.w, self.bits, self.damp);
+        Ok(minmax_layer_quant(ctx.w, dequant, self.bits))
+    }
+}
+
+/// Round-to-nearest on the per-channel min-max grid.
+pub struct RtnQuantizer {
+    pub bits: BitWidth,
+}
+
+impl Quantizer for RtnQuantizer {
+    fn name(&self) -> &'static str {
+        "rtn"
+    }
+
+    fn quantize_layer(&self, ctx: &LayerCtx) -> Result<LayerQuant> {
+        // One pass per channel: grid, codes and dequant together.
+        // Rounding itself is all the work RTN does, so the generic
+        // `minmax_layer_quant` recovery would double the layer cost;
+        // dequant uses the exact `rtn_channel` expression `c·(k + z)`,
+        // keeping the legacy free function bit-identical.
+        let w = ctx.w;
+        let (n, np) = (w.rows, w.cols);
+        let lv = levels(self.bits);
+        let w_cols = w.columns();
+        let cols = pool::par_map_indexed(np, ctx.threads, |j| {
+            let wj = &w_cols[j];
+            let (c, z) = minmax_scale(wj, self.bits);
+            let mut codes = Vec::with_capacity(n);
+            let mut dq = Vec::with_capacity(n);
+            for &v in wj {
+                let k = nearest_level(v, c, z, lv) as f64;
+                codes.push(k);
+                dq.push(c * (k + z));
+            }
+            (codes, dq, c, c * z)
+        });
+        let mut dequant = Matrix::zeros(n, np);
+        let mut codes = Vec::with_capacity(np);
+        let mut scales = Vec::with_capacity(np);
+        let mut offsets = Vec::with_capacity(np);
+        for (j, (q, dq, c, off)) in cols.into_iter().enumerate() {
+            dequant.set_col(j, &dq);
+            codes.push(q);
+            scales.push(c);
+            offsets.push(off);
+        }
+        Ok(LayerQuant { codes, scales, offsets, dequant })
+    }
+}
+
+/// COMQ baseline: cyclic coordinate descent on the fixed min-max grid,
+/// channels independent.
+pub struct ComqQuantizer {
+    pub bits: BitWidth,
+    pub loops: usize,
+}
+
+impl Quantizer for ComqQuantizer {
+    fn name(&self) -> &'static str {
+        "comq"
+    }
+
+    fn quantize_layer(&self, ctx: &LayerCtx) -> Result<LayerQuant> {
+        let dequant =
+            comq_layer_threads(ctx.xt, ctx.w, self.bits, self.loops, ctx.threads);
+        Ok(minmax_layer_quant(ctx.w, dequant, self.bits))
+    }
+}
+
+/// Lift a dequantized min-max-grid layer into the factored [`LayerQuant`]
+/// form: per-channel grid `(c, z)` from the *original* weights (the
+/// contract all three grid methods share), integer codes recovered by
+/// inverting `dq = c·(k + z)`.
+///
+/// The recovery is one O(N·N') sweep — negligible next to the GPTQ and
+/// COMQ kernels it post-processes (Hessian/Gram work is O(N²·N') and
+/// up). RTN builds its codes inline instead (see [`RtnQuantizer`]),
+/// where this sweep would be as expensive as the method itself.
+fn minmax_layer_quant(w: &Matrix, dequant: Matrix, bits: BitWidth) -> LayerQuant {
+    let (n, np) = (w.rows, w.cols);
+    let mut codes = Vec::with_capacity(np);
+    let mut scales = Vec::with_capacity(np);
+    let mut offsets = Vec::with_capacity(np);
+    for j in 0..np {
+        let col = w.col(j);
+        let (c, z) = minmax_scale(&col, bits);
+        let q: Vec<f64> = (0..n).map(|i| (dequant[(i, j)] / c - z).round()).collect();
+        codes.push(q);
+        scales.push(c);
+        offsets.push(c * z);
+    }
+    LayerQuant { codes, scales, offsets, dequant }
+}
+
+// ---------------------------------------------------------------------------
+// Layer/channel scheduler
+// ---------------------------------------------------------------------------
+
+/// How one thread budget is split across the two independent axes.
+///
+/// Invariant: `layer_threads · channel_threads ≤ max(threads, 1)` and
+/// `layer_threads ≤ layers` — the outer fan runs whole layers, each of
+/// which nests `channel_threads` workers into its channel sweep.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Schedule {
+    pub layer_threads: usize,
+    pub channel_threads: usize,
+}
+
+/// Plan the split. `layer_parallel` is false when layers are coupled
+/// (error-correction recapture) or the quantizer is not
+/// [`Quantizer::parallel_safe`]; the whole budget then goes to channels.
+///
+/// Among splits that use the most of the budget
+/// (`layer·channel ≤ threads`), the widest layer fan wins: outer-level
+/// parallelism also amortizes each layer's serial sections (QR, gram,
+/// column gather), which nested channel workers cannot reach. Naively
+/// maximizing `layer_threads` alone strands workers when `layers` does
+/// not divide `threads` (8 threads over 5 layers would run 5×1 = 5
+/// workers; this picks 4×2 = 8).
+pub fn plan(threads: usize, layers: usize, layer_parallel: bool) -> Schedule {
+    let threads = threads.max(1);
+    if !layer_parallel || layers <= 1 {
+        return Schedule { layer_threads: 1, channel_threads: threads };
+    }
+    let mut best = Schedule { layer_threads: 1, channel_threads: threads };
+    for lt in 2..=threads.min(layers) {
+        let ct = threads / lt;
+        if lt * ct >= best.layer_threads * best.channel_threads {
+            best = Schedule { layer_threads: lt, channel_threads: ct };
+        }
+    }
+    best
+}
+
+/// Fan `f` over `0..layers` with the planned layer-axis width, gathering
+/// results in index order; the first error (in index order) propagates.
+pub fn run_layers<T, F>(sched: Schedule, layers: usize, f: F) -> Result<Vec<T>>
+where
+    T: Send,
+    F: Fn(usize) -> Result<T> + Sync,
+{
+    pool::par_map_indexed(layers, sched.layer_threads, f)
+        .into_iter()
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::Gen;
+
+    fn case(seed: u64, m: usize, n: usize, np: usize) -> (Matrix, Matrix) {
+        let mut g = Gen { rng: crate::data::rng::SplitMix64::new(seed) };
+        let x = Matrix::from_vec(m, n, g.vec_normal(m * n, 1.0));
+        let w = Matrix::from_vec(n, np, g.vec_normal(n * np, 0.3));
+        (x, w)
+    }
+
+    fn qc(method: Method) -> QuantConfig {
+        QuantConfig { method, bits: 2.0, loops: 3, ..QuantConfig::default() }
+    }
+
+    #[test]
+    fn names_and_capabilities() {
+        let cfgs = [
+            (Method::Beacon, "beacon", true),
+            (Method::Gptq, "gptq", false),
+            (Method::Rtn, "rtn", false),
+            (Method::Comq, "comq", false),
+        ];
+        for (m, name, prefactored) in cfgs {
+            let q = m.quantizer(&qc(m));
+            assert_eq!(q.name(), name);
+            assert_eq!(q.supports_prefactored(), prefactored);
+            assert!(q.parallel_safe());
+            assert!(!q.uses_recapture());
+        }
+        let mut c = qc(Method::Beacon);
+        c.error_correction = true;
+        assert!(Method::Beacon.quantizer(&c).uses_recapture());
+    }
+
+    #[test]
+    fn factored_form_reconstructs_dequant() {
+        let (x, w) = case(11, 64, 8, 5);
+        for m in [Method::Beacon, Method::Gptq, Method::Rtn, Method::Comq] {
+            let lq = m
+                .quantizer(&qc(m))
+                .quantize_layer(&LayerCtx::plain(&x, &w, 1))
+                .unwrap();
+            assert_eq!(lq.codes.len(), w.cols);
+            assert_eq!(lq.scales.len(), w.cols);
+            for j in 0..w.cols {
+                for i in 0..w.rows {
+                    let rebuilt = lq.scales[j] * lq.codes[j][i] + lq.offsets[j];
+                    assert!(
+                        (rebuilt - lq.dequant[(i, j)]).abs() < 1e-9,
+                        "{m:?} ({i},{j}): {rebuilt} vs {}",
+                        lq.dequant[(i, j)]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn schedule_plan_invariants() {
+        // serial when coupled or single layer
+        assert_eq!(plan(8, 16, false), Schedule { layer_threads: 1, channel_threads: 8 });
+        assert_eq!(plan(8, 1, true), Schedule { layer_threads: 1, channel_threads: 8 });
+        // budget never oversubscribed, both axes ≥ 1
+        for threads in [1usize, 2, 3, 4, 8, 32] {
+            for layers in [1usize, 2, 5, 16] {
+                let s = plan(threads, layers, true);
+                assert!(s.layer_threads >= 1 && s.channel_threads >= 1);
+                assert!(s.layer_threads * s.channel_threads <= threads.max(1));
+                assert!(s.layer_threads <= layers.max(1));
+            }
+        }
+        assert_eq!(plan(0, 4, true), Schedule { layer_threads: 1, channel_threads: 1 });
+        // non-divisible splits must not strand budget: 8 over 5 layers
+        // runs 4×2 = 8 workers, not 5×1 = 5
+        assert_eq!(plan(8, 5, true), Schedule { layer_threads: 4, channel_threads: 2 });
+        // …and the full budget still goes wide when layers allow it
+        assert_eq!(plan(8, 16, true), Schedule { layer_threads: 8, channel_threads: 1 });
+        assert_eq!(plan(15, 8, true), Schedule { layer_threads: 5, channel_threads: 3 });
+    }
+
+    #[test]
+    fn run_layers_gathers_in_order_and_propagates_errors() {
+        let sched = plan(4, 6, true);
+        let ok: Vec<usize> =
+            run_layers(sched, 6, |i| Ok(i * 10)).unwrap();
+        assert_eq!(ok, vec![0, 10, 20, 30, 40, 50]);
+        let err = run_layers(sched, 6, |i| {
+            if i == 3 {
+                Err(anyhow::anyhow!("layer {i} failed"))
+            } else {
+                Ok(i)
+            }
+        });
+        assert!(err.unwrap_err().to_string().contains("layer 3"));
+    }
+}

@@ -6,6 +6,10 @@
 //!   H = XᵀX + λI,  Hinv = H⁻¹,  Uc = chol(Hinv)ᵀ (upper, Hinv = UcᵀUc);
 //!   for each row t: round, err = (w − q)/Uc[t,t],
 //!   W[t+1:,:] −= Uc[t, t+1:] ⊗ err.
+//!
+//! The row recursion couples every channel within a layer, so GPTQ stays
+//! serial on the channel axis; the scheduler still fans independent
+//! *layers* through its [`crate::quant::engine::GptqQuantizer`] wrapper.
 
 use crate::linalg::qr::spd_inverse;
 use crate::linalg::{cholesky_lower, Matrix};

@@ -6,10 +6,42 @@
 //! All algorithms run in f64 internally (matching the numpy oracles in
 //! `python/compile/kernels/ref.py`) and share the column-gathered layout
 //! produced by [`crate::linalg::Matrix::columns`].
+//!
+//! # The `Quantizer` trait and the engine
+//!
+//! Every method is exposed twice: as a free function with its natural
+//! signature (`beacon_layer`, `gptq_layer`, `rtn_layer`, `comq_layer` —
+//! the tested kernels), and as an [`engine::Quantizer`] implementation
+//! that adapts the kernel to the uniform per-layer interface
+//!
+//! ```text
+//!   Method::quantizer(&QuantConfig) -> Box<dyn Quantizer>
+//!   Quantizer::quantize_layer(&LayerCtx { x, xt, w, threads }) -> LayerQuant
+//! ```
+//!
+//! [`engine::LayerCtx`] carries the FP activations `x`, the (possibly
+//! recaptured) activations `xt`, the weights, and the resolved thread
+//! budget; [`engine::LayerQuant`] is the universal factored result
+//! `W_q ≈ Q·Diag(s) + 1·offsetᵀ`. The coordinator dispatches only
+//! through the trait — it contains no per-method logic.
+//!
+//! # Threading model
+//!
+//! Two independent axes of parallelism exist: channels within a layer
+//! (Beacon/RTN/COMQ — per-channel PTQ with the scale recovered after
+//! quantization makes each channel a closed unit of work) and whole
+//! layers (whenever error-correction recapture is off). One budget —
+//! `QuantConfig::threads`, `--threads`, or the `BEACON_THREADS` env var
+//! (0 = auto = core count) — is split across both axes by
+//! [`engine::plan`]; all fan-out funnels through
+//! [`crate::util::pool::par_map_indexed`], which gathers results in index
+//! order, so every output is bit-identical to the serial run at any
+//! thread count.
 
 pub mod alphabet;
 pub mod beacon;
 pub mod comq;
+pub mod engine;
 pub mod gptq;
 pub mod metrics;
 pub mod packing;
@@ -17,7 +49,8 @@ pub mod rtn;
 
 pub use alphabet::{alphabet, levels, BitWidth};
 pub use beacon::{beacon_channel, beacon_layer, BeaconOpts};
-pub use comq::comq_layer;
+pub use comq::{comq_layer, comq_layer_threads};
+pub use engine::{LayerCtx, LayerQuant, Quantizer};
 pub use gptq::gptq_layer;
 pub use metrics::layer_recon_error;
-pub use rtn::{minmax_scale, rtn_channel, rtn_layer};
+pub use rtn::{minmax_scale, rtn_channel, rtn_layer, rtn_layer_threads};

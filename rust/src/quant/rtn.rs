@@ -36,12 +36,23 @@ pub fn rtn_channel(w: &[f64], bits: BitWidth) -> Vec<f64> {
         .collect()
 }
 
-/// RTN a whole layer (channels = columns).
+/// RTN a whole layer (channels = columns), serial path.
 pub fn rtn_layer(w: &Matrix, bits: BitWidth) -> Matrix {
+    rtn_layer_threads(w, bits, 1)
+}
+
+/// RTN a whole layer fanning independent channels over `threads` workers
+/// (0 = auto). Bit-identical to [`rtn_layer`] at any thread count — the
+/// pool gathers channels in index order.
+pub fn rtn_layer_threads(w: &Matrix, bits: BitWidth, threads: usize) -> Matrix {
+    let nthreads = crate::util::pool::resolve_threads(threads);
+    let w_cols = w.columns();
+    let cols = crate::util::pool::par_map_indexed(w.cols, nthreads, |j| {
+        rtn_channel(&w_cols[j], bits)
+    });
     let mut out = Matrix::zeros(w.rows, w.cols);
-    for j in 0..w.cols {
-        let col = w.col(j);
-        out.set_col(j, &rtn_channel(&col, bits));
+    for (j, col) in cols.iter().enumerate() {
+        out.set_col(j, col);
     }
     out
 }

@@ -6,9 +6,9 @@
 //! rejects; the text parser reassigns ids (see /opt/xla-example/README.md
 //! and DESIGN.md).
 
-use std::cell::RefCell;
 use std::collections::HashMap;
 use std::path::Path;
+use std::sync::Mutex;
 use std::time::Instant;
 
 use anyhow::{Context, Result};
@@ -16,11 +16,17 @@ use xla::{Literal, PjRtClient, PjRtLoadedExecutable};
 
 /// Compiled-executable cache keyed by artifact path. Compilation happens
 /// once per (artifact, process); execution is pure Rust → PJRT.
+///
+/// Interior mutability is `Mutex`-based so `Runtime` (and `Pipeline`) are
+/// `Sync`: the engine's layer scheduler may hold `&Pipeline` inside a
+/// `Send + Sync` quantizer. Executions still serialize behind the cache
+/// lock — the PJRT adapter reports `parallel_safe() == false`, so the
+/// lock is uncontended in practice.
 pub struct Runtime {
     client: PjRtClient,
-    cache: RefCell<HashMap<String, PjRtLoadedExecutable>>,
+    cache: Mutex<HashMap<String, PjRtLoadedExecutable>>,
     /// cumulative (compile_ms, exec_ms, exec_count) for metrics
-    stats: RefCell<RuntimeStats>,
+    stats: Mutex<RuntimeStats>,
 }
 
 #[derive(Debug, Default, Clone)]
@@ -36,8 +42,8 @@ impl Runtime {
         let client = PjRtClient::cpu().context("create PJRT CPU client")?;
         Ok(Runtime {
             client,
-            cache: RefCell::new(HashMap::new()),
-            stats: RefCell::new(RuntimeStats::default()),
+            cache: Mutex::new(HashMap::new()),
+            stats: Mutex::new(RuntimeStats::default()),
         })
     }
 
@@ -46,12 +52,17 @@ impl Runtime {
     }
 
     pub fn stats(&self) -> RuntimeStats {
-        self.stats.borrow().clone()
+        self.stats.lock().unwrap().clone()
     }
 
     fn compiled(&self, path: &Path) -> Result<()> {
         let key = path.to_string_lossy().to_string();
-        if self.cache.borrow().contains_key(&key) {
+        // hold the cache lock across the compile: concurrent callers of
+        // a not-yet-cached artifact must wait, not compile it twice
+        // (check-then-insert across two lock scopes would race now that
+        // Runtime is Sync)
+        let mut cache = self.cache.lock().unwrap();
+        if cache.contains_key(&key) {
             return Ok(());
         }
         let t = Instant::now();
@@ -62,11 +73,11 @@ impl Runtime {
             .client
             .compile(&comp)
             .with_context(|| format!("compile {path:?}"))?;
-        let mut stats = self.stats.borrow_mut();
+        let mut stats = self.stats.lock().unwrap();
         stats.compile_ms += t.elapsed().as_secs_f64() * 1e3;
         stats.compilations += 1;
         drop(stats);
-        self.cache.borrow_mut().insert(key, exe);
+        cache.insert(key, exe);
         Ok(())
     }
 
@@ -76,14 +87,15 @@ impl Runtime {
     pub fn exec(&self, path: &Path, inputs: &[Literal]) -> Result<Vec<Literal>> {
         self.compiled(path)?;
         let key = path.to_string_lossy().to_string();
-        let cache = self.cache.borrow();
+        let cache = self.cache.lock().unwrap();
         let exe = cache.get(&key).expect("just compiled");
         let t = Instant::now();
         let result = exe
             .execute::<Literal>(inputs)
             .with_context(|| format!("execute {path:?}"))?[0][0]
             .to_literal_sync()?;
-        let mut stats = self.stats.borrow_mut();
+        drop(cache);
+        let mut stats = self.stats.lock().unwrap();
         stats.exec_ms += t.elapsed().as_secs_f64() * 1e3;
         stats.executions += 1;
         drop(stats);

@@ -2,6 +2,11 @@
 //!
 //! Grammar: `beacon <subcommand> [--flag value]... [--switch]...`
 //! Flags may be given as `--k v` or `--k=v`.
+//!
+//! Any `QuantConfig` key is accepted as a flag and routed through
+//! [`crate::config::QuantConfig::apply_flags`]; notably `--threads N`
+//! sets the layer/channel scheduler budget (0 = auto, overriding the
+//! `BEACON_THREADS` env var when nonzero).
 
 use std::collections::BTreeMap;
 
@@ -107,6 +112,15 @@ mod tests {
         let a = parse("report table1 table2");
         assert_eq!(a.subcommand.as_deref(), Some("report"));
         assert_eq!(a.positional, vec!["table1", "table2"]);
+    }
+
+    #[test]
+    fn threads_flag_reaches_quant_config() {
+        let a = parse("quantize --threads 4 --bits 2");
+        let mut qc = crate::config::QuantConfig::default();
+        qc.apply_flags(&a.flags, &a.switches).unwrap();
+        assert_eq!(qc.threads, 4);
+        assert_eq!(qc.bits, 2.0);
     }
 
     #[test]

@@ -60,7 +60,13 @@ fn pjrt_kernel_matches_native_twin() {
     let f = qr_factor(x, x);
     let a = alphabet(BitWidth::B2);
     let lq_native = beacon_layer_prefactored(
-        &f.l, &f.r, x, x, &w, &a, &BeaconOpts { loops: 4, centering: false },
+        &f.l,
+        &f.r,
+        x,
+        x,
+        &w,
+        &a,
+        &BeaconOpts { loops: 4, centering: false, ..Default::default() },
     );
 
     // same tie-break contract: identical codes except at rare f32/f64

@@ -1,0 +1,159 @@
+//! Equivalence properties of the `Quantizer` trait layer (no artifacts
+//! needed — pure native kernels):
+//!
+//! 1. every `Quantizer` impl is bit-identical to the legacy free function
+//!    it wraps (`beacon_layer` / `gptq_layer` / `rtn_layer` / `comq_layer`),
+//! 2. the parallel scheduler matches the serial path bit-for-bit at
+//!    `threads ∈ {1, 4}`, on both the channel axis and the layer axis.
+
+use beacon_ptq::config::{Method, QuantConfig};
+use beacon_ptq::data::rng::SplitMix64;
+use beacon_ptq::linalg::Matrix;
+use beacon_ptq::quant::alphabet::{alphabet, BitWidth};
+use beacon_ptq::quant::beacon::{beacon_layer, BeaconOpts};
+use beacon_ptq::quant::engine::{self, LayerCtx, LayerQuant};
+use beacon_ptq::quant::{comq_layer, gptq_layer, rtn_layer};
+use beacon_ptq::util::prop::Gen;
+
+fn case(seed: u64, m: usize, n: usize, np: usize) -> (Matrix, Matrix) {
+    let mut g = Gen { rng: SplitMix64::new(seed) };
+    let x = Matrix::from_vec(m, n, g.vec_normal(m * n, 1.0));
+    let w = Matrix::from_vec(n, np, g.vec_normal(n * np, 0.3));
+    (x, w)
+}
+
+fn qc(method: Method, bits: f64, loops: usize) -> QuantConfig {
+    QuantConfig { method, bits, loops, ..QuantConfig::default() }
+}
+
+fn assert_layer_quant_eq(a: &LayerQuant, b: &LayerQuant, what: &str) {
+    assert_eq!(a.codes, b.codes, "{what}: codes differ");
+    assert_eq!(a.scales, b.scales, "{what}: scales differ");
+    assert_eq!(a.offsets, b.offsets, "{what}: offsets differ");
+    assert_eq!(a.dequant.data, b.dequant.data, "{what}: dequant differs");
+}
+
+#[test]
+fn beacon_quantizer_matches_legacy_free_function() {
+    for (seed, centering) in [(1u64, false), (2, true), (3, false)] {
+        let (x, w) = case(seed, 48, 10, 6);
+        let c = QuantConfig { centering, ..qc(Method::Beacon, 2.0, 3) };
+        let lq = Method::Beacon
+            .quantizer(&c)
+            .quantize_layer(&LayerCtx::plain(&x, &w, 1))
+            .unwrap();
+        let legacy = beacon_layer(
+            &x,
+            &x,
+            &w,
+            &alphabet(BitWidth::B2),
+            &BeaconOpts { loops: 3, centering, threads: 1 },
+        );
+        assert_layer_quant_eq(&lq, &legacy, &format!("seed {seed}"));
+    }
+}
+
+#[test]
+fn grid_quantizers_match_legacy_free_functions() {
+    for seed in [4u64, 5] {
+        let (x, w) = case(seed, 64, 12, 5);
+        for bits in [BitWidth::B2, BitWidth::B3] {
+            let rtn = Method::Rtn
+                .quantizer(&qc(Method::Rtn, bits.0, 0))
+                .quantize_layer(&LayerCtx::plain(&x, &w, 1))
+                .unwrap();
+            assert_eq!(
+                rtn.dequant.data,
+                rtn_layer(&w, bits).data,
+                "rtn seed {seed}"
+            );
+
+            let gptq = Method::Gptq
+                .quantizer(&qc(Method::Gptq, bits.0, 0))
+                .quantize_layer(&LayerCtx::plain(&x, &w, 1))
+                .unwrap();
+            assert_eq!(
+                gptq.dequant.data,
+                gptq_layer(&x, &w, bits, 0.01).data,
+                "gptq seed {seed}"
+            );
+
+            let comq = Method::Comq
+                .quantizer(&qc(Method::Comq, bits.0, 3))
+                .quantize_layer(&LayerCtx::plain(&x, &w, 1))
+                .unwrap();
+            assert_eq!(
+                comq.dequant.data,
+                comq_layer(&x, &w, bits, 3).data,
+                "comq seed {seed}"
+            );
+        }
+    }
+}
+
+#[test]
+fn channel_fanout_is_bit_identical_across_thread_counts() {
+    let (x, w) = case(6, 64, 12, 8);
+    for method in [Method::Beacon, Method::Gptq, Method::Rtn, Method::Comq] {
+        let q = method.quantizer(&qc(method, 2.0, 3));
+        let serial = q.quantize_layer(&LayerCtx::plain(&x, &w, 1)).unwrap();
+        let par = q.quantize_layer(&LayerCtx::plain(&x, &w, 4)).unwrap();
+        assert_layer_quant_eq(&par, &serial, method.name());
+    }
+}
+
+#[test]
+fn layer_scheduler_matches_serial_path() {
+    // 5 independent "layers" of different shapes, as the non-EC pipeline
+    // fans them: results must be bit-identical to the sequential loop at
+    // threads ∈ {1, 4} and for every method.
+    let layers: Vec<(Matrix, Matrix)> = vec![
+        case(10, 48, 8, 5),
+        case(11, 48, 8, 3),
+        case(12, 40, 6, 6),
+        case(13, 56, 10, 4),
+        case(14, 48, 8, 5),
+    ];
+    for method in [Method::Beacon, Method::Rtn, Method::Comq, Method::Gptq] {
+        let q = method.quantizer(&qc(method, 2.0, 2));
+        let serial: Vec<LayerQuant> = layers
+            .iter()
+            .map(|(x, w)| q.quantize_layer(&LayerCtx::plain(x, w, 1)).unwrap())
+            .collect();
+        for threads in [1usize, 4] {
+            let sched = engine::plan(threads, layers.len(), q.parallel_safe());
+            let par: Vec<LayerQuant> =
+                engine::run_layers(sched, layers.len(), |li| {
+                    let (x, w) = &layers[li];
+                    q.quantize_layer(&LayerCtx::plain(
+                        x,
+                        w,
+                        sched.channel_threads,
+                    ))
+                })
+                .unwrap();
+            assert_eq!(par.len(), serial.len());
+            for (li, (p, s)) in par.iter().zip(&serial).enumerate() {
+                assert_layer_quant_eq(
+                    p,
+                    s,
+                    &format!("{} layer {li} threads {threads}", method.name()),
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn beacon_threads_env_parity_shape() {
+    // The BEACON_THREADS env var flows through resolve_threads(0); an
+    // explicit ctx budget must override nothing about the numbers — only
+    // the wall clock. (Direct bitwise check at 2 and 4 workers.)
+    let (x, w) = case(15, 80, 16, 12);
+    let q = Method::Beacon.quantizer(&qc(Method::Beacon, 1.58, 4));
+    let base = q.quantize_layer(&LayerCtx::plain(&x, &w, 1)).unwrap();
+    for threads in [2usize, 4] {
+        let other = q.quantize_layer(&LayerCtx::plain(&x, &w, threads)).unwrap();
+        assert_layer_quant_eq(&other, &base, &format!("threads {threads}"));
+    }
+}

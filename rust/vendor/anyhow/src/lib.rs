@@ -1,0 +1,200 @@
+//! Vendored minimal stand-in for the `anyhow` crate (the build
+//! environment is offline — see the root Cargo.toml note). Implements
+//! exactly the surface this repository uses:
+//!
+//! * [`Error`] / [`Result`] with context-chain display (`{e}` prints the
+//!   outermost message, `{e:#}` the full `outer: inner: ...` chain,
+//!   `{e:?}` an anyhow-style "Caused by" listing),
+//! * blanket `From<E: std::error::Error>` so `?` converts any std error,
+//! * the [`Context`] extension trait on `Result` and `Option`,
+//! * the [`anyhow!`], [`bail!`] and [`ensure!`] macros.
+//!
+//! Drop-in replaceable by the real crate: no API here deviates from
+//! anyhow 1.x semantics for the forms used.
+
+use std::fmt;
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A context-carrying error. Deliberately does NOT implement
+/// `std::error::Error`, which is what makes the blanket `From` sound
+/// (same trick as the real anyhow).
+pub struct Error {
+    /// context frames, outermost first
+    frames: Vec<String>,
+}
+
+impl Error {
+    pub fn msg<M: fmt::Display>(m: M) -> Error {
+        Error { frames: vec![m.to_string()] }
+    }
+
+    /// Wrap with an outer context frame (used by [`Context`]).
+    pub fn context<C: fmt::Display>(mut self, c: C) -> Error {
+        self.frames.insert(0, c.to_string());
+        self
+    }
+
+    /// The context chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.frames.iter().map(|s| s.as_str())
+    }
+
+    /// The outermost message (what `{}` prints).
+    pub fn root_cause_message(&self) -> &str {
+        self.frames.last().map(|s| s.as_str()).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.frames.first().map(|s| s.as_str()).unwrap_or(""))?;
+        if f.alternate() {
+            for frame in &self.frames[1..] {
+                write!(f, ": {frame}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.frames.first().map(|s| s.as_str()).unwrap_or(""))?;
+        if self.frames.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for frame in &self.frames[1..] {
+                write!(f, "\n    {frame}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Error {
+        let mut frames = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            frames.push(s.to_string());
+            src = s.source();
+        }
+        Error { frames }
+    }
+}
+
+/// Context extension for `Result` and `Option`, mirroring anyhow's.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.into().context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::Error::msg(format!(
+                "Condition failed: `{}`",
+                stringify!($cond)
+            )));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing file")
+    }
+
+    #[test]
+    fn display_plain_and_alternate() {
+        let e: Error = Err::<(), _>(io_err())
+            .context("loading manifest")
+            .unwrap_err();
+        assert_eq!(e.to_string(), "loading manifest");
+        assert_eq!(format!("{e:#}"), "loading manifest: missing file");
+        assert!(format!("{e:?}").contains("Caused by"));
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.context("no value").unwrap_err();
+        assert_eq!(e.to_string(), "no value");
+    }
+
+    #[test]
+    fn macros_work() {
+        fn inner(fail: bool, n: usize) -> Result<usize> {
+            ensure!(n < 10, "n too big: {n}");
+            ensure!(n != 7);
+            if fail {
+                bail!("failing as requested");
+            }
+            Ok(n)
+        }
+        assert_eq!(inner(false, 3).unwrap(), 3);
+        assert_eq!(inner(true, 3).unwrap_err().to_string(), "failing as requested");
+        assert_eq!(inner(false, 12).unwrap_err().to_string(), "n too big: 12");
+        assert!(inner(false, 7).unwrap_err().to_string().contains("n != 7"));
+        let e = anyhow!("x = {}", 5);
+        assert_eq!(e.to_string(), "x = 5");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn parse(s: &str) -> Result<i32> {
+            Ok(s.parse::<i32>()?)
+        }
+        assert_eq!(parse("42").unwrap(), 42);
+        assert!(parse("nope").is_err());
+    }
+}

@@ -1,0 +1,214 @@
+//! Vendored interface stub for the `xla` crate (xla-rs PJRT bindings).
+//!
+//! The offline build environment does not carry the xla_extension C++
+//! runtime, so this crate provides the exact API surface the coordinator
+//! uses, with real in-memory [`Literal`] semantics (those are pure data)
+//! and compile/execute entry points that fail with an actionable error.
+//! Everything that never touches PJRT — the native quantizers, the whole
+//! engine/scheduler layer, linalg, unit + property tests — builds and
+//! runs against this stub; artifact execution requires swapping in the
+//! real crate (root Cargo.toml `[dependencies] xla`).
+//!
+//! All types here are plain data (no FFI handles), so they are `Send +
+//! Sync` — which the coordinator's `Sync` `Runtime` relies on.
+
+use std::fmt;
+use std::path::Path;
+
+/// Stub error type; implements `std::error::Error` so `?` converts into
+/// the caller's error type.
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla stub: {}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>(what: &str) -> Result<T> {
+    Err(Error(format!(
+        "{what} requires the real xla_extension runtime — this build links \
+         the vendored interface stub (see root Cargo.toml)"
+    )))
+}
+
+/// Element types the coordinator moves through literals.
+pub trait NativeType: Copy {
+    fn wrap(v: &[Self]) -> Data;
+    fn unwrap(d: &Data) -> Option<Vec<Self>>;
+}
+
+#[derive(Debug, Clone)]
+pub enum Data {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    Tuple(Vec<Literal>),
+}
+
+impl NativeType for f32 {
+    fn wrap(v: &[f32]) -> Data {
+        Data::F32(v.to_vec())
+    }
+    fn unwrap(d: &Data) -> Option<Vec<f32>> {
+        match d {
+            Data::F32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn wrap(v: &[i32]) -> Data {
+        Data::I32(v.to_vec())
+    }
+    fn unwrap(d: &Data) -> Option<Vec<i32>> {
+        match d {
+            Data::I32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+}
+
+/// An in-memory literal: element buffer + dims. Fully functional (these
+/// are pure data and the unit tests exercise them).
+#[derive(Debug, Clone)]
+pub struct Literal {
+    data: Data,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    pub fn vec1<T: NativeType>(v: &[T]) -> Literal {
+        Literal { data: T::wrap(v), dims: vec![v.len() as i64] }
+    }
+
+    pub fn element_count(&self) -> usize {
+        match &self.data {
+            Data::F32(v) => v.len(),
+            Data::I32(v) => v.len(),
+            Data::Tuple(v) => v.len(),
+        }
+    }
+
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let numel: i64 = dims.iter().product();
+        if numel as usize != self.element_count() {
+            return Err(Error(format!(
+                "reshape {:?} -> {dims:?}: element count mismatch",
+                self.dims
+            )));
+        }
+        Ok(Literal { data: self.data.clone(), dims: dims.to_vec() })
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::unwrap(&self.data)
+            .ok_or_else(|| Error("literal element type mismatch".into()))
+    }
+
+    pub fn get_first_element<T: NativeType>(&self) -> Result<T> {
+        self.to_vec::<T>()?
+            .first()
+            .copied()
+            .ok_or_else(|| Error("empty literal".into()))
+    }
+
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        match self.data {
+            Data::Tuple(v) => Ok(v),
+            _ => Err(Error("literal is not a tuple".into())),
+        }
+    }
+}
+
+impl From<f32> for Literal {
+    fn from(v: f32) -> Literal {
+        Literal { data: Data::F32(vec![v]), dims: vec![] }
+    }
+}
+
+/// Parsed HLO module handle (opaque in the stub).
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file<P: AsRef<Path>>(_path: P) -> Result<HloModuleProto> {
+        unavailable("parsing HLO text artifacts")
+    }
+}
+
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// PJRT client handle. Construction succeeds (so pipelines can be built
+/// and introspected); compilation/execution report the stub.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient)
+    }
+
+    pub fn platform_name(&self) -> String {
+        "cpu-stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable("compiling computations")
+    }
+}
+
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("executing computations")
+    }
+}
+
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable("device-to-host transfers")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_and_reshape() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        assert_eq!(l.element_count(), 4);
+        let r = l.reshape(&[2, 2]).unwrap();
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(l.reshape(&[3]).is_err());
+        assert!(l.to_vec::<i32>().is_err());
+    }
+
+    #[test]
+    fn scalar_from_f32() {
+        let l = Literal::from(0.05f32);
+        assert_eq!(l.get_first_element::<f32>().unwrap(), 0.05);
+    }
+
+    #[test]
+    fn runtime_surface_reports_stub() {
+        let client = PjRtClient::cpu().unwrap();
+        assert_eq!(client.platform_name(), "cpu-stub");
+        let err = client.compile(&XlaComputation::from_proto(&HloModuleProto)).unwrap_err();
+        assert!(err.to_string().contains("xla stub"));
+        assert!(HloModuleProto::from_text_file("x.hlo").is_err());
+    }
+}
