@@ -30,8 +30,11 @@ fn main() -> anyhow::Result<()> {
     );
     println!("csv: bits,rtn,gptq,comq,beacon,beacon_full");
     for (bits, loops) in grid {
+        // each sweep point is a uniform QuantPlan compiled from the flat
+        // config — the same compilation the quantize_cfg shim performs
         let run = |pipe: &mut Pipeline, qc: QuantConfig| -> anyhow::Result<f64> {
-            Ok(pipe.quantize(&qc)?.top1)
+            let plan = pipe.uniform_plan(&qc)?;
+            Ok(pipe.quantize(&plan)?.top1)
         };
         let rtn = run(&mut pipe, QuantConfig {
             method: Method::Rtn, bits: bits.0, ..QuantConfig::default()

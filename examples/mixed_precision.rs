@@ -1,0 +1,48 @@
+//! Mixed precision + mixed method through the plan API: attention
+//! projections (qkv/proj) at 2-bit Beacon, MLP layers (fc1/fc2) at
+//! 4-bit COMQ — the configuration LeanQuant/COMQ-style loss-aware
+//! assignment would pick when attention tolerates aggressive widths but
+//! the MLP does not.
+//!
+//! Prints the resolved per-layer table, the effective bits/weight, and
+//! the plan manifest that reproduces the run from one file.
+//!
+//! ```bash
+//! cargo run --release --example mixed_precision
+//! ```
+
+use beacon_ptq::config::{PlanBuilder, QuantConfig};
+use beacon_ptq::coordinator::report::plan_table;
+use beacon_ptq::coordinator::Pipeline;
+
+fn main() -> anyhow::Result<()> {
+    let mut pipe = Pipeline::from_artifacts("artifacts", "tiny-sim")?;
+
+    // Base config: 2-bit Beacon everywhere. Overrides are ordered globs,
+    // last match wins — the MLP patterns re-route fc1/fc2 to 4-bit COMQ.
+    let base = QuantConfig { bits: 2.0, loops: 4, ..QuantConfig::default() };
+    let plan = PlanBuilder::uniform(&base)
+        .override_layers("blocks.*.qkv.w", "beacon:2")?
+        .override_layers("blocks.*.proj.w", "beacon:2")?
+        .override_layers("blocks.*.fc?.w", "comq:4+loops=4")?
+        .build(pipe.quantizable())?;
+
+    println!("plan label: {}", plan.label());
+    println!(
+        "effective bits/weight: {:.3}\n",
+        plan.effective_bits(|name| pipe.weights_fp.get(name).numel())
+    );
+
+    let report = pipe.quantize(&plan)?;
+    println!("{}", plan_table(&report).render());
+    println!("FP top-1    : {:.2}%", report.fp_top1 * 100.0);
+    println!("mixed top-1 : {:.2}%  (drop {:.2}%)",
+        report.top1 * 100.0, report.accuracy_drop());
+
+    // every run reproducible from one file: `beacon quantize --config` or
+    // QuantPlan::from_file() rebuilds this exact plan
+    let out = "artifacts/plan__tiny-sim_mixed.cfg";
+    std::fs::write(out, plan.to_manifest())?;
+    println!("\nwrote resolved plan manifest to {out}");
+    Ok(())
+}

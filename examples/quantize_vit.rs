@@ -14,6 +14,7 @@
 
 use beacon_ptq::config::{Method, QuantConfig};
 use beacon_ptq::coordinator::Pipeline;
+use beacon_ptq::quant::engine::Quantizer as _;
 use beacon_ptq::quant::packing::{pack_channel, packed_bytes};
 
 fn main() -> anyhow::Result<()> {
@@ -49,14 +50,19 @@ fn main() -> anyhow::Result<()> {
     println!(
         "\nquantizing with {} (dispatch: dyn Quantizer `{}`) ...",
         qc.label(),
-        qc.method.quantizer(&qc).name()
+        qc.method.quantizer(qc.bit_width()?, &qc).name()
     );
-    let (report, store) = pipe.quantize_with_weights(&qc)?;
+    let (report, store) = pipe.quantize_cfg_with_weights(&qc)?;
 
     println!("\nper-layer relative reconstruction error (eq. 1):");
-    for (name, e) in &report.layer_errors {
-        let bar = "#".repeat((e * 200.0) as usize);
-        println!("  {name:<20} {e:.4} {bar}");
+    for row in &report.layers {
+        let bar = "#".repeat((row.error * 200.0) as usize);
+        println!(
+            "  {:<20} {:<14} {:.4} {bar}",
+            row.layer,
+            format!("{}-{}", row.method.name(), row.bits.label()),
+            row.error
+        );
     }
     if !report.ln_tune_losses.is_empty() {
         let l = &report.ln_tune_losses;
@@ -84,7 +90,7 @@ fn main() -> anyhow::Result<()> {
     let lname = &m.quantizable[0];
     let w = pipe.weights_fp.matrix(lname);
     let lq = pipe.beacon_layer(&qc, &acts[0], &acts[0], &w)?;
-    let width = qc.bit_width();
+    let width = qc.bit_width()?;
     let mut packed = 0usize;
     for (j, codes) in lq.codes.iter().enumerate() {
         packed += packed_bytes(&pack_channel(codes, lq.scales[j], lq.offsets[j], width));

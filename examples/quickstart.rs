@@ -1,12 +1,12 @@
 //! Quickstart: quantize the bundled model to 2 bits with Beacon and
-//! evaluate — the five-line happy path of the public API.
+//! evaluate — the happy path of the plan API.
 //!
 //! ```bash
 //! make artifacts                      # once: build AOT bundle + weights
 //! cargo run --release --example quickstart
 //! ```
 
-use beacon_ptq::config::QuantConfig;
+use beacon_ptq::config::{PlanBuilder, QuantConfig};
 use beacon_ptq::coordinator::Pipeline;
 
 fn main() -> anyhow::Result<()> {
@@ -20,10 +20,16 @@ fn main() -> anyhow::Result<()> {
     // the core count); any thread count gives bit-identical results.
     let cfg = QuantConfig { bits: 2.0, loops: 4, threads: 0, ..QuantConfig::default() };
 
-    let report = pipe.quantize(&cfg)?;
+    // Compile the config into a per-layer plan. A uniform build is the
+    // flat-config path; chain `.override_layers(pattern, spec)?` here to
+    // mix methods/bit widths per layer (see examples/mixed_precision.rs).
+    let plan = PlanBuilder::uniform(&cfg).build(pipe.quantizable())?;
+
+    let report = pipe.quantize(&plan)?;
     println!("FP top-1        : {:.2}%", report.fp_top1 * 100.0);
     println!("2-bit top-1     : {:.2}%", report.top1 * 100.0);
     println!("accuracy drop   : {:.2}%", report.accuracy_drop());
+    println!("effective bits  : {:.2} / weight", report.effective_bits);
     println!("quantize wall   : {:.2}s", report.quantize_secs);
     Ok(())
 }

@@ -31,7 +31,7 @@ fn main() -> anyhow::Result<()> {
     } else {
         println!("no checkpoint found — quantizing now (2-bit beacon)...");
         let qc = QuantConfig { bits: 2.0, loops: 4, ..QuantConfig::default() };
-        let (_, store) = pipe.quantize_with_weights(&qc)?;
+        let (_, store) = pipe.quantize_cfg_with_weights(&qc)?;
         store.save(ckpt)?;
         store
     };

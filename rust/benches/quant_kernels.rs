@@ -9,12 +9,14 @@
 //! The beacon rows time the *prefactored* layer sweep (QR hoisted out),
 //! i.e. exactly the channel fan-out the engine scheduler parallelizes.
 
+use beacon_ptq::config::{PlanBuilder, QuantConfig};
 use beacon_ptq::data::rng::SplitMix64;
 use beacon_ptq::linalg::{qr_factor, Matrix};
 use beacon_ptq::quant::alphabet::{alphabet, BitWidth};
 use beacon_ptq::quant::beacon::{
     beacon_channel, beacon_layer, beacon_layer_prefactored, BeaconOpts,
 };
+use beacon_ptq::quant::engine::{self, LayerCtx, Quantizer as _};
 use beacon_ptq::quant::{
     comq_layer, comq_layer_threads, gptq_layer, rtn_layer, rtn_layer_threads,
 };
@@ -150,6 +152,60 @@ fn main() {
         black_box(gptq_layer(&x, &w, BitWidth::B2, 0.01));
     });
     push("gptq", BitWidth::B2, 1, r.median_ns);
+
+    // --- mixed-plan rows: heterogeneous per-layer method×bits through the
+    // engine scheduler, exactly as Pipeline::quantize(&QuantPlan) fans it
+    // (attention at beacon:2, MLP at comq:4 — one tiny-sim block) --------
+    println!("\n== mixed plan (beacon:2 attn + comq:4 mlp) ==");
+    let lnames: Vec<String> = vec![
+        "blocks.0.qkv.w".into(),
+        "blocks.0.proj.w".into(),
+        "blocks.0.fc1.w".into(),
+        "blocks.0.fc2.w".into(),
+    ];
+    let shapes = [(512usize, 64usize, 192usize), (512, 64, 64), (512, 64, 128), (512, 128, 64)];
+    let cases: Vec<(Matrix, Matrix)> = shapes
+        .iter()
+        .enumerate()
+        .map(|(i, &(m, n, np))| case(40 + i as u64, m, n, np))
+        .collect();
+    let mixed_plan = PlanBuilder::uniform(&QuantConfig {
+        bits: 2.0,
+        loops: 4,
+        ..QuantConfig::default()
+    })
+    .override_layers("blocks.*.fc?.w", "comq:4")
+    .unwrap()
+    .build(&lnames)
+    .unwrap();
+    let total_channels: usize = shapes.iter().map(|&(_, _, np)| np).sum();
+    for &threads in &thread_grid {
+        let quantizers: Vec<_> = mixed_plan
+            .assignments
+            .iter()
+            .map(|a| a.quantizer(&mixed_plan.base))
+            .collect();
+        let sched = engine::plan(
+            threads,
+            cases.len(),
+            quantizers.iter().all(|q| q.parallel_safe()),
+        );
+        let r = bench(&format!("mixed plan 4 layers t={threads}"), 1, 3, || {
+            let out = engine::run_layers(sched, cases.len(), |li| {
+                let (x, w) = &cases[li];
+                quantizers[li].quantize_layer(&LayerCtx::plain(x, w, sched.channel_threads))
+            })
+            .unwrap();
+            black_box(out);
+        });
+        recs.push(Rec {
+            method: "mixed-plan",
+            bits: "2+4".to_string(),
+            threads,
+            median_ns: r.median_ns,
+            ns_per_channel: r.median_ns as f64 / total_channels as f64,
+        });
+    }
 
     let host = std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1);
     let mut s = String::new();

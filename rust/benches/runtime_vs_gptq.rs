@@ -26,7 +26,7 @@ fn main() {
         pipe.backend = backend;
         let qc = QuantConfig { bits: 2.0, loops: 4, ..QuantConfig::default() };
         let t = std::time::Instant::now();
-        let report = pipe.quantize(&qc).expect("quantize");
+        let report = pipe.quantize_cfg(&qc).expect("quantize");
         println!(
             "backend {:?}: quantize {:.2}s (top-1 {:.2}%)",
             backend,

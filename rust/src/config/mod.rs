@@ -10,6 +10,10 @@ use anyhow::{bail, Result};
 
 use crate::quant::alphabet::BitWidth;
 
+pub mod plan;
+
+pub use plan::{glob_match, LayerAssignment, LayerSpec, PlanBuilder, QuantPlan};
+
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Method {
     Beacon,
@@ -48,7 +52,7 @@ pub enum RecapturePolicy {
     PerBlock,
 }
 
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct QuantConfig {
     pub method: Method,
     pub bits: f64,
@@ -96,14 +100,22 @@ impl Default for QuantConfig {
 }
 
 impl QuantConfig {
-    pub fn bit_width(&self) -> BitWidth {
+    /// The validated bit width. Errs (rather than panicking) on an
+    /// unsupported `bits` value — reachable by direct struct construction,
+    /// which bypasses [`QuantConfig::set`] validation; plan building
+    /// ([`PlanBuilder::build`]) surfaces this error before any layer runs.
+    pub fn bit_width(&self) -> Result<BitWidth> {
         BitWidth::parse(&format!("{}", self.bits))
-            .unwrap_or_else(|| panic!("unsupported bit width {}", self.bits))
+            .ok_or_else(|| anyhow::anyhow!("unsupported bit width {}", self.bits))
     }
 
     /// Human label like "beacon-2bit+ec+centering".
     pub fn label(&self) -> String {
-        let mut s = format!("{}-{}", self.method.name(), self.bit_width().label());
+        let bits_label = match self.bit_width() {
+            Ok(b) => b.label(),
+            Err(_) => format!("{}-bit(unsupported)", self.bits),
+        };
+        let mut s = format!("{}-{}", self.method.name(), bits_label);
         if self.method == Method::Beacon {
             if self.error_correction {
                 s.push_str("+ec");
@@ -116,6 +128,35 @@ impl QuantConfig {
             }
         }
         s
+    }
+
+    /// Every config field as `(key, value)` pairs, in declaration order,
+    /// such that feeding them back through [`QuantConfig::set`]
+    /// reproduces this exact config (the `[quant]` section of a
+    /// [`QuantPlan`] manifest).
+    pub fn to_kv(&self) -> Vec<(String, String)> {
+        let kv = |k: &str, v: String| (k.to_string(), v);
+        vec![
+            kv("method", self.method.name().to_string()),
+            kv("bits", format!("{}", self.bits)),
+            kv("loops", self.loops.to_string()),
+            kv("error_correction", self.error_correction.to_string()),
+            kv("centering", self.centering.to_string()),
+            kv("ln_tune", self.ln_tune.to_string()),
+            kv("ln_tune_steps", self.ln_tune_steps.to_string()),
+            kv("ln_tune_lr", format!("{}", self.ln_tune_lr)),
+            kv("gptq_damp", format!("{}", self.gptq_damp)),
+            kv(
+                "recapture",
+                match self.recapture {
+                    RecapturePolicy::PerLayer => "layer".to_string(),
+                    RecapturePolicy::PerBlock => "block".to_string(),
+                },
+            ),
+            kv("calib_count", self.calib_count.to_string()),
+            kv("eval_count", self.eval_count.to_string()),
+            kv("threads", self.threads.to_string()),
+        ]
     }
 
     /// Apply `key = value` overrides (config-file entries or CLI flags).
@@ -206,7 +247,7 @@ impl QuantConfig {
     }
 }
 
-fn parse_bool(v: &str) -> Result<bool> {
+pub(crate) fn parse_bool(v: &str) -> Result<bool> {
     match v.to_ascii_lowercase().as_str() {
         "true" | "1" | "yes" | "on" => Ok(true),
         "false" | "0" | "no" | "off" => Ok(false),
@@ -279,6 +320,31 @@ mod tests {
         std::fs::write(&p, "not a kv line\n").unwrap();
         let e = QuantConfig::from_file(&p).unwrap_err().to_string();
         assert!(e.contains("line 1"), "{e}");
+    }
+
+    #[test]
+    fn bit_width_is_fallible_not_panicking() {
+        // direct struct construction bypasses set() validation — the old
+        // bit_width() panicked here; now the error flows to plan building
+        let c = QuantConfig { bits: 7.3, ..QuantConfig::default() };
+        assert!(c.bit_width().is_err());
+        assert!(c.label().contains("unsupported"), "{}", c.label());
+        assert_eq!(QuantConfig::default().bit_width().unwrap().0, 2.0);
+    }
+
+    #[test]
+    fn to_kv_round_trips_through_set() {
+        let mut c = QuantConfig::default();
+        c.set("method", "comq").unwrap();
+        c.set("bits", "2.58").unwrap();
+        c.set("ec", "true").unwrap();
+        c.set("recapture", "block").unwrap();
+        c.set("threads", "3").unwrap();
+        let mut back = QuantConfig::default();
+        for (k, v) in c.to_kv() {
+            back.set(&k, &v).unwrap();
+        }
+        assert_eq!(back, c);
     }
 
     #[test]

@@ -1,0 +1,704 @@
+//! The compiled per-layer quantization plan — the unit the pipeline
+//! consumes.
+//!
+//! Beacon's scale recovery is per-channel and tuning-free, which makes
+//! every layer an independent quantization decision. A [`QuantPlan`]
+//! makes that decision explicit: one resolved
+//! `(layer, method, bits, opts)` assignment per quantizable layer,
+//! compiled from [`QuantConfig`] defaults plus an ordered list of
+//! glob-style overrides (last match wins):
+//!
+//! ```no_run
+//! use beacon_ptq::config::{PlanBuilder, QuantConfig};
+//!
+//! let layers: Vec<String> = vec![/* model's quantizable layer names */];
+//! let plan = PlanBuilder::uniform(&QuantConfig::default())
+//!     .override_layers("blocks.*.qkv.w", "beacon:2+ec")
+//!     .unwrap()
+//!     .override_layers("blocks.*.fc?.w", "comq:4")
+//!     .unwrap()
+//!     .build(&layers)
+//!     .unwrap();
+//! assert_eq!(plan.assignments.len(), layers.len());
+//! ```
+//!
+//! Validation happens at `build` time, not mid-run: a pattern matching
+//! zero layers, an unsupported bit width (including one smuggled past
+//! [`QuantConfig::set`] by direct struct construction), or a malformed
+//! spec string all fail before any weight is touched.
+//!
+//! Plans serialize to a `key = value` manifest (`[quant]` base section +
+//! one `[layer "pattern"]` section per override) via
+//! [`QuantPlan::to_manifest`] / [`QuantPlan::from_manifest`], so every
+//! run — uniform or mixed — is reproducible from one file. The same
+//! format doubles as the run config file: [`PlanBuilder::from_file`]
+//! accepts both hand-written pattern sections and emitted manifests.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::quant::alphabet::BitWidth;
+
+use super::{Method, QuantConfig};
+
+/// Glob match with `*` (any run of characters, including `.`) and `?`
+/// (exactly one character). Anchored at both ends: `blocks.*.fc1.w`
+/// matches `blocks.3.fc1.w` but not `xblocks.3.fc1.w2`.
+pub fn glob_match(pattern: &str, name: &str) -> bool {
+    let p: Vec<char> = pattern.chars().collect();
+    let n: Vec<char> = name.chars().collect();
+    let (mut pi, mut ni) = (0usize, 0usize);
+    let mut star: Option<usize> = None;
+    let mut mark = 0usize;
+    while ni < n.len() {
+        if pi < p.len() && (p[pi] == '?' || p[pi] == n[ni]) {
+            pi += 1;
+            ni += 1;
+        } else if pi < p.len() && p[pi] == '*' {
+            star = Some(pi);
+            mark = ni;
+            pi += 1;
+        } else if let Some(s) = star {
+            pi = s + 1;
+            mark += 1;
+            ni = mark;
+        } else {
+            return false;
+        }
+    }
+    while pi < p.len() && p[pi] == '*' {
+        pi += 1;
+    }
+    pi == p.len()
+}
+
+/// A partial per-layer override: only the fields a spec names deviate
+/// from the base config (or from an earlier matching override).
+///
+/// Compact string form: `method[:bits][+flag]...` where flags are
+/// `ec`/`noec`, `centering`/`nocentering`, `loops=K`, `damp=F`. The
+/// method is optional when bits are given (`:4` re-bits whatever method
+/// an earlier match picked). Examples: `comq:4`, `beacon:8+centering`,
+/// `rtn`, `:2+loops=6`.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct LayerSpec {
+    pub method: Option<Method>,
+    pub bits: Option<BitWidth>,
+    pub loops: Option<usize>,
+    pub error_correction: Option<bool>,
+    pub centering: Option<bool>,
+    pub gptq_damp: Option<f64>,
+}
+
+impl LayerSpec {
+    /// Parse the compact `method[:bits][+flag]...` form.
+    pub fn parse(s: &str) -> Result<LayerSpec> {
+        let s = s.trim();
+        if s.is_empty() {
+            bail!("empty layer spec");
+        }
+        let mut spec = LayerSpec::default();
+        let mut parts = s.split('+');
+        let head = parts.next().unwrap().trim();
+        let (method_s, bits_s) = match head.split_once(':') {
+            Some((m, b)) => (m.trim(), Some(b.trim())),
+            None => (head, None),
+        };
+        if !method_s.is_empty() {
+            spec.method = Some(
+                Method::parse(method_s)
+                    .ok_or_else(|| anyhow::anyhow!("unknown method '{method_s}' in spec '{s}'"))?,
+            );
+        }
+        if let Some(b) = bits_s {
+            spec.set_key("bits", b).with_context(|| format!("in spec '{s}'"))?;
+        }
+        if spec.method.is_none() && spec.bits.is_none() {
+            bail!("layer spec '{s}' names neither a method nor a bit width");
+        }
+        for flag in parts {
+            let flag = flag.trim();
+            match flag {
+                "ec" => spec.error_correction = Some(true),
+                "noec" => spec.error_correction = Some(false),
+                "centering" => spec.centering = Some(true),
+                "nocentering" => spec.centering = Some(false),
+                _ => match flag.split_once('=') {
+                    Some((k, v)) => spec
+                        .set_key(k.trim(), v.trim())
+                        .with_context(|| format!("in spec '{s}'"))?,
+                    None => bail!("unknown flag '+{flag}' in spec '{s}'"),
+                },
+            }
+        }
+        Ok(spec)
+    }
+
+    /// Apply one `key = value` entry (the `[layer "…"]` section form).
+    pub fn set_key(&mut self, key: &str, value: &str) -> Result<()> {
+        match key {
+            "spec" => {
+                let parsed = LayerSpec::parse(value)?;
+                self.merge(&parsed);
+            }
+            "method" => {
+                self.method = Some(
+                    Method::parse(value)
+                        .ok_or_else(|| anyhow::anyhow!("unknown method '{value}'"))?,
+                )
+            }
+            "bits" => {
+                self.bits = Some(
+                    BitWidth::parse(value)
+                        .ok_or_else(|| anyhow::anyhow!("unsupported bits '{value}'"))?,
+                )
+            }
+            "loops" => self.loops = Some(value.parse().context("loops")?),
+            "error_correction" | "ec" => {
+                self.error_correction = Some(super::parse_bool(value)?)
+            }
+            "centering" => self.centering = Some(super::parse_bool(value)?),
+            "gptq_damp" | "damp" => self.gptq_damp = Some(value.parse().context("damp")?),
+            _ => bail!("unknown layer-override key '{key}'"),
+        }
+        Ok(())
+    }
+
+    /// Overlay `other`'s set fields onto self (later spec wins).
+    pub fn merge(&mut self, other: &LayerSpec) {
+        if other.method.is_some() {
+            self.method = other.method;
+        }
+        if other.bits.is_some() {
+            self.bits = other.bits;
+        }
+        if other.loops.is_some() {
+            self.loops = other.loops;
+        }
+        if other.error_correction.is_some() {
+            self.error_correction = other.error_correction;
+        }
+        if other.centering.is_some() {
+            self.centering = other.centering;
+        }
+        if other.gptq_damp.is_some() {
+            self.gptq_damp = other.gptq_damp;
+        }
+    }
+}
+
+/// One fully resolved per-layer assignment: everything the engine needs
+/// to construct the layer's quantizer.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LayerAssignment {
+    /// concrete layer name (no patterns at this stage)
+    pub layer: String,
+    pub method: Method,
+    pub bits: BitWidth,
+    pub loops: usize,
+    pub error_correction: bool,
+    pub centering: bool,
+    pub gptq_damp: f64,
+}
+
+impl LayerAssignment {
+    fn from_base(layer: &str, base: &QuantConfig) -> Result<LayerAssignment> {
+        Ok(LayerAssignment {
+            layer: layer.to_string(),
+            method: base.method,
+            bits: base.bit_width().context("base config")?,
+            loops: base.loops,
+            error_correction: base.error_correction,
+            centering: base.centering,
+            gptq_damp: base.gptq_damp,
+        })
+    }
+
+    fn apply(&mut self, spec: &LayerSpec) {
+        if let Some(m) = spec.method {
+            self.method = m;
+        }
+        if let Some(b) = spec.bits {
+            self.bits = b;
+        }
+        if let Some(l) = spec.loops {
+            self.loops = l;
+        }
+        if let Some(e) = spec.error_correction {
+            self.error_correction = e;
+        }
+        if let Some(c) = spec.centering {
+            self.centering = c;
+        }
+        if let Some(d) = spec.gptq_damp {
+            self.gptq_damp = d;
+        }
+    }
+
+    /// The assignment merged back into a full config (pipeline-level
+    /// knobs — LN tuning, recapture policy, counts, threads — come from
+    /// `base`). This is what `Method::quantizer` consumes.
+    pub fn to_config(&self, base: &QuantConfig) -> QuantConfig {
+        QuantConfig {
+            method: self.method,
+            bits: self.bits.0,
+            loops: self.loops,
+            error_correction: self.error_correction,
+            centering: self.centering,
+            gptq_damp: self.gptq_damp,
+            ..base.clone()
+        }
+    }
+
+    /// Method×bits tag used in labels and report rows ("comq-4-bit").
+    pub fn tag(&self) -> String {
+        format!("{}-{}", self.method.name(), self.bits.label())
+    }
+
+    /// Whether every method/bits/opts field equals `other`'s (the layer
+    /// name is ignored — used to detect uniform plans).
+    fn same_recipe(&self, other: &LayerAssignment) -> bool {
+        self.method == other.method
+            && self.bits == other.bits
+            && self.loops == other.loops
+            && self.error_correction == other.error_correction
+            && self.centering == other.centering
+            && self.gptq_damp == other.gptq_damp
+    }
+}
+
+/// Fluent compiler from `QuantConfig` defaults + ordered glob overrides
+/// to a validated [`QuantPlan`].
+#[derive(Debug, Clone)]
+pub struct PlanBuilder {
+    base: QuantConfig,
+    overrides: Vec<(String, LayerSpec)>,
+}
+
+impl PlanBuilder {
+    /// Start from a uniform plan: every layer gets `cfg`'s method/bits.
+    pub fn uniform(cfg: &QuantConfig) -> PlanBuilder {
+        PlanBuilder { base: cfg.clone(), overrides: Vec::new() }
+    }
+
+    pub fn base(&self) -> &QuantConfig {
+        &self.base
+    }
+
+    /// Mutable access to the defaults (CLI flag overlay, etc.).
+    pub fn base_mut(&mut self) -> &mut QuantConfig {
+        &mut self.base
+    }
+
+    pub fn overrides(&self) -> &[(String, LayerSpec)] {
+        &self.overrides
+    }
+
+    /// Append a glob override from its compact string form. Spec errors
+    /// surface here; unmatched patterns surface at [`PlanBuilder::build`].
+    pub fn add_override(&mut self, pattern: &str, spec: &str) -> Result<()> {
+        let pattern = pattern.trim();
+        if pattern.is_empty() {
+            bail!("empty layer-override pattern");
+        }
+        let parsed = LayerSpec::parse(spec)
+            .with_context(|| format!("override '{pattern}'"))?;
+        self.overrides.push((pattern.to_string(), parsed));
+        Ok(())
+    }
+
+    /// Fluent form of [`PlanBuilder::add_override`].
+    pub fn override_layers(mut self, pattern: &str, spec: &str) -> Result<PlanBuilder> {
+        self.add_override(pattern, spec)?;
+        Ok(self)
+    }
+
+    /// Parse a config file / plan manifest: `[quant]` keys feed the base
+    /// config, each `[layer "pattern"]` section appends one override
+    /// (section order preserved — last match wins at build time).
+    pub fn from_manifest_text(text: &str) -> Result<PlanBuilder> {
+        let mut builder = PlanBuilder::uniform(&QuantConfig::default());
+        // section = None → outside any recognized section; Some(None) →
+        // [quant]; Some(Some(i)) → i-th [layer "…"] override.
+        let mut section: Option<Option<usize>> = Some(None);
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+                let name = name.trim();
+                if name == "quant" {
+                    section = Some(None);
+                } else if let Some(rest) = name.strip_prefix("layer") {
+                    let pat = rest
+                        .trim()
+                        .strip_prefix('"')
+                        .and_then(|s| s.strip_suffix('"'))
+                        .map(str::trim)
+                        .filter(|s| !s.is_empty())
+                        .ok_or_else(|| {
+                            anyhow::anyhow!(
+                                "line {}: expected [layer \"pattern\"]",
+                                lineno + 1
+                            )
+                        })?;
+                    builder.overrides.push((pat.to_string(), LayerSpec::default()));
+                    section = Some(Some(builder.overrides.len() - 1));
+                } else {
+                    section = None; // unknown section: ignored, like QuantConfig::from_file
+                }
+                continue;
+            }
+            let Some(target) = section else { continue };
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| anyhow::anyhow!("line {}: expected key = value", lineno + 1))?;
+            let (k, v) = (k.trim(), v.trim());
+            match target {
+                None => builder
+                    .base
+                    .set(k, v)
+                    .with_context(|| format!("line {}", lineno + 1))?,
+                Some(i) => builder.overrides[i]
+                    .1
+                    .set_key(k, v)
+                    .with_context(|| format!("line {}", lineno + 1))?,
+            }
+        }
+        // a [layer] section with no keys resolves nothing — reject early
+        for (pat, spec) in &builder.overrides {
+            if *spec == LayerSpec::default() {
+                bail!("[layer \"{pat}\"] section sets no keys");
+            }
+        }
+        Ok(builder)
+    }
+
+    /// [`PlanBuilder::from_manifest_text`] over a file path.
+    pub fn from_file(path: &Path) -> Result<PlanBuilder> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read {}", path.display()))?;
+        PlanBuilder::from_manifest_text(&text)
+            .with_context(|| format!("parse {}", path.display()))
+    }
+
+    /// Compile against a model's quantizable layer list. Build-time
+    /// validation: the base bit width must be supported (even when set by
+    /// direct struct construction) and every override pattern must match
+    /// at least one layer.
+    pub fn build(&self, layers: &[String]) -> Result<QuantPlan> {
+        if layers.is_empty() {
+            bail!("cannot build a plan for zero quantizable layers");
+        }
+        let mut matched = vec![false; self.overrides.len()];
+        let mut assignments = Vec::with_capacity(layers.len());
+        for layer in layers {
+            let mut a = LayerAssignment::from_base(layer, &self.base)?;
+            for (oi, (pat, spec)) in self.overrides.iter().enumerate() {
+                if glob_match(pat, layer) {
+                    a.apply(spec);
+                    matched[oi] = true;
+                }
+            }
+            assignments.push(a);
+        }
+        for (oi, (pat, _)) in self.overrides.iter().enumerate() {
+            if !matched[oi] {
+                bail!(
+                    "layer override '{pat}' matches none of the {} quantizable layers \
+                     (e.g. '{}')",
+                    layers.len(),
+                    layers[0]
+                );
+            }
+        }
+        Ok(QuantPlan { base: self.base.clone(), assignments })
+    }
+}
+
+/// A resolved, validated per-layer quantization plan — what
+/// [`crate::coordinator::Pipeline::quantize`] consumes. Assignments are
+/// in pipeline (forward) order, one per quantizable layer.
+#[derive(Debug, Clone, PartialEq)]
+pub struct QuantPlan {
+    /// pipeline-level knobs (LN tuning, recapture policy, calib/eval
+    /// counts, thread budget) + the defaults the assignments resolved from
+    pub base: QuantConfig,
+    pub assignments: Vec<LayerAssignment>,
+}
+
+impl QuantPlan {
+    /// Uniform plan: every layer gets `cfg`'s method/bits. This is the
+    /// compilation the legacy `quantize_cfg` shim performs.
+    pub fn uniform(cfg: &QuantConfig, layers: &[String]) -> Result<QuantPlan> {
+        PlanBuilder::uniform(cfg).build(layers)
+    }
+
+    /// The assignment for a concrete layer name, if the plan covers it.
+    pub fn assignment_for(&self, layer: &str) -> Option<&LayerAssignment> {
+        self.assignments.iter().find(|a| a.layer == layer)
+    }
+
+    /// When every layer shares one recipe, the equivalent flat config.
+    pub fn uniform_config(&self) -> Option<QuantConfig> {
+        let first = self.assignments.first()?;
+        if self.assignments.iter().all(|a| a.same_recipe(first)) {
+            Some(first.to_config(&self.base))
+        } else {
+            None
+        }
+    }
+
+    /// Human label: the legacy config label for uniform plans,
+    /// `plan[4x beacon-2-bit + 12x comq-4-bit]` for mixed ones.
+    pub fn label(&self) -> String {
+        if let Some(cfg) = self.uniform_config() {
+            return cfg.label();
+        }
+        let mut counts: BTreeMap<String, usize> = BTreeMap::new();
+        for a in &self.assignments {
+            *counts.entry(a.tag()).or_insert(0) += 1;
+        }
+        let parts: Vec<String> =
+            counts.iter().map(|(tag, n)| format!("{n}x {tag}")).collect();
+        format!("plan[{}]", parts.join(" + "))
+    }
+
+    /// Nominal bits per weight, weighted by each layer's element count
+    /// (`numel(layer name)` — e.g. `|w| store.get(w).numel()`).
+    pub fn effective_bits<F: Fn(&str) -> usize>(&self, numel: F) -> f64 {
+        let mut bits_sum = 0.0f64;
+        let mut n_sum = 0usize;
+        for a in &self.assignments {
+            let n = numel(&a.layer);
+            bits_sum += a.bits.0 * n as f64;
+            n_sum += n;
+        }
+        if n_sum == 0 {
+            0.0
+        } else {
+            bits_sum / n_sum as f64
+        }
+    }
+
+    /// Serialize to the `key = value` manifest format. The emitted file
+    /// is fully resolved — one `[layer "name"]` section per concrete
+    /// layer — so [`QuantPlan::from_manifest`] reproduces this exact plan
+    /// on the same model regardless of how it was originally built.
+    pub fn to_manifest(&self) -> String {
+        let mut s = String::new();
+        s.push_str("# beacon-ptq quantization plan (QuantPlan::to_manifest)\n");
+        s.push_str("[quant]\n");
+        for (k, v) in self.base.to_kv() {
+            let _ = writeln!(s, "{k} = {v}");
+        }
+        for a in &self.assignments {
+            let _ = writeln!(s, "\n[layer \"{}\"]", a.layer);
+            let _ = writeln!(s, "method = {}", a.method.name());
+            let _ = writeln!(s, "bits = {}", a.bits.0);
+            let _ = writeln!(s, "loops = {}", a.loops);
+            let _ = writeln!(s, "ec = {}", a.error_correction);
+            let _ = writeln!(s, "centering = {}", a.centering);
+            let _ = writeln!(s, "damp = {}", a.gptq_damp);
+        }
+        s
+    }
+
+    /// Parse a manifest (or any plan-bearing config file) and compile it
+    /// against `layers`. Round-trip identity:
+    /// `QuantPlan::from_manifest(&plan.to_manifest(), layers) == plan`.
+    pub fn from_manifest(text: &str, layers: &[String]) -> Result<QuantPlan> {
+        PlanBuilder::from_manifest_text(text)?.build(layers)
+    }
+
+    /// [`QuantPlan::from_manifest`] over a file path.
+    pub fn from_file(path: &Path, layers: &[String]) -> Result<QuantPlan> {
+        PlanBuilder::from_file(path)?.build(layers)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn layers() -> Vec<String> {
+        vec![
+            "blocks.0.qkv.w".into(),
+            "blocks.0.proj.w".into(),
+            "blocks.0.fc1.w".into(),
+            "blocks.0.fc2.w".into(),
+            "blocks.1.qkv.w".into(),
+            "blocks.1.proj.w".into(),
+            "blocks.1.fc1.w".into(),
+            "blocks.1.fc2.w".into(),
+        ]
+    }
+
+    #[test]
+    fn glob_basics() {
+        assert!(glob_match("blocks.*.fc1.w", "blocks.3.fc1.w"));
+        assert!(glob_match("*", "anything.at.all"));
+        assert!(glob_match("blocks.?.fc?.w", "blocks.0.fc2.w"));
+        assert!(glob_match("blocks.*", "blocks.11.qkv.w"));
+        assert!(!glob_match("blocks.?.fc1.w", "blocks.10.fc1.w"));
+        assert!(!glob_match("blocks.*.fc1.w", "blocks.3.fc2.w"));
+        assert!(!glob_match("locks.*", "blocks.0.qkv.w"));
+        assert!(glob_match("*.w", "head.w"));
+        assert!(!glob_match("*.w", "head.b"));
+        assert!(glob_match("head.w", "head.w"));
+    }
+
+    #[test]
+    fn spec_parse_forms() {
+        let s = LayerSpec::parse("comq:4").unwrap();
+        assert_eq!(s.method, Some(Method::Comq));
+        assert_eq!(s.bits.unwrap().0, 4.0);
+        let s = LayerSpec::parse("beacon:8+centering+loops=6").unwrap();
+        assert_eq!(s.method, Some(Method::Beacon));
+        assert_eq!(s.bits.unwrap().0, 8.0);
+        assert_eq!(s.loops, Some(6));
+        assert_eq!(s.centering, Some(true));
+        let s = LayerSpec::parse(":2+ec").unwrap();
+        assert_eq!(s.method, None);
+        assert_eq!(s.bits.unwrap().0, 2.0);
+        assert_eq!(s.error_correction, Some(true));
+        let s = LayerSpec::parse("rtn").unwrap();
+        assert_eq!(s.method, Some(Method::Rtn));
+        assert_eq!(s.bits, None);
+        let s = LayerSpec::parse("gptq:3+damp=0.05+noec").unwrap();
+        assert_eq!(s.gptq_damp, Some(0.05));
+        assert_eq!(s.error_correction, Some(false));
+    }
+
+    #[test]
+    fn spec_parse_rejects_garbage() {
+        assert!(LayerSpec::parse("").is_err());
+        assert!(LayerSpec::parse("awq:4").is_err());
+        assert!(LayerSpec::parse("beacon:7.3").is_err());
+        assert!(LayerSpec::parse("beacon:2+bogus").is_err());
+        assert!(LayerSpec::parse("+ec").is_err());
+    }
+
+    #[test]
+    fn build_uniform_covers_all_layers() {
+        let cfg = QuantConfig::default();
+        let plan = QuantPlan::uniform(&cfg, &layers()).unwrap();
+        assert_eq!(plan.assignments.len(), layers().len());
+        assert!(plan.uniform_config().is_some());
+        assert_eq!(plan.label(), cfg.label());
+        for a in &plan.assignments {
+            assert_eq!(a.method, Method::Beacon);
+            assert_eq!(a.bits.0, 2.0);
+        }
+    }
+
+    #[test]
+    fn last_match_wins_and_field_merge() {
+        let plan = PlanBuilder::uniform(&QuantConfig::default())
+            .override_layers("blocks.*", "comq:4")
+            .unwrap()
+            .override_layers("blocks.1.*", ":3")
+            .unwrap()
+            .override_layers("blocks.1.fc2.w", "rtn")
+            .unwrap()
+            .build(&layers())
+            .unwrap();
+        // untouched by later overrides
+        let a = plan.assignment_for("blocks.0.qkv.w").unwrap();
+        assert_eq!((a.method, a.bits.0), (Method::Comq, 4.0));
+        // ":3" re-bits but keeps the comq method from the earlier match
+        let a = plan.assignment_for("blocks.1.qkv.w").unwrap();
+        assert_eq!((a.method, a.bits.0), (Method::Comq, 3.0));
+        // "rtn" swaps method but keeps the 3-bit width from ":3"
+        let a = plan.assignment_for("blocks.1.fc2.w").unwrap();
+        assert_eq!((a.method, a.bits.0), (Method::Rtn, 3.0));
+        assert!(plan.uniform_config().is_none());
+        assert!(plan.label().starts_with("plan["), "{}", plan.label());
+    }
+
+    #[test]
+    fn build_rejects_unmatched_pattern() {
+        let e = PlanBuilder::uniform(&QuantConfig::default())
+            .override_layers("head.w", "beacon:8")
+            .unwrap()
+            .build(&layers())
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("head.w"), "{e}");
+    }
+
+    #[test]
+    fn build_rejects_bad_base_bits() {
+        // direct struct construction bypasses set() validation; the plan
+        // build must catch it instead of panicking mid-run
+        let cfg = QuantConfig { bits: 7.3, ..QuantConfig::default() };
+        let e = QuantPlan::uniform(&cfg, &layers()).unwrap_err();
+        let chain = format!("{e:#}");
+        assert!(chain.contains("7.3"), "{chain}");
+    }
+
+    #[test]
+    fn manifest_round_trip_mixed() {
+        let plan = PlanBuilder::uniform(&QuantConfig::default())
+            .override_layers("blocks.*.fc?.w", "comq:4+loops=5")
+            .unwrap()
+            .override_layers("blocks.1.qkv.w", "gptq:3+damp=0.02")
+            .unwrap()
+            .build(&layers())
+            .unwrap();
+        let text = plan.to_manifest();
+        let back = QuantPlan::from_manifest(&text, &layers()).unwrap();
+        assert_eq!(back, plan);
+    }
+
+    #[test]
+    fn manifest_pattern_sections_compile() {
+        let text = "\
+[quant]
+method = beacon
+bits = 2
+loops = 4
+
+[layer \"blocks.*.fc1.w\"]
+spec = comq:4
+
+[layer \"blocks.1.*\"]
+method = rtn
+bits = 3
+";
+        let plan = QuantPlan::from_manifest(text, &layers()).unwrap();
+        let a = plan.assignment_for("blocks.0.fc1.w").unwrap();
+        assert_eq!((a.method, a.bits.0), (Method::Comq, 4.0));
+        let a = plan.assignment_for("blocks.1.fc1.w").unwrap();
+        assert_eq!((a.method, a.bits.0), (Method::Rtn, 3.0));
+        let a = plan.assignment_for("blocks.0.qkv.w").unwrap();
+        assert_eq!((a.method, a.bits.0), (Method::Beacon, 2.0));
+    }
+
+    #[test]
+    fn manifest_rejects_empty_layer_section() {
+        let text = "[quant]\nbits = 2\n\n[layer \"blocks.*\"]\n";
+        assert!(PlanBuilder::from_manifest_text(text).is_err());
+        let bad = "[layer blocks.*]\nspec = rtn\n";
+        assert!(PlanBuilder::from_manifest_text(bad).is_err());
+    }
+
+    #[test]
+    fn effective_bits_weighted() {
+        let plan = PlanBuilder::uniform(&QuantConfig::default())
+            .override_layers("blocks.*.fc?.w", ":4")
+            .unwrap()
+            .build(&layers())
+            .unwrap();
+        // qkv/proj at 2 bits, fc1/fc2 at 4 bits; equal sizes → mean 3.0
+        let eb = plan.effective_bits(|_| 100);
+        assert!((eb - 3.0).abs() < 1e-12, "{eb}");
+        // size-weighted: fc layers 3x larger → (2·2 + 4·2·3)/(2+6) = 3.5
+        let eb = plan.effective_bits(|name| if name.contains(".fc") { 300 } else { 100 });
+        assert!((eb - 3.5).abs() < 1e-12, "{eb}");
+    }
+}

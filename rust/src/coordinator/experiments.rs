@@ -49,10 +49,10 @@ pub fn table1(
             ln_tune: ln,
             ..QuantConfig::default()
         };
-        let plain = pipe.quantize(&mk(false, false, false))?.top1;
-        let ec = pipe.quantize(&mk(true, false, false))?.top1;
-        let cent = pipe.quantize(&mk(true, true, false))?.top1;
-        let ln = pipe.quantize(&mk(true, true, true))?.top1;
+        let plain = pipe.quantize_cfg(&mk(false, false, false))?.top1;
+        let ec = pipe.quantize_cfg(&mk(true, false, false))?.top1;
+        let cent = pipe.quantize_cfg(&mk(true, true, false))?.top1;
+        let ln = pipe.quantize_cfg(&mk(true, true, true))?.top1;
         table.row(vec![
             format!("{}(K={})", bits.label(), loops),
             pct(plain),
@@ -96,19 +96,19 @@ pub fn table2(
     let mut drops = vec![Vec::new(), Vec::new(), Vec::new()];
     let mut rows = Vec::new();
     for (bits, loops) in bit_widths {
-        let gptq = pipe.quantize(&QuantConfig {
+        let gptq = pipe.quantize_cfg(&QuantConfig {
             method: Method::Gptq,
             bits: bits.0,
             ..QuantConfig::default()
         })?;
-        let comq = pipe.quantize(&QuantConfig {
+        let comq = pipe.quantize_cfg(&QuantConfig {
             method: Method::Comq,
             bits: bits.0,
             loops: *loops,
             ..QuantConfig::default()
         })?;
         // Beacon's Table-2 configuration is the full method (EC+centering)
-        let beacon = pipe.quantize(&QuantConfig {
+        let beacon = pipe.quantize_cfg(&QuantConfig {
             method: Method::Beacon,
             bits: bits.0,
             loops: *loops,
@@ -289,14 +289,14 @@ pub fn runtime_row(pipe: &mut Pipeline, bits: BitWidth, loops: usize) -> Result<
     // warm up: FP activation capture, artifact compilation, eval — one-time
     // costs that must not land in the first timed arm
     pipe.fp_top1()?;
-    let _ = pipe.quantize(&QuantConfig {
+    let _ = pipe.quantize_cfg(&QuantConfig {
         method: Method::Rtn,
         bits: bits.0,
         eval_count: 128,
         ..QuantConfig::default()
     })?;
     // ...including the per-shape Beacon kernel compilations (K=0 pass)
-    let _ = pipe.quantize(&QuantConfig {
+    let _ = pipe.quantize_cfg(&QuantConfig {
         method: Method::Beacon,
         bits: bits.0,
         loops: 0,
@@ -307,7 +307,7 @@ pub fn runtime_row(pipe: &mut Pipeline, bits: BitWidth, loops: usize) -> Result<
     // excludes eval and the cached FP setup), matching how the paper
     // reports algorithm runtime
     let time_of = |pipe: &mut Pipeline, qc: &QuantConfig| -> Result<f64> {
-        let report = pipe.quantize(qc)?;
+        let report = pipe.quantize_cfg(qc)?;
         Ok(report.quantize_secs + report.ln_tune_secs)
     };
     let gptq_s = time_of(

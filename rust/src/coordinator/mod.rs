@@ -11,4 +11,4 @@ pub mod lntune;
 pub mod pipeline;
 pub mod report;
 
-pub use pipeline::{KernelBackend, Pipeline, QuantReport};
+pub use pipeline::{KernelBackend, LayerReport, Pipeline, QuantReport};

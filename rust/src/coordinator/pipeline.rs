@@ -10,10 +10,14 @@
 //!   W ← Q·Diag(s) (+ centering row)   (mutates the WeightStore in place)
 //! ```
 //!
-//! Method dispatch is entirely through `Box<dyn Quantizer>`
-//! ([`Pipeline::quantizer`]): this file contains no per-method logic.
-//! Without error-correction recapture the layers are independent and the
-//! engine scheduler fans them (and each layer's channels) over the
+//! The pipeline consumes a [`crate::config::QuantPlan`]: one resolved
+//! `(method, bits, opts)` assignment per quantizable layer, compiled by
+//! [`crate::config::PlanBuilder`] (a flat [`QuantConfig`] rides through
+//! the [`Pipeline::quantize_cfg`] shim as a uniform plan). Method
+//! dispatch is entirely through `Box<dyn Quantizer>`, picked per layer
+//! from the plan entry: this file contains no per-method logic. Without
+//! error-correction recapture the layers are independent and the engine
+//! scheduler fans them (and each layer's channels) over the
 //! `QuantConfig::threads` budget — results are gathered in index order,
 //! bit-identical to the serial run.
 //!
@@ -25,12 +29,12 @@ use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
-use crate::config::{Method, QuantConfig, RecapturePolicy};
+use crate::config::{Method, QuantConfig, QuantPlan, RecapturePolicy};
 use crate::data::Dataset;
 use crate::linalg::{qr_factor, Matrix};
 use crate::model::spec::param_spec;
 use crate::model::WeightStore;
-use crate::quant::alphabet::alphabet;
+use crate::quant::alphabet::{alphabet, BitWidth};
 use crate::quant::beacon::BeaconOpts;
 use crate::quant::engine::{self, LayerCtx, LayerQuant, Quantizer};
 use crate::runtime::client::{literal_f32, literal_to_f32};
@@ -46,12 +50,25 @@ pub enum KernelBackend {
     Native,
 }
 
+/// One row of a [`QuantReport`]: what the plan assigned to a layer and
+/// the relative reconstruction error the assignment achieved.
+#[derive(Debug, Clone)]
+pub struct LayerReport {
+    pub layer: String,
+    pub method: Method,
+    pub bits: BitWidth,
+    pub error: f64,
+}
+
 #[derive(Debug, Clone)]
 pub struct QuantReport {
     pub label: String,
     pub fp_top1: f64,
     pub top1: f64,
-    pub layer_errors: Vec<(String, f64)>,
+    /// per-layer `(method, bits, error)` rows, in pipeline order
+    pub layers: Vec<LayerReport>,
+    /// nominal bits per weight across the plan, weighted by layer size
+    pub effective_bits: f64,
     pub quantize_secs: f64,
     pub ln_tune_secs: f64,
     pub eval_secs: f64,
@@ -61,6 +78,11 @@ pub struct QuantReport {
 impl QuantReport {
     pub fn accuracy_drop(&self) -> f64 {
         (self.fp_top1 - self.top1) * 100.0
+    }
+
+    /// The legacy `(layer name, error)` view of the per-layer rows.
+    pub fn layer_errors(&self) -> impl Iterator<Item = (&str, f64)> + '_ {
+        self.layers.iter().map(|r| (r.layer.as_str(), r.error))
     }
 }
 
@@ -174,12 +196,29 @@ impl Pipeline {
         Ok(v)
     }
 
-    /// The quantizer this pipeline dispatches through: the method's
-    /// native implementation, swapped for the PJRT kernel adapter when
-    /// the backend is [`KernelBackend::Pjrt`] and the method runs on the
-    /// prefactored form the AOT Pallas artifact implements.
-    pub fn quantizer<'a>(&'a self, qc: &QuantConfig) -> Box<dyn Quantizer + 'a> {
-        let native = qc.method.quantizer(qc);
+    /// The model's quantizable layer names, in pipeline order — what
+    /// plans are compiled against ([`crate::config::PlanBuilder::build`]).
+    pub fn quantizable(&self) -> &[String] {
+        &self.artifacts.manifest.quantizable
+    }
+
+    /// Compile a uniform [`QuantPlan`] (every layer gets `qc`'s
+    /// method/bits) against this pipeline's model.
+    pub fn uniform_plan(&self, qc: &QuantConfig) -> Result<QuantPlan> {
+        QuantPlan::uniform(qc, self.quantizable())
+    }
+
+    /// The quantizer for one resolved `(method, bits, opts)` assignment:
+    /// the method's native implementation, swapped for the PJRT kernel
+    /// adapter when the backend is [`KernelBackend::Pjrt`] and the method
+    /// runs on the prefactored form the AOT Pallas artifact implements.
+    fn quantizer_for<'a>(
+        &'a self,
+        method: Method,
+        bits: BitWidth,
+        qc: &QuantConfig,
+    ) -> Box<dyn Quantizer + 'a> {
+        let native = method.quantizer(bits, qc);
         // The only AOT kernel artifact the bundle ships is the Beacon
         // sweep, so the adapter swap is gated on the method's identity,
         // not just the prefactored capability — a future second
@@ -189,9 +228,23 @@ impl Pipeline {
             && native.supports_prefactored()
             && native.name() == "beacon"
         {
-            return Box::new(PjrtKernelQuantizer { pipe: self, qc: qc.clone() });
+            return Box::new(PjrtKernelQuantizer {
+                pipe: self,
+                bits,
+                opts: BeaconOpts {
+                    loops: qc.loops,
+                    centering: qc.centering,
+                    threads: 0,
+                },
+                error_correction: qc.error_correction,
+            });
         }
         native
+    }
+
+    /// The quantizer for a flat config (validates `qc.bits`).
+    pub fn quantizer<'a>(&'a self, qc: &QuantConfig) -> Result<Box<dyn Quantizer + 'a>> {
+        Ok(self.quantizer_for(qc.method, qc.bit_width()?, qc))
     }
 
     /// Quantize one layer's weights with the configured method.
@@ -206,7 +259,7 @@ impl Pipeline {
     ) -> Result<Matrix> {
         let threads = crate::util::pool::resolve_threads(qc.threads);
         let lq = self
-            .quantizer(qc)
+            .quantizer(qc)?
             .quantize_layer(&LayerCtx { x, xt, w, threads })?;
         Ok(lq.dequant)
     }
@@ -224,7 +277,7 @@ impl Pipeline {
         let mut qc_beacon = qc.clone();
         qc_beacon.method = Method::Beacon;
         let threads = crate::util::pool::resolve_threads(qc.threads);
-        self.quantizer(&qc_beacon)
+        self.quantizer(&qc_beacon)?
             .quantize_layer(&LayerCtx { x, xt, w, threads })
     }
 
@@ -232,7 +285,6 @@ impl Pipeline {
     #[allow(clippy::too_many_arguments)]
     fn beacon_layer_pjrt(
         &self,
-        _qc: &QuantConfig,
         l: &Matrix,
         r: &Matrix,
         x: &Matrix,
@@ -313,31 +365,78 @@ impl Pipeline {
         Ok(LayerQuant { codes, scales, offsets, dequant })
     }
 
-    /// Run the full PTQ pipeline and evaluate. The FP model is left
-    /// untouched; the quantized weights are returned inside the report
-    /// via `out_store` when provided.
-    pub fn quantize(&mut self, qc: &QuantConfig) -> Result<QuantReport> {
-        let (report, _) = self.quantize_with_weights(qc)?;
+    /// Run the full PTQ pipeline under `plan` — each layer quantized by
+    /// its own `(method, bits, opts)` assignment — and evaluate. The FP
+    /// model is left untouched; use
+    /// [`Pipeline::quantize_with_weights`] to also get the quantized
+    /// weights.
+    pub fn quantize(&mut self, plan: &QuantPlan) -> Result<QuantReport> {
+        let (report, _) = self.quantize_with_weights(plan)?;
         Ok(report)
+    }
+
+    /// Legacy flat-config entry point: compiles `qc` into a uniform plan
+    /// (same method/bits on every layer) and runs it. Bit-identical to
+    /// the pre-plan pipeline at any thread count.
+    pub fn quantize_cfg(&mut self, qc: &QuantConfig) -> Result<QuantReport> {
+        let plan = self.uniform_plan(qc)?;
+        self.quantize(&plan)
+    }
+
+    /// [`Pipeline::quantize_cfg`] returning the quantized weights too.
+    pub fn quantize_cfg_with_weights(
+        &mut self,
+        qc: &QuantConfig,
+    ) -> Result<(QuantReport, WeightStore)> {
+        let plan = self.uniform_plan(qc)?;
+        self.quantize_with_weights(&plan)
     }
 
     pub fn quantize_with_weights(
         &mut self,
-        qc: &QuantConfig,
+        plan: &QuantPlan,
     ) -> Result<(QuantReport, WeightStore)> {
+        let quantizable = self.artifacts.manifest.quantizable.clone();
+        anyhow::ensure!(
+            plan.assignments.len() == quantizable.len(),
+            "plan covers {} layers but this model has {} — compile it with \
+             PlanBuilder::build(pipe.quantizable())",
+            plan.assignments.len(),
+            quantizable.len()
+        );
+        if let Some((a, l)) = plan
+            .assignments
+            .iter()
+            .zip(&quantizable)
+            .find(|(a, l)| &a.layer != *l)
+        {
+            bail!(
+                "plan was compiled for a different model: plan layer '{}' vs \
+                 this model's '{}' — rebuild with PlanBuilder::build(pipe.quantizable())",
+                a.layer,
+                l
+            );
+        }
         self.ensure_fp_acts()?;
         let fp_top1 = self.fp_top1()?;
         let acts_fp = self.acts_fp.clone().expect("ensured");
-        let quantizable = self.artifacts.manifest.quantizable.clone();
+        let base = &plan.base;
 
-        let quantizer = self.quantizer(qc);
-        let use_ec = quantizer.uses_recapture();
-        let threads = crate::util::pool::resolve_threads(qc.threads);
+        // one quantizer per layer, picked from the plan entry (uniform
+        // plans build identical instances — same numbers as one shared)
+        let quantizers: Vec<Box<dyn Quantizer + '_>> = plan
+            .assignments
+            .iter()
+            .map(|a| self.quantizer_for(a.method, a.bits, &a.to_config(base)))
+            .collect();
+        let any_recapture = quantizers.iter().any(|q| q.uses_recapture());
+        let threads = crate::util::pool::resolve_threads(base.threads);
         // EC couples consecutive layers (X̃ depends on the layers already
         // quantized) and the PJRT adapter must stay on this thread; both
         // force the layer axis serial — the whole budget then goes to the
         // channel sweep inside each layer.
-        let layer_parallel = !use_ec && quantizer.parallel_safe();
+        let layer_parallel =
+            !any_recapture && quantizers.iter().all(|q| q.parallel_safe());
         let sched = engine::plan(threads, quantizable.len(), layer_parallel);
 
         let t0 = Instant::now();
@@ -352,7 +451,7 @@ impl Pipeline {
                 let lname = &quantizable[li];
                 let x = &acts_fp[li];
                 let w = work.matrix(lname);
-                let lq = quantizer.quantize_layer(&LayerCtx {
+                let lq = quantizers[li].quantize_layer(&LayerCtx {
                     x,
                     xt: x,
                     w: &w,
@@ -367,16 +466,17 @@ impl Pipeline {
                 Ok((err, lq.dequant))
             })?;
             for (lname, (err, dequant)) in quantizable.iter().zip(results) {
-                layer_errors.push((lname.clone(), err));
+                layer_errors.push(err);
                 work.set_matrix(lname, &dequant);
             }
         } else {
             let mut acts_q: Option<Vec<Matrix>> = None;
             for (li, lname) in quantizable.iter().enumerate() {
                 let x = &acts_fp[li];
-                // error-correction recapture of X̃ from the current weights
-                let xt: &Matrix = if use_ec {
-                    let refresh = match qc.recapture {
+                // error-correction recapture of X̃ from the current
+                // weights, for the layers whose assignment asks for it
+                let xt: &Matrix = if quantizers[li].uses_recapture() {
+                    let refresh = match base.recapture {
                         RecapturePolicy::PerLayer => true,
                         RecapturePolicy::PerBlock => li % 4 == 0,
                     };
@@ -391,46 +491,58 @@ impl Pipeline {
                 };
 
                 let w = work.matrix(lname);
-                let lq = quantizer.quantize_layer(&LayerCtx {
+                let lq = quantizers[li].quantize_layer(&LayerCtx {
                     x,
                     xt,
                     w: &w,
                     threads: sched.channel_threads,
                 })?;
-                layer_errors.push((
-                    lname.clone(),
-                    crate::quant::metrics::layer_recon_error_gram(
-                        &x.gram(),
-                        &w,
-                        &lq.dequant,
-                    ),
+                layer_errors.push(crate::quant::metrics::layer_recon_error_gram(
+                    &x.gram(),
+                    &w,
+                    &lq.dequant,
                 ));
                 work.set_matrix(lname, &lq.dequant);
             }
         }
-        drop(quantizer);
+        drop(quantizers);
         let quantize_secs = t0.elapsed().as_secs_f64();
+
+        let layers: Vec<LayerReport> = plan
+            .assignments
+            .iter()
+            .zip(&layer_errors)
+            .map(|(a, e)| LayerReport {
+                layer: a.layer.clone(),
+                method: a.method,
+                bits: a.bits,
+                error: *e,
+            })
+            .collect();
+        let effective_bits =
+            plan.effective_bits(|name| self.weights_fp.get(name).numel());
 
         // optional LN tuning (distillation against the FP calib logits)
         let t_ln = Instant::now();
-        let ln_tune_losses = if qc.ln_tune {
+        let ln_tune_losses = if base.ln_tune {
             let teacher = self.fp_logits_calib.clone().expect("ensured");
-            crate::coordinator::lntune::tune(self, &mut work, &teacher, qc)?
+            crate::coordinator::lntune::tune(self, &mut work, &teacher, base)?
         } else {
             Vec::new()
         };
         let ln_tune_secs = t_ln.elapsed().as_secs_f64();
 
         let t1 = Instant::now();
-        let top1 = crate::coordinator::eval::top1(self, &work, qc.eval_count)?;
+        let top1 = crate::coordinator::eval::top1(self, &work, base.eval_count)?;
         let eval_secs = t1.elapsed().as_secs_f64();
 
         Ok((
             QuantReport {
-                label: qc.label(),
+                label: plan.label(),
                 fp_top1,
                 top1,
-                layer_errors,
+                layers,
+                effective_bits,
                 quantize_secs,
                 ln_tune_secs,
                 eval_secs,
@@ -442,14 +554,18 @@ impl Pipeline {
 }
 
 /// [`Quantizer`] adapter running the Beacon inner sweep through the
-/// AOT-compiled Pallas kernel artifact over PJRT. Selected by
-/// [`Pipeline::quantizer`] whenever the backend is PJRT and the method
-/// consumes the prefactored (L, L̃) form the artifact implements;
-/// centering is applied around the kernel call exactly as in the native
-/// twin.
+/// AOT-compiled Pallas kernel artifact over PJRT. Selected per layer by
+/// the pipeline's quantizer construction whenever the backend is PJRT
+/// and the assignment's method consumes the prefactored (L, L̃) form the
+/// artifact implements; centering is applied around the kernel call
+/// exactly as in the native twin. The bit width is the plan entry's —
+/// the artifact takes the (padded) alphabet as an input, so one compiled
+/// kernel shape serves every width.
 struct PjrtKernelQuantizer<'a> {
     pipe: &'a Pipeline,
-    qc: QuantConfig,
+    bits: BitWidth,
+    opts: BeaconOpts,
+    error_correction: bool,
 }
 
 impl Quantizer for PjrtKernelQuantizer<'_> {
@@ -469,26 +585,14 @@ impl Quantizer for PjrtKernelQuantizer<'_> {
     }
 
     fn uses_recapture(&self) -> bool {
-        self.qc.error_correction
+        self.error_correction
     }
 
     fn quantize_layer(&self, ctx: &LayerCtx) -> Result<LayerQuant> {
-        let alph = alphabet(self.qc.bit_width());
-        let opts = BeaconOpts {
-            loops: self.qc.loops,
-            centering: self.qc.centering,
-            threads: ctx.threads,
-        };
+        let alph = alphabet(self.bits);
+        let opts = BeaconOpts { threads: ctx.threads, ..self.opts.clone() };
         let f = qr_factor(ctx.xt, ctx.x);
-        self.pipe.beacon_layer_pjrt(
-            &self.qc,
-            &f.l,
-            &f.r,
-            ctx.x,
-            ctx.xt,
-            ctx.w,
-            &alph,
-            &opts,
-        )
+        self.pipe
+            .beacon_layer_pjrt(&f.l, &f.r, ctx.x, ctx.xt, ctx.w, &alph, &opts)
     }
 }

@@ -57,6 +57,28 @@ pub fn pct(v: f64) -> String {
     format!("{:.2}", v * 100.0)
 }
 
+/// Render a [`QuantReport`]'s per-layer plan rows — which method/bits
+/// each layer got and the reconstruction error it achieved — plus the
+/// size-weighted effective-bits summary in the title.
+pub fn plan_table(r: &super::pipeline::QuantReport) -> Table {
+    let mut t = Table::new(
+        &format!(
+            "{} — {:.2} effective bits/weight",
+            r.label, r.effective_bits
+        ),
+        &["layer", "method", "bits", "recon err"],
+    );
+    for row in &r.layers {
+        t.row(vec![
+            row.layer.clone(),
+            row.method.name().to_string(),
+            row.bits.label(),
+            format!("{:.4}", row.error),
+        ]);
+    }
+    t
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -82,5 +104,33 @@ mod tests {
     #[test]
     fn pct_format() {
         assert_eq!(pct(0.87654), "87.65");
+    }
+
+    #[test]
+    fn plan_table_renders_rows() {
+        use crate::config::Method;
+        use crate::coordinator::pipeline::{LayerReport, QuantReport};
+        use crate::quant::alphabet::BitWidth;
+        let r = QuantReport {
+            label: "demo".into(),
+            fp_top1: 0.9,
+            top1: 0.8,
+            layers: vec![LayerReport {
+                layer: "blocks.0.qkv.w".into(),
+                method: Method::Beacon,
+                bits: BitWidth::B2,
+                error: 0.1234,
+            }],
+            effective_bits: 2.5,
+            quantize_secs: 0.0,
+            ln_tune_secs: 0.0,
+            eval_secs: 0.0,
+            ln_tune_losses: Vec::new(),
+        };
+        let s = plan_table(&r).render();
+        assert!(s.contains("beacon"), "{s}");
+        assert!(s.contains("2-bit"), "{s}");
+        assert!(s.contains("0.1234"), "{s}");
+        assert!(s.contains("2.50 effective bits"), "{s}");
     }
 }

@@ -18,14 +18,26 @@
 //!
 //! ## Quick start
 //!
+//! The pipeline consumes a [`config::QuantPlan`] — one resolved
+//! `(method, bits, opts)` assignment per quantizable layer, compiled by
+//! [`config::PlanBuilder`] from defaults plus glob overrides (last match
+//! wins). A flat [`config::QuantConfig`] still works through the
+//! `quantize_cfg` shim, which compiles it into a uniform plan.
+//!
 //! ```no_run
-//! use beacon_ptq::config::{QuantConfig, Method};
+//! use beacon_ptq::config::{PlanBuilder, QuantConfig};
 //! use beacon_ptq::coordinator::Pipeline;
 //!
-//! let cfg = QuantConfig { bits: 2.0, ..QuantConfig::default() };
 //! let mut pipe = Pipeline::from_artifacts("artifacts", "tiny-sim").unwrap();
-//! let report = pipe.quantize(&cfg).unwrap();
-//! println!("top-1 after 2-bit Beacon: {:.2}%", 100.0 * report.top1);
+//! // attention at 2 bits, MLP at 4 — methods and widths mix per layer
+//! let plan = PlanBuilder::uniform(&QuantConfig { bits: 2.0, ..QuantConfig::default() })
+//!     .override_layers("blocks.*.fc?.w", "comq:4").unwrap()
+//!     .build(pipe.quantizable()).unwrap();
+//! let report = pipe.quantize(&plan).unwrap();
+//! println!("top-1 {:.2}% at {:.2} bits/weight",
+//!     100.0 * report.top1, report.effective_bits);
+//! // reproducible: the resolved plan round-trips through one manifest
+//! std::fs::write("plan.cfg", plan.to_manifest()).unwrap();
 //! ```
 
 pub mod config;
@@ -37,6 +49,6 @@ pub mod quant;
 pub mod runtime;
 pub mod util;
 
-pub use config::{Method, QuantConfig};
+pub use config::{LayerAssignment, Method, PlanBuilder, QuantConfig, QuantPlan};
 pub use coordinator::Pipeline;
 pub use quant::{LayerCtx, LayerQuant, Quantizer};

@@ -15,14 +15,21 @@
 //! --threads 4 ...). `--threads N` sets the layer/channel scheduler
 //! budget (0 = auto via BEACON_THREADS / core count); results are
 //! bit-identical at any thread count.
+//!
+//! Mixed plans: `--override 'pattern=spec'` (repeatable; also accepts a
+//! `;`-separated list) layers glob overrides over the base config, e.g.
+//! `--override 'blocks.*.fc?.w=comq:4' --override 'blocks.3.*=:3'`.
+//! `--config FILE` accepts `[layer "pattern"]` sections in the same
+//! spec language, and `--save-plan FILE` writes the fully resolved
+//! per-layer manifest for exact reproduction.
 
 use std::path::PathBuf;
 
 use anyhow::{bail, Result};
 
-use beacon_ptq::config::QuantConfig;
+use beacon_ptq::config::{PlanBuilder, QuantConfig};
 use beacon_ptq::coordinator::experiments;
-use beacon_ptq::coordinator::report::pct;
+use beacon_ptq::coordinator::report::{pct, plan_table};
 use beacon_ptq::coordinator::{KernelBackend, Pipeline};
 use beacon_ptq::quant::alphabet::BitWidth;
 use beacon_ptq::util::cli::Args;
@@ -46,13 +53,24 @@ fn pipeline(args: &Args) -> Result<Pipeline> {
     Ok(pipe)
 }
 
-fn quant_config(args: &Args) -> Result<QuantConfig> {
-    let mut qc = match args.get("config") {
-        Some(path) => QuantConfig::from_file(std::path::Path::new(path))?,
-        None => QuantConfig::default(),
+/// Assemble the plan builder for `quantize`: config file (with optional
+/// `[layer "pattern"]` sections) → CLI flag overlay on the base →
+/// `--override pattern=spec` entries, in that precedence order.
+fn plan_builder(args: &Args) -> Result<PlanBuilder> {
+    let mut builder = match args.get("config") {
+        Some(path) => PlanBuilder::from_file(std::path::Path::new(path))?,
+        None => PlanBuilder::uniform(&QuantConfig::default()),
     };
-    qc.apply_flags(&args.flags, &args.switches)?;
-    Ok(qc)
+    builder.base_mut().apply_flags(&args.flags, &args.switches)?;
+    for entry in args.list("override") {
+        for part in entry.split(';').map(str::trim).filter(|s| !s.is_empty()) {
+            let (pattern, spec) = part.split_once('=').ok_or_else(|| {
+                anyhow::anyhow!("--override expects 'pattern=spec', got '{part}'")
+            })?;
+            builder.add_override(pattern.trim(), spec.trim())?;
+        }
+    }
+    Ok(builder)
 }
 
 /// Default Table-1 grid: (bit width, K) as in the paper.
@@ -94,30 +112,31 @@ fn run() -> Result<()> {
         }
         "quantize" => {
             let mut pipe = pipeline(&args)?;
-            let qc = quant_config(&args)?;
+            let plan = plan_builder(&args)?.build(pipe.quantizable())?;
             println!(
                 "running {} (backend {:?}, {} threads)...",
-                qc.label(),
+                plan.label(),
                 pipe.backend,
-                beacon_ptq::util::pool::resolve_threads(qc.threads)
+                beacon_ptq::util::pool::resolve_threads(plan.base.threads)
             );
-            let report = pipe.quantize(&qc)?;
-            println!("FP top-1     : {}%", pct(report.fp_top1));
-            println!("quant top-1  : {}%", pct(report.top1));
-            println!("accuracy drop: {:.2}%", report.accuracy_drop());
-            println!("quantize time: {:.2}s  eval time: {:.2}s",
+            if let Some(out) = args.get("save-plan") {
+                std::fs::write(out, plan.to_manifest())?;
+                println!("saved resolved plan manifest to {out}");
+            }
+            let (report, store) = pipe.quantize_with_weights(&plan)?;
+            println!("FP top-1      : {}%", pct(report.fp_top1));
+            println!("quant top-1   : {}%", pct(report.top1));
+            println!("accuracy drop : {:.2}%", report.accuracy_drop());
+            println!("effective bits: {:.2} / weight", report.effective_bits);
+            println!("quantize time : {:.2}s  eval time: {:.2}s",
                 report.quantize_secs, report.eval_secs);
             if args.switch("verbose") {
-                println!("\nper-layer relative recon error:");
-                for (name, e) in &report.layer_errors {
-                    println!("  {name:<22} {e:.4}");
-                }
+                println!("\n{}", plan_table(&report).render());
                 if !report.ln_tune_losses.is_empty() {
                     println!("ln-tune loss: {:?}", report.ln_tune_losses);
                 }
             }
             if let Some(out) = args.get("save") {
-                let (_, store) = pipe.quantize_with_weights(&qc)?;
                 store.save(std::path::Path::new(out))?;
                 println!("saved quantized weights to {out}");
             }
@@ -175,4 +194,8 @@ const HELP: &str = "beacon — Beacon PTQ coordinator
 usage: beacon <info|eval|quantize|table1|table2|convergence|ablate-calib|ablate-ec|runtime-row> [flags]
 flags: --artifacts DIR --model NAME --backend pjrt|native --config FILE
        --method beacon|gptq|rtn|comq --bits B --loops K --ec --centering
-       --ln_tune --threads N --save OUT.bin --verbose";
+       --ln_tune --threads N --save OUT.bin --save-plan PLAN.cfg --verbose
+plans: --override 'pattern=spec' (repeatable; ';'-separated list ok)
+       spec = method[:bits][+ec|+noec|+centering|+nocentering|+loops=K|+damp=F]
+       e.g. --override 'blocks.*.qkv.w=beacon:2+ec' --override 'blocks.*.fc?.w=comq:4'
+       config files take the same overrides as [layer \"pattern\"] sections";

@@ -9,6 +9,12 @@
 //! zero-denominator candidates score −inf, and the degenerate u = 0 case
 //! picks the alphabet element nearest the least-squares coefficient.
 //!
+//! Under the plan API the pipeline constructs one
+//! [`crate::quant::engine::BeaconQuantizer`] per layer from its
+//! [`crate::config::LayerAssignment`], so the alphabet (bit width) and
+//! sweep count may differ layer to layer; the kernels below are pure in
+//! their arguments and need no changes to serve mixed plans.
+//!
 //! Complexity per channel: the 5-scalar expansion turns each coordinate
 //! update into O(N) dot products + O(|A|) candidate scoring, so a full
 //! sweep is O(N²); `lt` being upper-triangular (it is R from the QR) cuts

@@ -4,7 +4,9 @@
 //!
 //! The contrast with Beacon is exactly the paper's point: COMQ's grid
 //! (scale) is chosen once up front from min/max, Beacon's scale emerges
-//! from the optimization itself.
+//! from the optimization itself. Per-layer bit widths / sweep counts
+//! arrive through the [`crate::quant::engine::ComqQuantizer`] the
+//! pipeline builds from each [`crate::config::QuantPlan`] entry.
 
 use crate::linalg::matrix::axpy;
 use crate::linalg::Matrix;

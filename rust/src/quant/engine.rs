@@ -108,14 +108,19 @@ pub trait Quantizer: Send + Sync {
 }
 
 impl Method {
-    /// The native quantizer for this method, configured from `qc`.
+    /// The native quantizer for this method at the given bit width,
+    /// configured from `qc`'s per-method options (loops, centering,
+    /// error correction, damping).
     ///
-    /// This is the single construction point the coordinator dispatches
-    /// through — `coordinator/pipeline.rs` holds no per-method logic.
-    pub fn quantizer(&self, qc: &QuantConfig) -> Box<dyn Quantizer> {
+    /// The width is an explicit parameter — not read from `qc.bits` — so
+    /// a [`crate::config::QuantPlan`] can assign a different, already
+    /// validated width to every layer. This is the single construction
+    /// point the coordinator dispatches through —
+    /// `coordinator/pipeline.rs` holds no per-method logic.
+    pub fn quantizer(&self, bits: BitWidth, qc: &QuantConfig) -> Box<dyn Quantizer> {
         match self {
             Method::Beacon => Box::new(BeaconQuantizer {
-                alph: alphabet(qc.bit_width()),
+                alph: alphabet(bits),
                 opts: BeaconOpts {
                     loops: qc.loops,
                     centering: qc.centering,
@@ -123,16 +128,18 @@ impl Method {
                 },
                 error_correction: qc.error_correction,
             }),
-            Method::Gptq => Box::new(GptqQuantizer {
-                bits: qc.bit_width(),
-                damp: qc.gptq_damp,
-            }),
-            Method::Rtn => Box::new(RtnQuantizer { bits: qc.bit_width() }),
-            Method::Comq => Box::new(ComqQuantizer {
-                bits: qc.bit_width(),
-                loops: qc.loops,
-            }),
+            Method::Gptq => Box::new(GptqQuantizer { bits, damp: qc.gptq_damp }),
+            Method::Rtn => Box::new(RtnQuantizer { bits }),
+            Method::Comq => Box::new(ComqQuantizer { bits, loops: qc.loops }),
         }
+    }
+}
+
+impl crate::config::LayerAssignment {
+    /// The quantizer for this plan entry. Pipeline-level knobs come from
+    /// the plan's base config; method/bits/opts from the assignment.
+    pub fn quantizer(&self, base: &QuantConfig) -> Box<dyn Quantizer> {
+        self.method.quantizer(self.bits, &self.to_config(base))
     }
 }
 
@@ -343,6 +350,11 @@ mod tests {
         QuantConfig { method, bits: 2.0, loops: 3, ..QuantConfig::default() }
     }
 
+    fn quantizer_of(m: Method) -> Box<dyn Quantizer> {
+        let c = qc(m);
+        m.quantizer(c.bit_width().unwrap(), &c)
+    }
+
     #[test]
     fn names_and_capabilities() {
         let cfgs = [
@@ -352,7 +364,7 @@ mod tests {
             (Method::Comq, "comq", false),
         ];
         for (m, name, prefactored) in cfgs {
-            let q = m.quantizer(&qc(m));
+            let q = quantizer_of(m);
             assert_eq!(q.name(), name);
             assert_eq!(q.supports_prefactored(), prefactored);
             assert!(q.parallel_safe());
@@ -360,15 +372,16 @@ mod tests {
         }
         let mut c = qc(Method::Beacon);
         c.error_correction = true;
-        assert!(Method::Beacon.quantizer(&c).uses_recapture());
+        assert!(Method::Beacon
+            .quantizer(c.bit_width().unwrap(), &c)
+            .uses_recapture());
     }
 
     #[test]
     fn factored_form_reconstructs_dequant() {
         let (x, w) = case(11, 64, 8, 5);
         for m in [Method::Beacon, Method::Gptq, Method::Rtn, Method::Comq] {
-            let lq = m
-                .quantizer(&qc(m))
+            let lq = quantizer_of(m)
                 .quantize_layer(&LayerCtx::plain(&x, &w, 1))
                 .unwrap();
             assert_eq!(lq.codes.len(), w.cols);

@@ -9,7 +9,9 @@
 //!
 //! The row recursion couples every channel within a layer, so GPTQ stays
 //! serial on the channel axis; the scheduler still fans independent
-//! *layers* through its [`crate::quant::engine::GptqQuantizer`] wrapper.
+//! *layers* through its [`crate::quant::engine::GptqQuantizer`] wrapper,
+//! constructed per layer with the bit width / damping the
+//! [`crate::config::QuantPlan`] entry assigns.
 
 use crate::linalg::qr::spd_inverse;
 use crate::linalg::{cholesky_lower, Matrix};

@@ -15,9 +15,15 @@
 //! that adapts the kernel to the uniform per-layer interface
 //!
 //! ```text
-//!   Method::quantizer(&QuantConfig) -> Box<dyn Quantizer>
+//!   Method::quantizer(BitWidth, &QuantConfig) -> Box<dyn Quantizer>
+//!   LayerAssignment::quantizer(&base)        -> Box<dyn Quantizer>   // plan entry
 //!   Quantizer::quantize_layer(&LayerCtx { x, xt, w, threads }) -> LayerQuant
 //! ```
+//!
+//! The bit width is an explicit parameter so a
+//! [`crate::config::QuantPlan`] can assign a different width (and
+//! method) to every layer; flat configs validate `bits` once and pass it
+//! through.
 //!
 //! [`engine::LayerCtx`] carries the FP activations `x`, the (possibly
 //! recaptured) activations `xt`, the weights, and the resolved thread

@@ -1,5 +1,8 @@
 //! Round-to-nearest on the asymmetric per-channel min-max grid — the
-//! baseline quantizer Q of paper §1 and the initializer for COMQ.
+//! baseline quantizer Q of paper §1 and the initializer for COMQ. The
+//! grid width is a per-call argument, so a [`crate::config::QuantPlan`]
+//! can assign a different width to every layer's
+//! [`crate::quant::engine::RtnQuantizer`].
 
 use crate::linalg::Matrix;
 

@@ -7,13 +7,21 @@
 //! [`crate::config::QuantConfig::apply_flags`]; notably `--threads N`
 //! sets the layer/channel scheduler budget (0 = auto, overriding the
 //! `BEACON_THREADS` env var when nonzero).
+//!
+//! A flag given more than once keeps every occurrence in [`Args::list`]
+//! order (the single-value [`Args::get`] view keeps the last) — this is
+//! how `--override pattern=spec --override pattern=spec` stacks plan
+//! overrides.
 
 use std::collections::BTreeMap;
 
 #[derive(Debug, Clone, Default)]
 pub struct Args {
     pub subcommand: Option<String>,
+    /// last value per flag (the common single-occurrence view)
     pub flags: BTreeMap<String, String>,
+    /// every occurrence per flag, in command-line order
+    pub repeated: BTreeMap<String, Vec<String>>,
     pub switches: Vec<String>,
     pub positional: Vec<String>,
 }
@@ -22,17 +30,21 @@ impl Args {
     pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Args {
         let mut out = Args::default();
         let mut it = argv.into_iter().peekable();
+        let mut flag = |out: &mut Args, k: String, v: String| {
+            out.repeated.entry(k.clone()).or_default().push(v.clone());
+            out.flags.insert(k, v);
+        };
         while let Some(a) = it.next() {
             if let Some(rest) = a.strip_prefix("--") {
                 if let Some((k, v)) = rest.split_once('=') {
-                    out.flags.insert(k.to_string(), v.to_string());
+                    flag(&mut out, k.to_string(), v.to_string());
                 } else if it
                     .peek()
                     .map(|n| !n.starts_with("--"))
                     .unwrap_or(false)
                 {
                     let v = it.next().unwrap();
-                    out.flags.insert(rest.to_string(), v);
+                    flag(&mut out, rest.to_string(), v);
                 } else {
                     out.switches.push(rest.to_string());
                 }
@@ -55,6 +67,11 @@ impl Args {
 
     pub fn get(&self, key: &str) -> Option<&str> {
         self.flags.get(key).map(|s| s.as_str())
+    }
+
+    /// Every occurrence of a repeatable flag, in command-line order.
+    pub fn list(&self, key: &str) -> &[String] {
+        self.repeated.get(key).map(|v| v.as_slice()).unwrap_or(&[])
     }
 
     pub fn f64(&self, key: &str, default: f64) -> f64 {
@@ -121,6 +138,21 @@ mod tests {
         qc.apply_flags(&a.flags, &a.switches).unwrap();
         assert_eq!(qc.threads, 4);
         assert_eq!(qc.bits, 2.0);
+    }
+
+    #[test]
+    fn repeated_flags_accumulate() {
+        let a = parse(
+            "quantize --override blocks.*.qkv.w=beacon:2 --override blocks.*.fc1.w=comq:4 --bits 3",
+        );
+        assert_eq!(
+            a.list("override"),
+            &["blocks.*.qkv.w=beacon:2".to_string(), "blocks.*.fc1.w=comq:4".to_string()]
+        );
+        // single-value view keeps the last occurrence
+        assert_eq!(a.get("override"), Some("blocks.*.fc1.w=comq:4"));
+        assert!(a.list("missing").is_empty());
+        assert_eq!(a.list("bits"), &["3".to_string()]);
     }
 
     #[test]

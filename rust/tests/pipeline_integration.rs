@@ -98,7 +98,7 @@ fn beacon_2bit_end_to_end_beats_rtn() {
     let Some(mut pipe) = pipeline() else { return };
     let eval_count = 1024; // subset for speed
     let rtn = pipe
-        .quantize(&QuantConfig {
+        .quantize_cfg(&QuantConfig {
             method: Method::Rtn,
             bits: 1.58,
             eval_count,
@@ -106,7 +106,7 @@ fn beacon_2bit_end_to_end_beats_rtn() {
         })
         .unwrap();
     let beacon = pipe
-        .quantize(&QuantConfig {
+        .quantize_cfg(&QuantConfig {
             method: Method::Beacon,
             bits: 1.58,
             loops: 6,
@@ -139,8 +139,8 @@ fn variants_are_monotone_at_2bit() {
         eval_count,
         ..QuantConfig::default()
     };
-    let plain = pipe.quantize(&mk(false, false)).unwrap().top1;
-    let full = pipe.quantize(&mk(true, true)).unwrap().top1;
+    let plain = pipe.quantize_cfg(&mk(false, false)).unwrap().top1;
+    let full = pipe.quantize_cfg(&mk(true, true)).unwrap().top1;
     // EC + centering must help at 2-bit (paper Table 1 rows 1→3); allow
     // a small noise margin on the subset eval
     assert!(
@@ -161,7 +161,7 @@ fn ln_tune_losses_decrease() {
         eval_count: 256,
         ..QuantConfig::default()
     };
-    let report = pipe.quantize(&qc).unwrap();
+    let report = pipe.quantize_cfg(&qc).unwrap();
     let l = &report.ln_tune_losses;
     assert_eq!(l.len(), 12);
     assert!(
@@ -179,7 +179,7 @@ fn quantized_checkpoint_roundtrip() {
         eval_count: 512,
         ..QuantConfig::default()
     };
-    let (report, store) = pipe.quantize_with_weights(&qc).unwrap();
+    let (report, store) = pipe.quantize_cfg_with_weights(&qc).unwrap();
     let tmp = std::env::temp_dir().join("beacon_ptq_roundtrip.bin");
     store.save(&tmp).unwrap();
     let back = beacon_ptq::model::WeightStore::load(&tmp, pipe.cfg()).unwrap();
@@ -191,14 +191,16 @@ fn quantized_checkpoint_roundtrip() {
 fn per_layer_errors_reported_for_all_layers() {
     let Some(mut pipe) = pipeline() else { return };
     let qc = QuantConfig { bits: 3.0, loops: 2, eval_count: 256, ..QuantConfig::default() };
-    let report = pipe.quantize(&qc).unwrap();
+    let report = pipe.quantize_cfg(&qc).unwrap();
     assert_eq!(
-        report.layer_errors.len(),
+        report.layers.len(),
         pipe.artifacts.manifest.quantizable.len()
     );
-    for (name, e) in &report.layer_errors {
-        assert!(e.is_finite() && *e >= 0.0 && *e < 1.0, "{name}: {e}");
+    for (name, e) in report.layer_errors() {
+        assert!(e.is_finite() && e >= 0.0 && e < 1.0, "{name}: {e}");
     }
+    // uniform 3-bit plan: the effective-bits summary is exactly 3
+    assert!((report.effective_bits - 3.0).abs() < 1e-12, "{}", report.effective_bits);
 }
 
 #[test]
@@ -235,7 +237,7 @@ fn small_sim_config_end_to_end() {
     let fp = pipe.fp_top1().unwrap();
     assert!(fp > 0.8, "small-sim FP top-1 {fp}");
     let report = pipe
-        .quantize(&QuantConfig {
+        .quantize_cfg(&QuantConfig {
             bits: 2.0,
             loops: 4,
             error_correction: true,
@@ -244,7 +246,7 @@ fn small_sim_config_end_to_end() {
             ..QuantConfig::default()
         })
         .unwrap();
-    assert_eq!(report.layer_errors.len(), 24); // 6 blocks × 4 linears
+    assert_eq!(report.layers.len(), 24); // 6 blocks × 4 linears
     assert!(report.top1 > 0.6, "2-bit small-sim top-1 {}", report.top1);
 }
 
@@ -253,7 +255,7 @@ fn native_backend_full_run() {
     let Some(mut pipe) = pipeline() else { return };
     pipe.backend = KernelBackend::Native;
     let report = pipe
-        .quantize(&QuantConfig {
+        .quantize_cfg(&QuantConfig {
             bits: 4.0,
             loops: 4,
             centering: true, // asymmetric variant
@@ -267,4 +269,71 @@ fn native_backend_full_run() {
         "4-bit drop {:.2}%",
         report.accuracy_drop()
     );
+}
+
+#[test]
+fn uniform_plan_matches_legacy_cfg_path_bit_identically() {
+    let Some(mut pipe) = pipeline() else { return };
+    let qc = QuantConfig {
+        method: Method::Beacon,
+        bits: 2.0,
+        loops: 2,
+        eval_count: 256,
+        ..QuantConfig::default()
+    };
+    // legacy shim (compiles a uniform plan internally) …
+    let (r_cfg, store_cfg) = pipe.quantize_cfg_with_weights(&qc).unwrap();
+    // … vs an explicitly built uniform plan, at a different thread count
+    let mut plan = pipe.uniform_plan(&qc).unwrap();
+    plan.base.threads = 4;
+    let (r_plan, store_plan) = pipe.quantize_with_weights(&plan).unwrap();
+    assert_eq!(r_cfg.label, r_plan.label);
+    for name in pipe.quantizable().to_vec() {
+        assert_eq!(
+            store_cfg.get(&name).data,
+            store_plan.get(&name).data,
+            "{name}: uniform plan diverged from legacy path"
+        );
+    }
+    assert!((r_cfg.top1 - r_plan.top1).abs() < 1e-12);
+}
+
+#[test]
+fn mixed_plan_end_to_end_with_manifest_round_trip() {
+    let Some(mut pipe) = pipeline() else { return };
+    // ≥ 2 methods and ≥ 2 bit widths across layers (acceptance criterion)
+    let base = QuantConfig { bits: 2.0, loops: 2, eval_count: 512, ..QuantConfig::default() };
+    let plan = beacon_ptq::config::PlanBuilder::uniform(&base)
+        .override_layers("blocks.*.fc?.w", "comq:4+loops=2")
+        .unwrap()
+        .override_layers("blocks.0.proj.w", "rtn:3")
+        .unwrap()
+        .build(pipe.quantizable())
+        .unwrap();
+    assert!(plan.uniform_config().is_none(), "plan should be mixed");
+
+    // manifest round-trip reproduces the exact plan …
+    let text = plan.to_manifest();
+    let back = beacon_ptq::config::QuantPlan::from_manifest(&text, pipe.quantizable()).unwrap();
+    assert_eq!(back, plan);
+
+    // … and the mixed plan runs end-to-end through Pipeline::quantize
+    let report = pipe.quantize(&plan).unwrap();
+    assert_eq!(report.layers.len(), pipe.quantizable().len());
+    let fc = report
+        .layers
+        .iter()
+        .find(|r| r.layer == "blocks.1.fc1.w")
+        .unwrap();
+    assert_eq!((fc.method, fc.bits.0), (Method::Comq, 4.0));
+    let qkv = report.layers.iter().find(|r| r.layer == "blocks.1.qkv.w").unwrap();
+    assert_eq!((qkv.method, qkv.bits.0), (Method::Beacon, 2.0));
+    // effective bits lands strictly between the two widths
+    assert!(
+        report.effective_bits > 2.0 && report.effective_bits < 4.0,
+        "{}",
+        report.effective_bits
+    );
+    assert!(report.top1 > 0.5, "mixed plan top-1 {}", report.top1);
+    assert!(report.label.starts_with("plan["), "{}", report.label);
 }

@@ -1,0 +1,162 @@
+//! Plan-API properties that need no artifacts (pure native kernels):
+//!
+//! 1. a uniform `QuantPlan`'s per-layer quantizers are bit-identical to
+//!    the flat-config quantizer the legacy path builds — the engine-level
+//!    half of the `quantize_cfg ≡ quantize(uniform plan)` guarantee
+//!    (the pipeline-level half runs in `pipeline_integration.rs`),
+//! 2. override precedence composes with real model layer names
+//!    (last match wins, field-wise merge),
+//! 3. plan manifests round-trip, and rebuild identically against the
+//!    model's layer list,
+//! 4. build-time validation: zero-match patterns, malformed specs, and
+//!    unsupported bit widths (including `QuantConfig { bits: 7.3, .. }`
+//!    smuggled past `set()` by direct struct construction) all fail
+//!    before any layer runs.
+
+use beacon_ptq::config::{Method, PlanBuilder, QuantConfig, QuantPlan};
+use beacon_ptq::data::rng::SplitMix64;
+use beacon_ptq::linalg::Matrix;
+use beacon_ptq::model::spec::{quantizable_layers, ViTConfig};
+use beacon_ptq::quant::engine::{LayerCtx, Quantizer as _};
+use beacon_ptq::util::prop::Gen;
+
+fn layers() -> Vec<String> {
+    quantizable_layers(&ViTConfig::tiny_sim())
+}
+
+fn case(seed: u64, m: usize, n: usize, np: usize) -> (Matrix, Matrix) {
+    let mut g = Gen { rng: SplitMix64::new(seed) };
+    let x = Matrix::from_vec(m, n, g.vec_normal(m * n, 1.0));
+    let w = Matrix::from_vec(n, np, g.vec_normal(n * np, 0.3));
+    (x, w)
+}
+
+#[test]
+fn uniform_plan_quantizers_match_flat_config_bit_identically() {
+    let (x, w) = case(21, 64, 12, 7);
+    for method in [Method::Beacon, Method::Gptq, Method::Rtn, Method::Comq] {
+        let qc = QuantConfig { method, bits: 2.0, loops: 3, ..QuantConfig::default() };
+        let plan = QuantPlan::uniform(&qc, &layers()).unwrap();
+        assert_eq!(plan.assignments.len(), layers().len());
+        let legacy = method
+            .quantizer(qc.bit_width().unwrap(), &qc)
+            .quantize_layer(&LayerCtx::plain(&x, &w, 1))
+            .unwrap();
+        for a in &plan.assignments {
+            let lq = a
+                .quantizer(&plan.base)
+                .quantize_layer(&LayerCtx::plain(&x, &w, 1))
+                .unwrap();
+            assert_eq!(lq.codes, legacy.codes, "{method:?} {}", a.layer);
+            assert_eq!(lq.scales, legacy.scales, "{method:?} {}", a.layer);
+            assert_eq!(lq.offsets, legacy.offsets, "{method:?} {}", a.layer);
+            assert_eq!(lq.dequant.data, legacy.dequant.data, "{method:?} {}", a.layer);
+        }
+    }
+}
+
+#[test]
+fn mixed_plan_assignments_use_their_own_method_and_bits() {
+    let (x, w) = case(22, 64, 12, 6);
+    let base = QuantConfig { bits: 2.0, loops: 3, ..QuantConfig::default() };
+    let plan = PlanBuilder::uniform(&base)
+        .override_layers("blocks.*.fc?.w", "comq:4")
+        .unwrap()
+        .build(&layers())
+        .unwrap();
+    // an fc assignment must reproduce the flat comq-4bit quantizer …
+    let fc = plan.assignment_for("blocks.2.fc1.w").unwrap();
+    let comq_cfg =
+        QuantConfig { method: Method::Comq, bits: 4.0, loops: 3, ..QuantConfig::default() };
+    let want = Method::Comq
+        .quantizer(comq_cfg.bit_width().unwrap(), &comq_cfg)
+        .quantize_layer(&LayerCtx::plain(&x, &w, 1))
+        .unwrap();
+    let got = fc
+        .quantizer(&plan.base)
+        .quantize_layer(&LayerCtx::plain(&x, &w, 1))
+        .unwrap();
+    assert_eq!(got.dequant.data, want.dequant.data);
+    // … and a qkv assignment the base beacon-2bit quantizer
+    let qkv = plan.assignment_for("blocks.2.qkv.w").unwrap();
+    let want = Method::Beacon
+        .quantizer(base.bit_width().unwrap(), &base)
+        .quantize_layer(&LayerCtx::plain(&x, &w, 1))
+        .unwrap();
+    let got = qkv
+        .quantizer(&plan.base)
+        .quantize_layer(&LayerCtx::plain(&x, &w, 1))
+        .unwrap();
+    assert_eq!(got.dequant.data, want.dequant.data);
+}
+
+#[test]
+fn override_precedence_on_model_layer_names() {
+    let plan = PlanBuilder::uniform(&QuantConfig::default())
+        .override_layers("blocks.*", "comq:4")
+        .unwrap()
+        .override_layers("blocks.3.*", "gptq:3+damp=0.02")
+        .unwrap()
+        .override_layers("blocks.3.fc2.w", ":2")
+        .unwrap()
+        .build(&layers())
+        .unwrap();
+    let a = plan.assignment_for("blocks.0.qkv.w").unwrap();
+    assert_eq!((a.method, a.bits.0), (Method::Comq, 4.0));
+    let a = plan.assignment_for("blocks.3.proj.w").unwrap();
+    assert_eq!((a.method, a.bits.0, a.gptq_damp), (Method::Gptq, 3.0, 0.02));
+    // ":2" re-bits only — method/damp survive from the earlier gptq match
+    let a = plan.assignment_for("blocks.3.fc2.w").unwrap();
+    assert_eq!((a.method, a.bits.0, a.gptq_damp), (Method::Gptq, 2.0, 0.02));
+}
+
+#[test]
+fn manifest_round_trip_against_model_layers() {
+    let plan = PlanBuilder::uniform(&QuantConfig {
+        bits: 2.0,
+        loops: 4,
+        ln_tune: true,
+        threads: 2,
+        ..QuantConfig::default()
+    })
+    .override_layers("blocks.?.fc1.w", "comq:4+loops=6")
+    .unwrap()
+    .override_layers("blocks.2.*", "rtn:3")
+    .unwrap()
+    .build(&layers())
+    .unwrap();
+    let back = QuantPlan::from_manifest(&plan.to_manifest(), &layers()).unwrap();
+    assert_eq!(back, plan);
+    // the manifest also survives a disk round-trip
+    let dir = std::env::temp_dir().join("beacon_ptq_plan_tests");
+    std::fs::create_dir_all(&dir).unwrap();
+    let p = dir.join("mixed.cfg");
+    std::fs::write(&p, plan.to_manifest()).unwrap();
+    let back = QuantPlan::from_file(&p, &layers()).unwrap();
+    assert_eq!(back, plan);
+}
+
+#[test]
+fn build_time_validation_catches_bad_plans() {
+    // pattern matching zero layers is rejected at build, naming the pattern
+    let e = PlanBuilder::uniform(&QuantConfig::default())
+        .override_layers("head.w", "beacon:8")
+        .unwrap()
+        .build(&layers())
+        .unwrap_err()
+        .to_string();
+    assert!(e.contains("head.w"), "{e}");
+
+    // malformed specs are rejected when the override is added
+    let mut b = PlanBuilder::uniform(&QuantConfig::default());
+    assert!(b.add_override("blocks.*", "awq:4").is_err());
+    assert!(b.add_override("blocks.*", "beacon:7.3").is_err());
+    assert!(b.add_override("", "beacon:2").is_err());
+
+    // bits smuggled past set() by direct struct construction fail at
+    // build time instead of panicking mid-run (the old bit_width() panic)
+    let bad = QuantConfig { bits: 7.3, ..QuantConfig::default() };
+    assert!(bad.bit_width().is_err());
+    let e = QuantPlan::uniform(&bad, &layers()).unwrap_err();
+    assert!(format!("{e:#}").contains("7.3"), "{e:#}");
+}

@@ -11,7 +11,7 @@ use beacon_ptq::data::rng::SplitMix64;
 use beacon_ptq::linalg::Matrix;
 use beacon_ptq::quant::alphabet::{alphabet, BitWidth};
 use beacon_ptq::quant::beacon::{beacon_layer, BeaconOpts};
-use beacon_ptq::quant::engine::{self, LayerCtx, LayerQuant};
+use beacon_ptq::quant::engine::{self, LayerCtx, LayerQuant, Quantizer};
 use beacon_ptq::quant::{comq_layer, gptq_layer, rtn_layer};
 use beacon_ptq::util::prop::Gen;
 
@@ -26,6 +26,12 @@ fn qc(method: Method, bits: f64, loops: usize) -> QuantConfig {
     QuantConfig { method, bits, loops, ..QuantConfig::default() }
 }
 
+/// Build the trait object as the plan/engine does: per-layer bit width
+/// threaded through `Method::quantizer` explicitly.
+fn quantizer_for(c: &QuantConfig) -> Box<dyn Quantizer> {
+    c.method.quantizer(c.bit_width().unwrap(), c)
+}
+
 fn assert_layer_quant_eq(a: &LayerQuant, b: &LayerQuant, what: &str) {
     assert_eq!(a.codes, b.codes, "{what}: codes differ");
     assert_eq!(a.scales, b.scales, "{what}: scales differ");
@@ -38,8 +44,7 @@ fn beacon_quantizer_matches_legacy_free_function() {
     for (seed, centering) in [(1u64, false), (2, true), (3, false)] {
         let (x, w) = case(seed, 48, 10, 6);
         let c = QuantConfig { centering, ..qc(Method::Beacon, 2.0, 3) };
-        let lq = Method::Beacon
-            .quantizer(&c)
+        let lq = quantizer_for(&c)
             .quantize_layer(&LayerCtx::plain(&x, &w, 1))
             .unwrap();
         let legacy = beacon_layer(
@@ -58,8 +63,7 @@ fn grid_quantizers_match_legacy_free_functions() {
     for seed in [4u64, 5] {
         let (x, w) = case(seed, 64, 12, 5);
         for bits in [BitWidth::B2, BitWidth::B3] {
-            let rtn = Method::Rtn
-                .quantizer(&qc(Method::Rtn, bits.0, 0))
+            let rtn = quantizer_for(&qc(Method::Rtn, bits.0, 0))
                 .quantize_layer(&LayerCtx::plain(&x, &w, 1))
                 .unwrap();
             assert_eq!(
@@ -68,8 +72,7 @@ fn grid_quantizers_match_legacy_free_functions() {
                 "rtn seed {seed}"
             );
 
-            let gptq = Method::Gptq
-                .quantizer(&qc(Method::Gptq, bits.0, 0))
+            let gptq = quantizer_for(&qc(Method::Gptq, bits.0, 0))
                 .quantize_layer(&LayerCtx::plain(&x, &w, 1))
                 .unwrap();
             assert_eq!(
@@ -78,8 +81,7 @@ fn grid_quantizers_match_legacy_free_functions() {
                 "gptq seed {seed}"
             );
 
-            let comq = Method::Comq
-                .quantizer(&qc(Method::Comq, bits.0, 3))
+            let comq = quantizer_for(&qc(Method::Comq, bits.0, 3))
                 .quantize_layer(&LayerCtx::plain(&x, &w, 1))
                 .unwrap();
             assert_eq!(
@@ -95,7 +97,7 @@ fn grid_quantizers_match_legacy_free_functions() {
 fn channel_fanout_is_bit_identical_across_thread_counts() {
     let (x, w) = case(6, 64, 12, 8);
     for method in [Method::Beacon, Method::Gptq, Method::Rtn, Method::Comq] {
-        let q = method.quantizer(&qc(method, 2.0, 3));
+        let q = quantizer_for(&qc(method, 2.0, 3));
         let serial = q.quantize_layer(&LayerCtx::plain(&x, &w, 1)).unwrap();
         let par = q.quantize_layer(&LayerCtx::plain(&x, &w, 4)).unwrap();
         assert_layer_quant_eq(&par, &serial, method.name());
@@ -115,7 +117,7 @@ fn layer_scheduler_matches_serial_path() {
         case(14, 48, 8, 5),
     ];
     for method in [Method::Beacon, Method::Rtn, Method::Comq, Method::Gptq] {
-        let q = method.quantizer(&qc(method, 2.0, 2));
+        let q = quantizer_for(&qc(method, 2.0, 2));
         let serial: Vec<LayerQuant> = layers
             .iter()
             .map(|(x, w)| q.quantize_layer(&LayerCtx::plain(x, w, 1)).unwrap())
@@ -150,7 +152,7 @@ fn beacon_threads_env_parity_shape() {
     // explicit ctx budget must override nothing about the numbers — only
     // the wall clock. (Direct bitwise check at 2 and 4 workers.)
     let (x, w) = case(15, 80, 16, 12);
-    let q = Method::Beacon.quantizer(&qc(Method::Beacon, 1.58, 4));
+    let q = quantizer_for(&qc(Method::Beacon, 1.58, 4));
     let base = q.quantize_layer(&LayerCtx::plain(&x, &w, 1)).unwrap();
     for threads in [2usize, 4] {
         let other = q.quantize_layer(&LayerCtx::plain(&x, &w, threads)).unwrap();
