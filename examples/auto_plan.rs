@@ -1,0 +1,134 @@
+//! Loss-aware automatic plan search (`--auto-plan` as a library call):
+//! probe every candidate `(method, bits)` per layer, greedily allocate
+//! widths under an effective-bits budget, and emit the searched plan as
+//! a reproducible manifest (`auto_plan_manifest.cfg`).
+//!
+//! With the AOT bundle present (`make artifacts`) the search runs
+//! against the real tiny-sim calibration activations through
+//! [`Pipeline::auto_plan`]. Without it — the CI smoke path — a
+//! deterministic synthetic model stands in: attention layers draw
+//! well-behaved weights while the MLP layers carry heavy outliers, so
+//! the planner has a real decision to make (the MLP should win the
+//! wider widths).
+//!
+//! ```bash
+//! cargo run --release --example auto_plan
+//! ```
+
+use std::path::Path;
+
+use beacon_ptq::config::{QuantConfig, QuantPlan, SearchSpace};
+use beacon_ptq::coordinator::planner::{search_plan, LayerProbe};
+use beacon_ptq::coordinator::report::planner_table;
+use beacon_ptq::coordinator::Pipeline;
+use beacon_ptq::data::rng::SplitMix64;
+use beacon_ptq::linalg::Matrix;
+use beacon_ptq::model::spec::{quantizable_layers, ViTConfig};
+use beacon_ptq::util::prop::Gen;
+
+const MANIFEST_OUT: &str = "auto_plan_manifest.cfg";
+const BUDGET_BITS: f64 = 2.58;
+
+fn main() -> anyhow::Result<()> {
+    if Path::new("artifacts/manifest__tiny-sim.json").exists() {
+        match run_real() {
+            Ok(()) => return Ok(()),
+            Err(e) => {
+                eprintln!("artifact path failed ({e:#}); falling back to synthetic")
+            }
+        }
+    }
+    run_synthetic()
+}
+
+/// Search + run against the real calibration set.
+fn run_real() -> anyhow::Result<()> {
+    let mut pipe = Pipeline::from_artifacts("artifacts", "tiny-sim")?;
+    let base = QuantConfig { bits: 2.0, loops: 4, ..QuantConfig::default() };
+    let space = SearchSpace::parse(BUDGET_BITS, Some("beacon,comq"), None)?;
+    let (plan, preport) = pipe.auto_plan(&base, &space)?;
+    println!("{}", planner_table(&preport).render());
+    let report = pipe.quantize(&plan)?;
+    println!(
+        "searched top-1: {:.2}% at {:.3} effective bits (budget {BUDGET_BITS})",
+        100.0 * report.top1,
+        report.effective_bits
+    );
+    emit(&plan)
+}
+
+/// Artifact-free search over a synthetic 2-block tiny-sim geometry.
+fn run_synthetic() -> anyhow::Result<()> {
+    println!("no artifacts found — searching over a synthetic model\n");
+    let cfg = ViTConfig { depth: 2, ..ViTConfig::tiny_sim() };
+    let names = quantizable_layers(&cfg);
+    let d = cfg.d_model;
+    let f = cfg.d_mlp();
+    let m = 192; // calibration token rows
+
+    let mut g = Gen { rng: SplitMix64::new(0xA070) };
+    let mut xs: Vec<Matrix> = Vec::new();
+    let mut ws: Vec<Matrix> = Vec::new();
+    for name in &names {
+        let (n, np) = if name.contains("qkv") {
+            (d, 3 * d)
+        } else if name.contains("fc1") {
+            (d, f)
+        } else if name.contains("fc2") {
+            (f, d)
+        } else {
+            (d, d)
+        };
+        xs.push(Matrix::from_vec(m, n, g.vec_normal(m * n, 1.0)));
+        let mut w = Matrix::from_vec(n, np, g.vec_normal(n * np, 0.3));
+        if name.contains(".fc") {
+            // heavy outliers: every 97th weight blown up 6x — these
+            // layers quantize poorly at 2 bits and should win width
+            for (i, v) in w.data.iter_mut().enumerate() {
+                if i % 97 == 0 {
+                    *v *= 6.0;
+                }
+            }
+        }
+        ws.push(w);
+    }
+    let grams: Vec<Matrix> = xs.iter().map(|x| x.gram()).collect();
+    let probes: Vec<LayerProbe> = names
+        .iter()
+        .enumerate()
+        .map(|(i, name)| LayerProbe {
+            name: name.as_str(),
+            x: &xs[i],
+            gram: &grams[i],
+            w: &ws[i],
+            numel: ws[i].rows * ws[i].cols,
+        })
+        .collect();
+
+    let base = QuantConfig { bits: 2.0, loops: 2, ..QuantConfig::default() };
+    let space = SearchSpace::parse(BUDGET_BITS, Some("beacon,comq"), None)?;
+    let (plan, preport) = search_plan(&base, &probes, &space)?;
+
+    println!("{}", planner_table(&preport).render());
+    println!(
+        "searched plan: {}\neffective bits: {:.3} / budget {:.2} ({:.0}% used), {} probes",
+        plan.label(),
+        preport.effective_bits,
+        preport.budget_bits,
+        100.0 * preport.budget_utilization(),
+        preport.probe_count
+    );
+    emit(&plan)
+}
+
+/// Write the manifest and prove it reproduces the exact plan.
+fn emit(plan: &QuantPlan) -> anyhow::Result<()> {
+    let text = plan.to_manifest();
+    std::fs::write(MANIFEST_OUT, &text)?;
+    let layers: Vec<String> =
+        plan.assignments.iter().map(|a| a.layer.clone()).collect();
+    let back = QuantPlan::from_manifest(&text, &layers)?;
+    anyhow::ensure!(back == *plan, "manifest round-trip diverged");
+    println!("\nwrote searched plan manifest to {MANIFEST_OUT} (round-trip verified)");
+    Ok(())
+}

@@ -9,7 +9,8 @@
 //! The beacon rows time the *prefactored* layer sweep (QR hoisted out),
 //! i.e. exactly the channel fan-out the engine scheduler parallelizes.
 
-use beacon_ptq::config::{PlanBuilder, QuantConfig};
+use beacon_ptq::config::{PlanBuilder, QuantConfig, SearchSpace};
+use beacon_ptq::coordinator::planner::{search_plan, LayerProbe};
 use beacon_ptq::data::rng::SplitMix64;
 use beacon_ptq::linalg::{qr_factor, Matrix};
 use beacon_ptq::quant::alphabet::{alphabet, BitWidth};
@@ -201,6 +202,39 @@ fn main() {
         recs.push(Rec {
             method: "mixed-plan",
             bits: "2+4".to_string(),
+            threads,
+            median_ns: r.median_ns,
+            ns_per_channel: r.median_ns as f64 / total_channels as f64,
+        });
+    }
+
+    // --- auto-plan search rows: the loss-aware planner's probe sweep +
+    // greedy allocation over the same 4 layers (probes fan through the
+    // engine scheduler, so search time scales with the thread budget
+    // like any other layer fan) ------------------------------------------
+    println!("\n== auto-plan search (beacon probes at 2/4 bits) ==");
+    let grams: Vec<Matrix> = cases.iter().map(|(x, _)| x.gram()).collect();
+    let numels: Vec<usize> = cases.iter().map(|(_, w)| w.rows * w.cols).collect();
+    let space = SearchSpace::parse(2.58, None, Some("2,4")).unwrap();
+    for &threads in &thread_grid {
+        let base = QuantConfig { bits: 2.0, loops: 2, threads, ..QuantConfig::default() };
+        let probes: Vec<LayerProbe> = lnames
+            .iter()
+            .enumerate()
+            .map(|(i, name)| LayerProbe {
+                name: name.as_str(),
+                x: &cases[i].0,
+                gram: &grams[i],
+                w: &cases[i].1,
+                numel: numels[i],
+            })
+            .collect();
+        let r = bench(&format!("auto-plan search 4 layers t={threads}"), 1, 3, || {
+            black_box(search_plan(&base, &probes, &space).unwrap());
+        });
+        recs.push(Rec {
+            method: "auto-plan",
+            bits: "2|4".to_string(),
             threads,
             median_ns: r.median_ns,
             ns_per_channel: r.median_ns as f64 / total_channels as f64,

@@ -1,0 +1,328 @@
+//! `perf_gate` — the CI perf-regression gate over the machine-readable
+//! kernel perf record.
+//!
+//! `cargo bench --bench quant_kernels` writes `BENCH_quant.json`
+//! (`method × bits × threads → ns/channel`); this binary diffs it
+//! against the committed `BENCH_baseline.json` and **fails (exit 1) when
+//! any matching row regresses by more than the tolerance** (default 25%,
+//! `--tolerance-pct` / `PERF_GATE_TOLERANCE`), printing a one-table
+//! summary either way.
+//!
+//! Baseline rows with `ns_per_channel <= 0` are *uncalibrated*
+//! placeholders: they pin the expected row set without enforcing a
+//! number (CI hardware differs from dev machines, so a baseline must be
+//! recorded on the machine that checks it). To (re)calibrate on the
+//! reference machine:
+//!
+//! ```bash
+//! cargo bench --bench quant_kernels
+//! cargo run --bin perf_gate -- --write-baseline
+//! ```
+//!
+//! Rows present only in the current record are reported as `new` (not a
+//! failure — the bench grid legitimately grows across PRs); baseline
+//! rows missing from the current record are warned about but do not
+//! fail the gate.
+
+use std::process::ExitCode;
+
+use anyhow::{anyhow, Result};
+
+use beacon_ptq::coordinator::report::Table;
+use beacon_ptq::util::cli::Args;
+use beacon_ptq::util::json::Value;
+
+#[derive(Debug, Clone, PartialEq)]
+struct PerfRow {
+    method: String,
+    bits: String,
+    threads: usize,
+    ns_per_channel: f64,
+}
+
+impl PerfRow {
+    fn key(&self) -> (&str, &str, usize) {
+        (&self.method, &self.bits, self.threads)
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Verdict {
+    Ok,
+    Faster,
+    Regression,
+    New,
+    Uncalibrated,
+}
+
+impl Verdict {
+    fn label(&self) -> &'static str {
+        match self {
+            Verdict::Ok => "ok",
+            Verdict::Faster => "faster",
+            Verdict::Regression => "REGRESSION",
+            Verdict::New => "new",
+            Verdict::Uncalibrated => "uncalibrated",
+        }
+    }
+}
+
+/// One compared row: the current measurement, the baseline it was held
+/// against (if any), and the relative change in percent.
+#[derive(Debug)]
+struct Comparison {
+    current: PerfRow,
+    baseline_ns: Option<f64>,
+    delta_pct: Option<f64>,
+    verdict: Verdict,
+}
+
+/// Diff `current` against `baseline` row-by-row (keyed by
+/// `(method, bits, threads)`). Returns the comparisons in current-record
+/// order plus the baseline rows the current record no longer carries.
+fn compare(
+    baseline: &[PerfRow],
+    current: &[PerfRow],
+    tolerance_pct: f64,
+) -> (Vec<Comparison>, Vec<PerfRow>) {
+    let mut out = Vec::with_capacity(current.len());
+    for cur in current {
+        let base = baseline.iter().find(|b| b.key() == cur.key());
+        let cmp = match base {
+            None => Comparison {
+                current: cur.clone(),
+                baseline_ns: None,
+                delta_pct: None,
+                verdict: Verdict::New,
+            },
+            Some(b) if b.ns_per_channel <= 0.0 => Comparison {
+                current: cur.clone(),
+                baseline_ns: Some(b.ns_per_channel),
+                delta_pct: None,
+                verdict: Verdict::Uncalibrated,
+            },
+            Some(b) => {
+                let delta =
+                    100.0 * (cur.ns_per_channel - b.ns_per_channel) / b.ns_per_channel;
+                let verdict = if delta > tolerance_pct {
+                    Verdict::Regression
+                } else if delta < -tolerance_pct {
+                    Verdict::Faster
+                } else {
+                    Verdict::Ok
+                };
+                Comparison {
+                    current: cur.clone(),
+                    baseline_ns: Some(b.ns_per_channel),
+                    delta_pct: Some(delta),
+                    verdict,
+                }
+            }
+        };
+        out.push(cmp);
+    }
+    let missing: Vec<PerfRow> = baseline
+        .iter()
+        .filter(|b| !current.iter().any(|c| c.key() == b.key()))
+        .cloned()
+        .collect();
+    (out, missing)
+}
+
+fn load_rows(path: &str) -> Result<Vec<PerfRow>> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow!("read {path}: {e}"))?;
+    parse_rows(&text).map_err(|e| anyhow!("{path}: {e:#}"))
+}
+
+fn parse_rows(text: &str) -> Result<Vec<PerfRow>> {
+    let v = Value::parse(text).map_err(|e| anyhow!("{e}"))?;
+    let results = v
+        .get("results")
+        .and_then(Value::as_arr)
+        .ok_or_else(|| anyhow!("missing results[] array"))?;
+    let mut rows = Vec::with_capacity(results.len());
+    for (i, r) in results.iter().enumerate() {
+        let field = |k: &str| {
+            r.get(k).ok_or_else(|| anyhow!("results[{i}] missing '{k}'"))
+        };
+        rows.push(PerfRow {
+            method: field("method")?
+                .as_str()
+                .ok_or_else(|| anyhow!("results[{i}].method not a string"))?
+                .to_string(),
+            bits: field("bits")?
+                .as_str()
+                .ok_or_else(|| anyhow!("results[{i}].bits not a string"))?
+                .to_string(),
+            threads: field("threads")?
+                .as_usize()
+                .ok_or_else(|| anyhow!("results[{i}].threads not a number"))?,
+            ns_per_channel: field("ns_per_channel")?
+                .as_f64()
+                .ok_or_else(|| anyhow!("results[{i}].ns_per_channel not a number"))?,
+        });
+    }
+    Ok(rows)
+}
+
+fn fmt_ns(v: Option<f64>) -> String {
+    match v {
+        Some(ns) if ns > 0.0 => format!("{ns:.1}"),
+        Some(_) => "—".to_string(),
+        None => "—".to_string(),
+    }
+}
+
+fn run() -> Result<bool> {
+    let args = Args::from_env();
+    let baseline_path = args.str("baseline", "BENCH_baseline.json");
+    let current_path = args.str("current", "BENCH_quant.json");
+    if args.switch("write-baseline") {
+        std::fs::copy(&current_path, &baseline_path)
+            .map_err(|e| anyhow!("copy {current_path} -> {baseline_path}: {e}"))?;
+        println!("rebaselined {baseline_path} from {current_path}");
+        return Ok(true);
+    }
+    let env_tol = std::env::var("PERF_GATE_TOLERANCE")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(25.0);
+    let tolerance = args.f64("tolerance-pct", env_tol);
+
+    let baseline = load_rows(&baseline_path)?;
+    let current = load_rows(&current_path)?;
+    let (cmps, missing) = compare(&baseline, &current, tolerance);
+
+    let mut t = Table::new(
+        &format!("perf gate — {current_path} vs {baseline_path} (tolerance {tolerance}%)"),
+        &["method", "bits", "threads", "baseline ns/ch", "current ns/ch", "Δ%", "verdict"],
+    );
+    for c in &cmps {
+        t.row(vec![
+            c.current.method.clone(),
+            c.current.bits.clone(),
+            c.current.threads.to_string(),
+            fmt_ns(c.baseline_ns),
+            fmt_ns(Some(c.current.ns_per_channel)),
+            c.delta_pct.map(|d| format!("{d:+.1}")).unwrap_or_else(|| "—".to_string()),
+            c.verdict.label().to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+    for m in &missing {
+        println!(
+            "warning: baseline row {}/{}/t{} missing from {current_path}",
+            m.method, m.bits, m.threads
+        );
+    }
+
+    let regressions = cmps
+        .iter()
+        .filter(|c| c.verdict == Verdict::Regression)
+        .count();
+    let uncalibrated = cmps
+        .iter()
+        .filter(|c| c.verdict == Verdict::Uncalibrated)
+        .count();
+    if uncalibrated > 0 {
+        println!(
+            "{uncalibrated} row(s) uncalibrated — record a baseline on the CI class \
+             of machine with: cargo run --bin perf_gate -- --write-baseline"
+        );
+    }
+    if regressions > 0 {
+        println!("FAIL: {regressions} row(s) regressed more than {tolerance}%");
+        Ok(false)
+    } else {
+        println!("perf gate passed ({} rows compared)", cmps.len());
+        Ok(true)
+    }
+}
+
+fn main() -> ExitCode {
+    match run() {
+        Ok(true) => ExitCode::SUCCESS,
+        Ok(false) => ExitCode::from(1),
+        Err(e) => {
+            eprintln!("perf_gate error: {e:#}");
+            ExitCode::from(2)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn row(method: &str, bits: &str, threads: usize, ns: f64) -> PerfRow {
+        PerfRow {
+            method: method.to_string(),
+            bits: bits.to_string(),
+            threads,
+            ns_per_channel: ns,
+        }
+    }
+
+    #[test]
+    fn regression_detected_beyond_tolerance() {
+        let base = vec![row("beacon", "2-bit", 1, 100.0)];
+        let cur = vec![row("beacon", "2-bit", 1, 126.0)];
+        let (cmps, missing) = compare(&base, &cur, 25.0);
+        assert!(missing.is_empty());
+        assert_eq!(cmps[0].verdict, Verdict::Regression);
+        // 25% exactly is within tolerance
+        let cur = vec![row("beacon", "2-bit", 1, 125.0)];
+        let (cmps, _) = compare(&base, &cur, 25.0);
+        assert_eq!(cmps[0].verdict, Verdict::Ok);
+    }
+
+    #[test]
+    fn faster_new_uncalibrated_and_missing() {
+        let base = vec![
+            row("beacon", "2-bit", 1, 100.0),
+            row("rtn", "2-bit", 1, 0.0),
+            row("gptq", "2-bit", 1, 50.0),
+        ];
+        let cur = vec![
+            row("beacon", "2-bit", 1, 60.0),
+            row("rtn", "2-bit", 1, 40.0),
+            row("mixed-plan", "2+4", 2, 9.0),
+        ];
+        let (cmps, missing) = compare(&base, &cur, 25.0);
+        assert_eq!(cmps[0].verdict, Verdict::Faster);
+        assert_eq!(cmps[1].verdict, Verdict::Uncalibrated);
+        assert_eq!(cmps[2].verdict, Verdict::New);
+        assert_eq!(missing, vec![row("gptq", "2-bit", 1, 50.0)]);
+    }
+
+    #[test]
+    fn rows_match_on_full_key() {
+        // same method+bits at another thread count is a different row
+        let base = vec![row("beacon", "2-bit", 1, 100.0)];
+        let cur = vec![row("beacon", "2-bit", 4, 100.0)];
+        let (cmps, missing) = compare(&base, &cur, 25.0);
+        assert_eq!(cmps[0].verdict, Verdict::New);
+        assert_eq!(missing.len(), 1);
+    }
+
+    #[test]
+    fn parses_bench_record_shape() {
+        let text = r#"{
+  "bench": "quant_kernels",
+  "layer": {"rows": 512, "n": 64, "channels": 128},
+  "host_threads": 8,
+  "results": [
+    {"method": "beacon", "bits": "2-bit", "threads": 1, "median_ns": 123456, "ns_per_channel": 964.5},
+    {"method": "mixed-plan", "bits": "2+4", "threads": 4, "median_ns": 9999, "ns_per_channel": 20.8}
+  ]
+}"#;
+        let rows = parse_rows(text).unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].method, "beacon");
+        assert_eq!(rows[1].threads, 4);
+        assert!((rows[1].ns_per_channel - 20.8).abs() < 1e-9);
+        assert!(parse_rows("{}").is_err());
+        assert!(parse_rows("{\"results\": [{\"method\": \"x\"}]}").is_err());
+    }
+}

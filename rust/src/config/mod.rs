@@ -247,6 +247,90 @@ impl QuantConfig {
     }
 }
 
+/// The planner's search space: which `(method, bits)` assignments are
+/// probed per layer and the size-weighted effective-bits budget the
+/// greedy allocation must respect (`--auto-plan --budget-bits B`).
+///
+/// Empty `methods`/`widths` mean "default": the base config's method and
+/// every supported width ([`BitWidth::ALL`]). Resolution happens in
+/// [`crate::coordinator::planner::search_plan`] so one `SearchSpace`
+/// value works against any base config.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SearchSpace {
+    /// candidate methods (empty = just the base config's method)
+    pub methods: Vec<Method>,
+    /// candidate bit widths (empty = [`BitWidth::ALL`])
+    pub widths: Vec<BitWidth>,
+    /// size-weighted effective bits/weight ceiling for the emitted plan
+    pub budget_bits: f64,
+}
+
+impl SearchSpace {
+    /// Default grid at the given budget: base method × all widths.
+    pub fn new(budget_bits: f64) -> SearchSpace {
+        SearchSpace { methods: Vec::new(), widths: Vec::new(), budget_bits }
+    }
+
+    /// Parse from the CLI surface: comma-separated method and width lists
+    /// (either may be `None` to keep the default).
+    pub fn parse(
+        budget_bits: f64,
+        methods_csv: Option<&str>,
+        widths_csv: Option<&str>,
+    ) -> Result<SearchSpace> {
+        let mut space = SearchSpace::new(budget_bits);
+        if let Some(csv) = methods_csv {
+            for part in csv.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+                space.methods.push(
+                    Method::parse(part)
+                        .ok_or_else(|| anyhow::anyhow!("unknown method '{part}'"))?,
+                );
+            }
+        }
+        if let Some(csv) = widths_csv {
+            for part in csv.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+                space.widths.push(
+                    BitWidth::parse(part)
+                        .ok_or_else(|| anyhow::anyhow!("unsupported bits '{part}'"))?,
+                );
+            }
+        }
+        space.validate()?;
+        Ok(space)
+    }
+
+    /// Structural validation (the planner re-checks the budget against the
+    /// resolved floor width, which needs the concrete candidate grid).
+    pub fn validate(&self) -> Result<()> {
+        if !self.budget_bits.is_finite() || self.budget_bits <= 0.0 {
+            bail!("--budget-bits must be a positive number, got {}", self.budget_bits);
+        }
+        Ok(())
+    }
+
+    /// The candidate widths, resolved (default grid if unset), deduped and
+    /// sorted ascending — the upgrade ladder the greedy allocation climbs.
+    pub fn sorted_widths(&self) -> Vec<BitWidth> {
+        let mut widths: Vec<BitWidth> = if self.widths.is_empty() {
+            BitWidth::ALL.to_vec()
+        } else {
+            self.widths.clone()
+        };
+        widths.sort_by(|a, b| a.0.total_cmp(&b.0));
+        widths.dedup_by(|a, b| (a.0 - b.0).abs() < 1e-9);
+        widths
+    }
+
+    /// The candidate methods, resolved against a base config.
+    pub fn resolved_methods(&self, base: &QuantConfig) -> Vec<Method> {
+        if self.methods.is_empty() {
+            vec![base.method]
+        } else {
+            self.methods.clone()
+        }
+    }
+}
+
 pub(crate) fn parse_bool(v: &str) -> Result<bool> {
     match v.to_ascii_lowercase().as_str() {
         "true" | "1" | "yes" | "on" => Ok(true),
@@ -352,5 +436,31 @@ mod tests {
         assert_eq!(Method::parse("GPTQ"), Some(Method::Gptq));
         assert_eq!(Method::parse("beacon"), Some(Method::Beacon));
         assert_eq!(Method::parse("x"), None);
+    }
+
+    #[test]
+    fn search_space_defaults_and_parse() {
+        let s = SearchSpace::new(2.5);
+        assert!(s.methods.is_empty() && s.widths.is_empty());
+        let base = QuantConfig { method: Method::Comq, ..QuantConfig::default() };
+        assert_eq!(s.resolved_methods(&base), vec![Method::Comq]);
+        let w = s.sorted_widths();
+        assert_eq!(w.len(), BitWidth::ALL.len());
+        assert!(w.windows(2).all(|p| p[0].0 < p[1].0));
+
+        let s = SearchSpace::parse(3.0, Some("beacon, comq"), Some("2,4,2")).unwrap();
+        assert_eq!(s.methods, vec![Method::Beacon, Method::Comq]);
+        // duplicate widths collapse, sorted ascending
+        let w = s.sorted_widths();
+        assert_eq!(w.iter().map(|b| b.0).collect::<Vec<_>>(), vec![2.0, 4.0]);
+    }
+
+    #[test]
+    fn search_space_rejects_garbage() {
+        assert!(SearchSpace::parse(0.0, None, None).is_err());
+        assert!(SearchSpace::parse(-2.0, None, None).is_err());
+        assert!(SearchSpace::parse(f64::NAN, None, None).is_err());
+        assert!(SearchSpace::parse(2.5, Some("awq"), None).is_err());
+        assert!(SearchSpace::parse(2.5, None, Some("7.3")).is_err());
     }
 }

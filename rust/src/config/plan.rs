@@ -438,6 +438,23 @@ impl QuantPlan {
         PlanBuilder::uniform(cfg).build(layers)
     }
 
+    /// Construct a plan directly from already-resolved assignments — the
+    /// planner's emission path (its greedy allocation produces one
+    /// concrete `(method, bits)` per layer, no glob compilation step).
+    /// Applies the same base-config validation as [`PlanBuilder::build`];
+    /// the emitted plan round-trips through [`QuantPlan::to_manifest`]
+    /// like any other.
+    pub fn from_assignments(
+        base: QuantConfig,
+        assignments: Vec<LayerAssignment>,
+    ) -> Result<QuantPlan> {
+        if assignments.is_empty() {
+            bail!("cannot build a plan with zero assignments");
+        }
+        base.bit_width().context("base config")?;
+        Ok(QuantPlan { base, assignments })
+    }
+
     /// The assignment for a concrete layer name, if the plan covers it.
     pub fn assignment_for(&self, layer: &str) -> Option<&LayerAssignment> {
         self.assignments.iter().find(|a| a.layer == layer)
@@ -685,6 +702,31 @@ bits = 3
         assert!(PlanBuilder::from_manifest_text(text).is_err());
         let bad = "[layer blocks.*]\nspec = rtn\n";
         assert!(PlanBuilder::from_manifest_text(bad).is_err());
+    }
+
+    #[test]
+    fn from_assignments_round_trips_and_validates() {
+        let base = QuantConfig::default();
+        let assignments: Vec<LayerAssignment> = layers()
+            .iter()
+            .enumerate()
+            .map(|(i, l)| LayerAssignment {
+                layer: l.clone(),
+                method: if i % 2 == 0 { Method::Beacon } else { Method::Comq },
+                bits: if i % 2 == 0 { BitWidth::B2 } else { BitWidth::B4 },
+                loops: base.loops,
+                error_correction: base.error_correction,
+                centering: base.centering,
+                gptq_damp: base.gptq_damp,
+            })
+            .collect();
+        let plan = QuantPlan::from_assignments(base.clone(), assignments).unwrap();
+        let back = QuantPlan::from_manifest(&plan.to_manifest(), &layers()).unwrap();
+        assert_eq!(back, plan);
+        assert!(QuantPlan::from_assignments(base, Vec::new()).is_err());
+        let bad = QuantConfig { bits: 7.3, ..QuantConfig::default() };
+        let a = plan.assignments.clone();
+        assert!(QuantPlan::from_assignments(bad, a).is_err());
     }
 
     #[test]

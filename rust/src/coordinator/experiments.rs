@@ -3,11 +3,9 @@
 //! rendered table AND the raw numbers so benches and EXPERIMENTS.md can
 //! both consume them.
 
-use std::time::Instant;
-
 use anyhow::Result;
 
-use crate::config::{Method, QuantConfig};
+use crate::config::{Method, QuantConfig, SearchSpace};
 use crate::linalg::{qr_factor, Matrix};
 use crate::quant::alphabet::{alphabet, BitWidth};
 use crate::quant::beacon::{beacon_channel, beacon_objective};
@@ -274,6 +272,44 @@ pub fn ablate_ec(pipe: &mut Pipeline, bits: BitWidth) -> Result<Table> {
             format!("{e1:.4}"),
             format!("{e2:.4}"),
             format!("{:+.1}", 100.0 * (e1 - e2) / e1.max(1e-12)),
+        ]);
+    }
+    Ok(table)
+}
+
+/// S1: auto-plan budget sweep — for each effective-bits budget, search a
+/// plan ([`Pipeline::auto_plan`]) over `space`'s candidate grid (its
+/// `budget_bits` is replaced per row), run it, and report it next to the
+/// uniform plan at the budget width (when the budget names a supported
+/// width) so the allocation's edge over uniform precision is visible.
+pub fn budget_sweep(
+    pipe: &mut Pipeline,
+    base: &QuantConfig,
+    space: &SearchSpace,
+    budgets: &[f64],
+) -> Result<Table> {
+    let mut table = Table::new(
+        "S1 — auto-plan budget sweep (searched vs uniform at the budget width)",
+        &["budget", "searched eff bits", "searched top-1 %", "uniform top-1 %", "plan"],
+    );
+    for &budget in budgets {
+        let mut space = space.clone();
+        space.budget_bits = budget;
+        let (plan, preport) = pipe.auto_plan(base, &space)?;
+        let report = pipe.quantize(&plan)?;
+        let uniform = match BitWidth::parse(&format!("{budget}")) {
+            Some(b) => {
+                let qc = QuantConfig { bits: b.0, ..base.clone() };
+                pct(pipe.quantize_cfg(&qc)?.top1)
+            }
+            None => "—".to_string(),
+        };
+        table.row(vec![
+            format!("{budget:.2}"),
+            format!("{:.3}", preport.effective_bits),
+            pct(report.top1),
+            uniform,
+            plan.label(),
         ]);
     }
     Ok(table)

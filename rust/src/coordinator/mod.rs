@@ -9,6 +9,8 @@ pub mod eval;
 pub mod experiments;
 pub mod lntune;
 pub mod pipeline;
+pub mod planner;
 pub mod report;
 
 pub use pipeline::{KernelBackend, LayerReport, Pipeline, QuantReport};
+pub use planner::{LayerProbe, PlannerReport, ProbeCell};

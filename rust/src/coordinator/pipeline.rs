@@ -29,7 +29,7 @@ use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
-use crate::config::{Method, QuantConfig, QuantPlan, RecapturePolicy};
+use crate::config::{Method, QuantConfig, QuantPlan, RecapturePolicy, SearchSpace};
 use crate::data::Dataset;
 use crate::linalg::{qr_factor, Matrix};
 use crate::model::spec::param_spec;
@@ -73,6 +73,9 @@ pub struct QuantReport {
     pub ln_tune_secs: f64,
     pub eval_secs: f64,
     pub ln_tune_losses: Vec<f32>,
+    /// how the plan was searched, when it came from `--auto-plan`
+    /// ([`Pipeline::auto_plan`]); `None` for hand-written plans
+    pub planner: Option<super::planner::PlannerReport>,
 }
 
 impl QuantReport {
@@ -95,6 +98,9 @@ pub struct Pipeline {
     pub backend: KernelBackend,
     /// cached FP activations (inputs to each quantizable layer) + logits
     acts_fp: Option<Vec<Matrix>>,
+    /// cached per-layer grams XᵀX of `acts_fp` — computed once and shared
+    /// by per-layer error reporting and the planner probes
+    grams_fp: Option<Vec<Matrix>>,
     fp_logits_calib: Option<Vec<f32>>,
     fp_top1: Option<f64>,
 }
@@ -115,6 +121,7 @@ impl Pipeline {
             eval,
             backend: KernelBackend::Pjrt,
             acts_fp: None,
+            grams_fp: None,
             fp_logits_calib: None,
             fp_top1: None,
         })
@@ -186,6 +193,23 @@ impl Pipeline {
         Ok(())
     }
 
+    /// Each layer's gram XᵀX over the cached FP activations, computed
+    /// exactly once per pipeline (the layers fan over the pool — grams
+    /// are pure, so the cache is bit-identical at any thread count).
+    /// Shared by quantization error reporting and the planner probes,
+    /// which used to compute the same matrices independently.
+    fn ensure_fp_grams(&mut self) -> Result<()> {
+        self.ensure_fp_acts()?;
+        if self.grams_fp.is_none() {
+            let acts = self.acts_fp.as_ref().expect("ensured");
+            let threads = crate::util::pool::resolve_threads(0);
+            let grams =
+                crate::util::pool::par_map_indexed(acts.len(), threads, |i| acts[i].gram());
+            self.grams_fp = Some(grams);
+        }
+        Ok(())
+    }
+
     pub fn fp_top1(&mut self) -> Result<f64> {
         if let Some(v) = self.fp_top1 {
             return Ok(v);
@@ -206,6 +230,39 @@ impl Pipeline {
     /// method/bits) against this pipeline's model.
     pub fn uniform_plan(&self, qc: &QuantConfig) -> Result<QuantPlan> {
         QuantPlan::uniform(qc, self.quantizable())
+    }
+
+    /// Search a [`QuantPlan`] automatically (`--auto-plan`): probe every
+    /// candidate `(method, bits)` in `space` on every quantizable layer
+    /// against the calibration grams (computed once and shared with the
+    /// quantization error reporting), then greedily allocate widths under
+    /// `space.budget_bits`. See [`super::planner`] for the algorithm and
+    /// its determinism/monotonicity guarantees. The emitted plan
+    /// round-trips through [`QuantPlan::to_manifest`], so `--save-plan`
+    /// makes the search reproducible and diffable.
+    pub fn auto_plan(
+        &mut self,
+        base: &QuantConfig,
+        space: &SearchSpace,
+    ) -> Result<(QuantPlan, super::planner::PlannerReport)> {
+        self.ensure_fp_grams()?;
+        let quantizable = self.artifacts.manifest.quantizable.clone();
+        let acts = self.acts_fp.as_ref().expect("ensured");
+        let grams = self.grams_fp.as_ref().expect("ensured");
+        let weights: Vec<Matrix> =
+            quantizable.iter().map(|l| self.weights_fp.matrix(l)).collect();
+        let probes: Vec<super::planner::LayerProbe<'_>> = quantizable
+            .iter()
+            .enumerate()
+            .map(|(i, l)| super::planner::LayerProbe {
+                name: l.as_str(),
+                x: &acts[i],
+                gram: &grams[i],
+                w: &weights[i],
+                numel: self.weights_fp.get(l).numel(),
+            })
+            .collect();
+        super::planner::search_plan(base, &probes, space)
     }
 
     /// The quantizer for one resolved `(method, bits, opts)` assignment:
@@ -417,9 +474,10 @@ impl Pipeline {
                 l
             );
         }
-        self.ensure_fp_acts()?;
+        self.ensure_fp_grams()?;
         let fp_top1 = self.fp_top1()?;
         let acts_fp = self.acts_fp.clone().expect("ensured");
+        let grams_fp = self.grams_fp.clone().expect("ensured");
         let base = &plan.base;
 
         // one quantizer per layer, picked from the plan entry (uniform
@@ -457,9 +515,9 @@ impl Pipeline {
                     w: &w,
                     threads: sched.channel_threads,
                 })?;
-                // gram-based metric: avoids two m×N×N' products per layer
+                // gram-based metric over the shared per-layer gram cache
                 let err = crate::quant::metrics::layer_recon_error_gram(
-                    &x.gram(),
+                    &grams_fp[li],
                     &w,
                     &lq.dequant,
                 );
@@ -498,7 +556,7 @@ impl Pipeline {
                     threads: sched.channel_threads,
                 })?;
                 layer_errors.push(crate::quant::metrics::layer_recon_error_gram(
-                    &x.gram(),
+                    &grams_fp[li],
                     &w,
                     &lq.dequant,
                 ));
@@ -547,6 +605,7 @@ impl Pipeline {
                 ln_tune_secs,
                 eval_secs,
                 ln_tune_losses,
+                planner: None,
             },
             work,
         ))

@@ -1,0 +1,547 @@
+//! Loss-aware automatic plan search: the *policy* layer on top of the
+//! PR 1/PR 2 mechanism (`Quantizer` trait + `QuantPlan`).
+//!
+//! The plan API can express any mixed-method / mixed-precision
+//! assignment, but until now every plan was hand-written via `--override`
+//! globs. This module *generates* one: LeanQuant/COMQ-style cheap
+//! per-layer loss probes drive a greedy budgeted bit allocation, no
+//! backprop involved.
+//!
+//! ```text
+//!   per layer: gram G = XᵀX  (computed ONCE, shared with error reporting)
+//!     probe every candidate (method, bits):  quantize → err via G
+//!   greedy: start all layers at the floor width, repeatedly upgrade the
+//!     layer with the best Δerror per Δeffective-bit until the
+//!     size-weighted effective_bits budget is exhausted
+//!   emit: QuantPlan (+ manifest via --save-plan) + PlannerReport
+//! ```
+//!
+//! Two properties are load-bearing and guaranteed by construction:
+//!
+//! * **Determinism** — probes fan over [`crate::quant::engine::plan`] /
+//!   [`run_probe_grid`](crate::quant::engine::run_probe_grid) (index-order
+//!   gather, pure native quantizers), and every tie-break is positional,
+//!   so the searched plan is bit-identical at any thread count.
+//! * **Budget monotonicity** — the upgrade sequence is simulated once
+//!   with an *unbounded* budget (so it depends only on the probe errors
+//!   and layer sizes), then applied as a prefix that stops at the first
+//!   unaffordable upgrade. A larger budget can only extend the prefix,
+//!   so per-layer widths never decrease as the budget grows, and a
+//!   budget at the floor (resp. top) candidate width degenerates to the
+//!   uniform floor (resp. top) plan.
+
+use anyhow::{anyhow, bail, ensure, Result};
+
+use crate::config::{LayerAssignment, Method, QuantConfig, QuantPlan, SearchSpace};
+use crate::linalg::Matrix;
+use crate::quant::alphabet::BitWidth;
+use crate::quant::engine::{self, LayerCtx};
+use crate::quant::metrics::layer_recon_error_gram;
+use crate::util::pool;
+
+/// Everything the planner looks at for one layer. The gram is the
+/// layer's `XᵀX`, computed once by the caller (the pipeline caches it and
+/// shares the same matrix with per-layer error reporting).
+#[derive(Clone, Copy)]
+pub struct LayerProbe<'a> {
+    pub name: &'a str,
+    /// FP activations feeding the layer (m×N)
+    pub x: &'a Matrix,
+    /// gram of `x` (N×N) — the probe scoring fast path
+    pub gram: &'a Matrix,
+    /// layer weights (N×N'), channels = columns
+    pub w: &'a Matrix,
+    /// element count (the effective-bits weight)
+    pub numel: usize,
+}
+
+/// One probed `(method, bits)` candidate and the relative reconstruction
+/// error it achieved on its layer.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ProbeCell {
+    pub method: Method,
+    pub bits: BitWidth,
+    pub error: f64,
+}
+
+/// The pure allocation result over a probe error matrix.
+#[derive(Debug, Clone)]
+pub struct Allocation {
+    /// per layer: index into the ascending candidate width ladder
+    pub width_idx: Vec<usize>,
+    /// per layer: the winning probe cell at the allocated width
+    pub chosen: Vec<ProbeCell>,
+    /// size-weighted effective bits/weight of the chosen allocation
+    pub effective_bits: f64,
+    /// the floor (smallest) candidate width every layer starts at
+    pub floor_bits: f64,
+    pub upgrades_applied: usize,
+    pub upgrades_total: usize,
+}
+
+/// Per-layer slice of the planner report: the full probe row plus the
+/// chosen assignment.
+#[derive(Debug, Clone)]
+pub struct LayerProbeReport {
+    pub layer: String,
+    pub numel: usize,
+    /// every probed candidate, in (width-major, method-minor) order
+    pub probes: Vec<ProbeCell>,
+    pub chosen: ProbeCell,
+}
+
+/// What the search did: probe counts, the probe error matrix, the chosen
+/// allocation and how much of the budget it used. Attached to
+/// [`crate::coordinator::QuantReport::planner`] for `--auto-plan` runs
+/// and rendered by [`crate::coordinator::report::planner_table`].
+#[derive(Debug, Clone)]
+pub struct PlannerReport {
+    pub budget_bits: f64,
+    pub probe_count: usize,
+    pub layers: Vec<LayerProbeReport>,
+    pub effective_bits: f64,
+    pub floor_bits: f64,
+    pub upgrades_applied: usize,
+    pub upgrades_total: usize,
+}
+
+impl PlannerReport {
+    /// Fraction of the effective-bits budget the chosen plan uses.
+    pub fn budget_utilization(&self) -> f64 {
+        self.effective_bits / self.budget_bits
+    }
+}
+
+/// Probe every `(method, bits)` candidate on every layer and score it
+/// with the shared-gram reconstruction error. Rows come back in layer
+/// order, cells in (width-major, method-minor) candidate order.
+///
+/// The sweep reuses the engine scheduler ([`engine::plan`] +
+/// [`engine::run_probe_grid`]): layers fan across the layer axis, each
+/// probe's channel sweep gets the per-layer channel budget, and gathering
+/// is index-ordered — the probe matrix is bit-identical at any thread
+/// count. Probes always run the *native* quantizer (pure and
+/// parallel-safe; the PJRT adapter is serialized behind a runtime lock)
+/// against the FP activations — no error-correction recapture during
+/// search.
+pub fn probe_errors(
+    base: &QuantConfig,
+    probes: &[LayerProbe<'_>],
+    space: &SearchSpace,
+) -> Result<Vec<Vec<ProbeCell>>> {
+    space.validate()?;
+    if probes.is_empty() {
+        bail!("planner needs at least one layer probe");
+    }
+    let methods = space.resolved_methods(base);
+    let widths = space.sorted_widths();
+    let cands: Vec<(Method, BitWidth)> = widths
+        .iter()
+        .flat_map(|b| methods.iter().map(move |m| (*m, *b)))
+        .collect();
+    let threads = pool::resolve_threads(base.threads);
+    let sched = engine::plan(threads, probes.len(), true);
+    engine::run_probe_grid(sched, probes.len(), cands.len(), |li, ci| {
+        let p = &probes[li];
+        let (method, bits) = cands[ci];
+        let qc = QuantConfig {
+            method,
+            bits: bits.0,
+            error_correction: false,
+            ..base.clone()
+        };
+        let lq = method
+            .quantizer(bits, &qc)
+            .quantize_layer(&LayerCtx::plain(p.x, p.w, sched.channel_threads))?;
+        let error = layer_recon_error_gram(p.gram, p.w, &lq.dequant);
+        ensure!(
+            error.is_finite(),
+            "layer '{}': probe {}:{} produced a non-finite error",
+            p.name,
+            method.name(),
+            bits.label()
+        );
+        Ok(ProbeCell { method, bits, error })
+    })
+}
+
+/// Greedy budgeted allocation over a probe error matrix (pure — no
+/// quantizer runs, so the property tests drive it directly).
+///
+/// Every layer starts at the floor width with its best-method probe;
+/// upgrades (one width step at a time, best method at the target width)
+/// are ordered by marginal gain `Δerror / Δeffective-bits` with the order
+/// computed *independently of the budget*, then applied as a prefix that
+/// stops at the first upgrade exceeding `budget_bits`. See the module
+/// docs for why prefix semantics (rather than skip-and-continue) are
+/// required for budget monotonicity.
+pub fn allocate(
+    probe: &[Vec<ProbeCell>],
+    numels: &[usize],
+    budget_bits: f64,
+) -> Result<Allocation> {
+    if probe.is_empty() {
+        bail!("allocate: no layers");
+    }
+    ensure!(
+        probe.len() == numels.len(),
+        "allocate: {} probe rows vs {} layer sizes",
+        probe.len(),
+        numels.len()
+    );
+    if let Some(li) = numels.iter().position(|n| *n == 0) {
+        bail!("allocate: layer {li} has zero elements");
+    }
+
+    // width ladder from the first layer's cells, ascending
+    let mut widths: Vec<BitWidth> = Vec::new();
+    for c in &probe[0] {
+        if !widths.iter().any(|w| (w.0 - c.bits.0).abs() < 1e-9) {
+            widths.push(c.bits);
+        }
+    }
+    widths.sort_by(|a, b| a.0.total_cmp(&b.0));
+    if widths.is_empty() {
+        bail!("allocate: layer 0 has no probe cells");
+    }
+    let (nl, nw) = (probe.len(), widths.len());
+
+    // best (lowest-error) cell per (layer, width); earlier candidate wins ties
+    let mut best: Vec<Vec<ProbeCell>> = Vec::with_capacity(nl);
+    for (li, row) in probe.iter().enumerate() {
+        let mut per: Vec<Option<ProbeCell>> = vec![None; nw];
+        for c in row {
+            ensure!(
+                c.error.is_finite(),
+                "allocate: layer {li} probe {}:{} error is not finite",
+                c.method.name(),
+                c.bits.label()
+            );
+            let wi = widths
+                .iter()
+                .position(|w| (w.0 - c.bits.0).abs() < 1e-9)
+                .ok_or_else(|| {
+                    anyhow!(
+                        "allocate: layer {li} probes width {} absent from layer 0",
+                        c.bits.label()
+                    )
+                })?;
+            match &per[wi] {
+                Some(b) if b.error <= c.error => {}
+                _ => per[wi] = Some(*c),
+            }
+        }
+        let per: Vec<ProbeCell> = per
+            .into_iter()
+            .enumerate()
+            .map(|(wi, c)| {
+                c.ok_or_else(|| {
+                    anyhow!("allocate: layer {li} has no probe at {}", widths[wi].label())
+                })
+            })
+            .collect::<Result<_>>()?;
+        best.push(per);
+    }
+
+    let total: f64 = numels.iter().map(|n| *n as f64).sum();
+    let floor_bits = widths[0].0;
+    if budget_bits + 1e-9 < floor_bits {
+        bail!(
+            "budget {budget_bits} bits is below the floor candidate width {} — \
+             the smallest achievable effective bits",
+            widths[0].label()
+        );
+    }
+    let step_cost = |li: usize, wi: usize| -> f64 {
+        numels[li] as f64 * (widths[wi + 1].0 - widths[wi].0) / total
+    };
+
+    // budget-independent upgrade sequence: greedy marginal gain simulated
+    // with an unbounded budget; ties go to the lower layer index
+    let mut cur = vec![0usize; nl];
+    let mut seq: Vec<(usize, f64)> = Vec::new();
+    loop {
+        let mut pick: Option<(f64, usize)> = None;
+        for li in 0..nl {
+            let wi = cur[li];
+            if wi + 1 >= nw {
+                continue;
+            }
+            let gain = (best[li][wi].error - best[li][wi + 1].error) / step_cost(li, wi);
+            let better = match pick {
+                None => true,
+                Some((g, _)) => gain > g,
+            };
+            if better {
+                pick = Some((gain, li));
+            }
+        }
+        let Some((_, li)) = pick else { break };
+        seq.push((li, step_cost(li, cur[li])));
+        cur[li] += 1;
+    }
+
+    // prefix application under the budget
+    let mut width_idx = vec![0usize; nl];
+    let mut eff = floor_bits;
+    let mut applied = 0usize;
+    for &(li, cost) in &seq {
+        if eff + cost > budget_bits + 1e-9 {
+            break;
+        }
+        eff += cost;
+        width_idx[li] += 1;
+        applied += 1;
+    }
+
+    let chosen: Vec<ProbeCell> = (0..nl).map(|li| best[li][width_idx[li]]).collect();
+    let effective_bits = (0..nl)
+        .map(|li| numels[li] as f64 * chosen[li].bits.0)
+        .sum::<f64>()
+        / total;
+    Ok(Allocation {
+        width_idx,
+        chosen,
+        effective_bits,
+        floor_bits,
+        upgrades_applied: applied,
+        upgrades_total: seq.len(),
+    })
+}
+
+/// The full search: probe, allocate, emit. Returns the searched
+/// [`QuantPlan`] (base-config pipeline knobs + per-layer `(method, bits)`
+/// from the allocation — it round-trips through
+/// [`QuantPlan::to_manifest`] like any hand-written plan) and the
+/// [`PlannerReport`] describing how the search got there.
+pub fn search_plan(
+    base: &QuantConfig,
+    probes: &[LayerProbe<'_>],
+    space: &SearchSpace,
+) -> Result<(QuantPlan, PlannerReport)> {
+    let cells = probe_errors(base, probes, space)?;
+    let numels: Vec<usize> = probes.iter().map(|p| p.numel).collect();
+    let alloc = allocate(&cells, &numels, space.budget_bits)?;
+
+    let assignments: Vec<LayerAssignment> = probes
+        .iter()
+        .zip(&alloc.chosen)
+        .map(|(p, c)| LayerAssignment {
+            layer: p.name.to_string(),
+            method: c.method,
+            bits: c.bits,
+            loops: base.loops,
+            error_correction: base.error_correction,
+            centering: base.centering,
+            gptq_damp: base.gptq_damp,
+        })
+        .collect();
+    let plan = QuantPlan::from_assignments(base.clone(), assignments)?;
+
+    let report = PlannerReport {
+        budget_bits: space.budget_bits,
+        probe_count: cells.iter().map(|row| row.len()).sum(),
+        layers: probes
+            .iter()
+            .zip(&cells)
+            .zip(&alloc.chosen)
+            .map(|((p, row), c)| LayerProbeReport {
+                layer: p.name.to_string(),
+                numel: p.numel,
+                probes: row.clone(),
+                chosen: *c,
+            })
+            .collect(),
+        effective_bits: alloc.effective_bits,
+        floor_bits: alloc.floor_bits,
+        upgrades_applied: alloc.upgrades_applied,
+        upgrades_total: alloc.upgrades_total,
+    };
+    Ok((plan, report))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::Gen;
+
+    fn cell(method: Method, bits: f64, error: f64) -> ProbeCell {
+        ProbeCell { method, bits: BitWidth::parse(&format!("{bits}")).unwrap(), error }
+    }
+
+    #[test]
+    fn allocate_hand_checked_two_layers() {
+        // widths {2, 4}, equal sizes. Upgrading layer 0 buys 0.4 error
+        // per effective bit, layer 1 only 0.05 — at budget 3.0 exactly
+        // one upgrade fits and it must go to layer 0.
+        let probe = vec![
+            vec![cell(Method::Beacon, 2.0, 0.5), cell(Method::Beacon, 4.0, 0.1)],
+            vec![cell(Method::Beacon, 2.0, 0.4), cell(Method::Beacon, 4.0, 0.35)],
+        ];
+        let a = allocate(&probe, &[100, 100], 3.0).unwrap();
+        assert_eq!(a.width_idx, vec![1, 0]);
+        assert!((a.effective_bits - 3.0).abs() < 1e-12, "{}", a.effective_bits);
+        assert_eq!((a.upgrades_applied, a.upgrades_total), (1, 2));
+        assert!((a.floor_bits - 2.0).abs() < 1e-12);
+        // weighted error 0.1 + 0.4 = 0.5 beats the only other allocation
+        // at ≤ 3 effective bits that upgrades anything (0.5 + 0.35)
+        let werr: f64 = a.chosen.iter().map(|c| 100.0 * c.error).sum();
+        assert!((werr - 50.0).abs() < 1e-9, "{werr}");
+    }
+
+    #[test]
+    fn allocate_floor_and_top_budgets_are_uniform() {
+        let b = Method::Beacon;
+        let probe = vec![
+            vec![cell(b, 2.0, 0.5), cell(b, 3.0, 0.2), cell(b, 4.0, 0.1)],
+            vec![cell(b, 2.0, 0.6), cell(b, 3.0, 0.5), cell(b, 4.0, 0.4)],
+            vec![cell(b, 2.0, 0.3), cell(b, 3.0, 0.1), cell(b, 4.0, 0.05)],
+        ];
+        let sizes = [64usize, 256, 32];
+        let floor = allocate(&probe, &sizes, 2.0).unwrap();
+        assert_eq!(floor.width_idx, vec![0, 0, 0]);
+        assert!((floor.effective_bits - 2.0).abs() < 1e-12);
+        let top = allocate(&probe, &sizes, 4.0).unwrap();
+        assert_eq!(top.width_idx, vec![2, 2, 2]);
+        assert!((top.effective_bits - 4.0).abs() < 1e-9);
+        assert_eq!(top.upgrades_applied, top.upgrades_total);
+    }
+
+    #[test]
+    fn allocate_monotone_in_budget_and_respects_it() {
+        // pseudo-random error matrices: widths {2, 2.58, 3, 4}, errors
+        // decreasing in bits (scaled per layer)
+        let widths = [2.0, 2.58, 3.0, 4.0];
+        for seed in 0..10u64 {
+            let mut g = Gen { rng: crate::data::rng::SplitMix64::new(seed) };
+            let nl = g.usize_in(2, 7);
+            let mut probe = Vec::new();
+            let mut sizes = Vec::new();
+            for _ in 0..nl {
+                let scale = g.f64_in(0.1, 1.0);
+                let row: Vec<ProbeCell> = widths
+                    .iter()
+                    .enumerate()
+                    .map(|(wi, w)| {
+                        cell(Method::Beacon, *w, scale / (wi as f64 + g.f64_in(1.0, 3.0)))
+                    })
+                    .collect();
+                probe.push(row);
+                sizes.push(g.usize_in(16, 4096));
+            }
+            let budgets = [2.0, 2.3, 2.58, 2.8, 3.0, 3.3, 3.7, 4.0];
+            let mut prev: Option<Allocation> = None;
+            for b in budgets {
+                let a = allocate(&probe, &sizes, b).unwrap();
+                assert!(
+                    a.effective_bits <= b + 1e-9,
+                    "seed {seed} budget {b}: effective {}",
+                    a.effective_bits
+                );
+                if let Some(p) = &prev {
+                    for li in 0..nl {
+                        assert!(
+                            a.width_idx[li] >= p.width_idx[li],
+                            "seed {seed} budget {b}: layer {li} width decreased"
+                        );
+                    }
+                }
+                prev = Some(a);
+            }
+        }
+    }
+
+    #[test]
+    fn allocate_picks_best_method_per_width() {
+        // comq wins at 2 bits on layer 0, beacon at 4 bits
+        let probe = vec![vec![
+            cell(Method::Beacon, 2.0, 0.6),
+            cell(Method::Comq, 2.0, 0.5),
+            cell(Method::Beacon, 4.0, 0.1),
+            cell(Method::Comq, 4.0, 0.2),
+        ]];
+        let low = allocate(&probe, &[10], 2.0).unwrap();
+        assert_eq!(low.chosen[0].method, Method::Comq);
+        let high = allocate(&probe, &[10], 4.0).unwrap();
+        assert_eq!(high.chosen[0].method, Method::Beacon);
+    }
+
+    #[test]
+    fn allocate_rejects_bad_inputs() {
+        let probe = vec![vec![cell(Method::Beacon, 2.0, 0.5)]];
+        assert!(allocate(&[], &[], 2.0).is_err());
+        assert!(allocate(&probe, &[1, 2], 2.0).is_err());
+        assert!(allocate(&probe, &[0], 2.0).is_err());
+        // budget below the floor width
+        assert!(allocate(&probe, &[10], 1.0).is_err());
+        // ragged width grids
+        let ragged = vec![
+            vec![cell(Method::Beacon, 2.0, 0.5), cell(Method::Beacon, 4.0, 0.2)],
+            vec![cell(Method::Beacon, 2.0, 0.5)],
+        ];
+        assert!(allocate(&ragged, &[10, 10], 3.0).is_err());
+        let extra = vec![
+            vec![cell(Method::Beacon, 2.0, 0.5)],
+            vec![cell(Method::Beacon, 3.0, 0.5)],
+        ];
+        assert!(allocate(&extra, &[10, 10], 3.0).is_err());
+        // non-finite probe error
+        let nan = vec![vec![cell(Method::Beacon, 2.0, f64::NAN)]];
+        assert!(allocate(&nan, &[10], 2.0).is_err());
+    }
+
+    #[test]
+    fn search_plan_end_to_end_on_synthetic_layers() {
+        // real quantizer probes (RTN — cheap) over synthetic layers; the
+        // searched plan must respect the budget and round-trip through
+        // the manifest machinery
+        let mut g = Gen { rng: crate::data::rng::SplitMix64::new(99) };
+        let names = ["blocks.0.qkv.w", "blocks.0.fc1.w", "blocks.0.fc2.w"];
+        let shapes = [(48usize, 8usize, 12usize), (48, 8, 16), (48, 16, 8)];
+        let xs: Vec<Matrix> = shapes
+            .iter()
+            .map(|&(m, n, _)| Matrix::from_vec(m, n, g.vec_normal(m * n, 1.0)))
+            .collect();
+        let grams: Vec<Matrix> = xs.iter().map(|x| x.gram()).collect();
+        let ws: Vec<Matrix> = shapes
+            .iter()
+            .map(|&(_, n, np)| Matrix::from_vec(n, np, g.vec_normal(n * np, 0.3)))
+            .collect();
+        let probes: Vec<LayerProbe> = (0..3)
+            .map(|i| LayerProbe {
+                name: names[i],
+                x: &xs[i],
+                gram: &grams[i],
+                w: &ws[i],
+                numel: ws[i].rows * ws[i].cols,
+            })
+            .collect();
+        let base = QuantConfig { method: Method::Rtn, bits: 2.0, ..QuantConfig::default() };
+        let space = SearchSpace::parse(3.0, None, Some("2,3,4")).unwrap();
+        let (plan, report) = search_plan(&base, &probes, &space).unwrap();
+        assert_eq!(plan.assignments.len(), 3);
+        assert!(report.effective_bits <= 3.0 + 1e-9);
+        assert!((report.budget_utilization() - report.effective_bits / 3.0).abs() < 1e-12);
+        assert_eq!(report.probe_count, 9);
+        assert_eq!(report.layers.len(), 3);
+        for lr in &report.layers {
+            assert_eq!(lr.probes.len(), 3);
+            assert!(lr.probes.iter().any(|c| c == &lr.chosen));
+        }
+        // manifest round-trip against the same layer list
+        let lnames: Vec<String> = names.iter().map(|s| s.to_string()).collect();
+        let back = QuantPlan::from_manifest(&plan.to_manifest(), &lnames).unwrap();
+        assert_eq!(back, plan);
+
+        // determinism across thread counts: same probe matrix bit-for-bit
+        let mut base4 = base.clone();
+        base4.threads = 4;
+        let (plan4, report4) = search_plan(&base4, &probes, &space).unwrap();
+        assert_eq!(plan4.assignments, plan.assignments);
+        for (a, b) in report.layers.iter().zip(&report4.layers) {
+            for (ca, cb) in a.probes.iter().zip(&b.probes) {
+                assert_eq!(ca.error.to_bits(), cb.error.to_bits());
+            }
+        }
+    }
+}

@@ -57,6 +57,47 @@ pub fn pct(v: f64) -> String {
     format!("{:.2}", v * 100.0)
 }
 
+/// Render a [`PlannerReport`](super::planner::PlannerReport) — the
+/// sibling of [`plan_table`] for searched plans: one row per layer with
+/// the full probe error matrix (columns in candidate order) and the
+/// chosen `(method, bits)`; budget utilization in the title.
+pub fn planner_table(p: &super::planner::PlannerReport) -> Table {
+    let mut headers: Vec<String> = vec!["layer".into(), "numel".into()];
+    if let Some(first) = p.layers.first() {
+        for c in &first.probes {
+            headers.push(format!("{}:{}", c.method.name(), c.bits.label()));
+        }
+    }
+    headers.push("chosen".into());
+    let header_refs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+    let mut t = Table::new(
+        &format!(
+            "auto-plan search — budget {:.2} bits, chosen {:.3} ({:.0}% used), {} probes, {}/{} upgrades",
+            p.budget_bits,
+            p.effective_bits,
+            100.0 * p.budget_utilization(),
+            p.probe_count,
+            p.upgrades_applied,
+            p.upgrades_total,
+        ),
+        &header_refs,
+    );
+    for lr in &p.layers {
+        let mut cells = vec![lr.layer.clone(), lr.numel.to_string()];
+        for c in &lr.probes {
+            cells.push(format!("{:.4}", c.error));
+        }
+        cells.push(format!(
+            "{}:{} ({:.4})",
+            lr.chosen.method.name(),
+            lr.chosen.bits.label(),
+            lr.chosen.error
+        ));
+        t.row(cells);
+    }
+    t
+}
+
 /// Render a [`QuantReport`]'s per-layer plan rows — which method/bits
 /// each layer got and the reconstruction error it achieved — plus the
 /// size-weighted effective-bits summary in the title.
@@ -107,6 +148,36 @@ mod tests {
     }
 
     #[test]
+    fn planner_table_renders_probe_matrix() {
+        use crate::config::Method;
+        use crate::coordinator::planner::{LayerProbeReport, PlannerReport, ProbeCell};
+        use crate::quant::alphabet::BitWidth;
+        let c2 = ProbeCell { method: Method::Beacon, bits: BitWidth::B2, error: 0.4321 };
+        let c4 = ProbeCell { method: Method::Comq, bits: BitWidth::B4, error: 0.1111 };
+        let p = PlannerReport {
+            budget_bits: 3.0,
+            probe_count: 2,
+            layers: vec![LayerProbeReport {
+                layer: "blocks.0.qkv.w".into(),
+                numel: 12288,
+                probes: vec![c2, c4],
+                chosen: c4,
+            }],
+            effective_bits: 3.0,
+            floor_bits: 2.0,
+            upgrades_applied: 1,
+            upgrades_total: 1,
+        };
+        let s = planner_table(&p).render();
+        assert!(s.contains("budget 3.00 bits"), "{s}");
+        assert!(s.contains("100% used"), "{s}");
+        assert!(s.contains("beacon:2-bit"), "{s}");
+        assert!(s.contains("0.4321"), "{s}");
+        assert!(s.contains("comq:4-bit (0.1111)"), "{s}");
+        assert!(s.contains("12288"), "{s}");
+    }
+
+    #[test]
     fn plan_table_renders_rows() {
         use crate::config::Method;
         use crate::coordinator::pipeline::{LayerReport, QuantReport};
@@ -126,6 +197,7 @@ mod tests {
             ln_tune_secs: 0.0,
             eval_secs: 0.0,
             ln_tune_losses: Vec::new(),
+            planner: None,
         };
         let s = plan_table(&r).render();
         assert!(s.contains("beacon"), "{s}");

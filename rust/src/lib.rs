@@ -49,6 +49,6 @@ pub mod quant;
 pub mod runtime;
 pub mod util;
 
-pub use config::{LayerAssignment, Method, PlanBuilder, QuantConfig, QuantPlan};
+pub use config::{LayerAssignment, Method, PlanBuilder, QuantConfig, QuantPlan, SearchSpace};
 pub use coordinator::Pipeline;
 pub use quant::{LayerCtx, LayerQuant, Quantizer};

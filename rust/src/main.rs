@@ -3,6 +3,8 @@
 //! Subcommands:
 //!   info                       artifact + model summary
 //!   quantize [flags]           run one PTQ configuration, report top-1
+//!   plan                       loss-aware plan search only (emit manifest)
+//!   budget-sweep               searched vs uniform plans across budgets
 //!   eval                       evaluate the FP model
 //!   table1 / table2            regenerate the paper's tables
 //!   convergence                F1: objective vs sweep count
@@ -22,14 +24,21 @@
 //! `--config FILE` accepts `[layer "pattern"]` sections in the same
 //! spec language, and `--save-plan FILE` writes the fully resolved
 //! per-layer manifest for exact reproduction.
+//!
+//! Searched plans: `quantize --auto-plan --budget-bits B` (or the `plan`
+//! subcommand for search-only) probes every candidate `(method, bits)`
+//! per layer against the calibration grams and greedily allocates widths
+//! under the size-weighted effective-bits budget; `--plan-methods` /
+//! `--plan-bits` (comma lists) narrow the candidate grid. The searched
+//! plan is an ordinary manifest: `--save-plan` makes it reproducible.
 
 use std::path::PathBuf;
 
 use anyhow::{bail, Result};
 
-use beacon_ptq::config::{PlanBuilder, QuantConfig};
+use beacon_ptq::config::{PlanBuilder, QuantConfig, SearchSpace};
 use beacon_ptq::coordinator::experiments;
-use beacon_ptq::coordinator::report::{pct, plan_table};
+use beacon_ptq::coordinator::report::{pct, plan_table, planner_table};
 use beacon_ptq::coordinator::{KernelBackend, Pipeline};
 use beacon_ptq::quant::alphabet::BitWidth;
 use beacon_ptq::util::cli::Args;
@@ -73,6 +82,19 @@ fn plan_builder(args: &Args) -> Result<PlanBuilder> {
     Ok(builder)
 }
 
+/// The planner search space from the CLI surface: `--budget-bits` plus
+/// optional `--plan-methods m1,m2` / `--plan-bits b1,b2` comma lists.
+fn search_space(args: &Args) -> Result<SearchSpace> {
+    let budget: f64 = args
+        .get("budget-bits")
+        .ok_or_else(|| anyhow::anyhow!("--auto-plan needs --budget-bits <f64>"))?
+        .parse()
+        .map_err(|_| anyhow::anyhow!("--budget-bits expects a number"))?;
+    let methods = args.get("plan-methods");
+    let widths = args.get("plan-bits");
+    SearchSpace::parse(budget, methods, widths)
+}
+
 /// Default Table-1 grid: (bit width, K) as in the paper.
 fn table_bits() -> Vec<(BitWidth, usize)> {
     vec![
@@ -112,7 +134,25 @@ fn run() -> Result<()> {
         }
         "quantize" => {
             let mut pipe = pipeline(&args)?;
-            let plan = plan_builder(&args)?.build(pipe.quantizable())?;
+            let builder = plan_builder(&args)?;
+            let auto = args.switch("auto-plan") || args.get("budget-bits").is_some();
+            let (plan, searched) = if auto {
+                // config-file [layer "…"] sections land in the builder's
+                // override list too — reject both sources, not just the
+                // CLI flag, instead of silently discarding pinned layers
+                if !builder.overrides().is_empty() {
+                    bail!(
+                        "--auto-plan searches the per-layer assignment itself; \
+                         drop --override entries and [layer \"…\"] config sections \
+                         (or run without --auto-plan)"
+                    );
+                }
+                let space = search_space(&args)?;
+                let (plan, preport) = pipe.auto_plan(builder.base(), &space)?;
+                (plan, Some(preport))
+            } else {
+                (builder.build(pipe.quantizable())?, None)
+            };
             println!(
                 "running {} (backend {:?}, {} threads)...",
                 plan.label(),
@@ -123,7 +163,8 @@ fn run() -> Result<()> {
                 std::fs::write(out, plan.to_manifest())?;
                 println!("saved resolved plan manifest to {out}");
             }
-            let (report, store) = pipe.quantize_with_weights(&plan)?;
+            let (mut report, store) = pipe.quantize_with_weights(&plan)?;
+            report.planner = searched;
             println!("FP top-1      : {}%", pct(report.fp_top1));
             println!("quant top-1   : {}%", pct(report.top1));
             println!("accuracy drop : {:.2}%", report.accuracy_drop());
@@ -131,6 +172,9 @@ fn run() -> Result<()> {
             println!("quantize time : {:.2}s  eval time: {:.2}s",
                 report.quantize_secs, report.eval_secs);
             if args.switch("verbose") {
+                if let Some(preport) = &report.planner {
+                    println!("\n{}", planner_table(preport).render());
+                }
                 println!("\n{}", plan_table(&report).render());
                 if !report.ln_tune_losses.is_empty() {
                     println!("ln-tune loss: {:?}", report.ln_tune_losses);
@@ -140,6 +184,68 @@ fn run() -> Result<()> {
                 store.save(std::path::Path::new(out))?;
                 println!("saved quantized weights to {out}");
             }
+            Ok(())
+        }
+        "plan" => {
+            // search-only: probe + allocate + emit the manifest, no
+            // quantization run
+            let mut pipe = pipeline(&args)?;
+            let space = search_space(&args)?;
+            let builder = plan_builder(&args)?;
+            if !builder.overrides().is_empty() {
+                bail!(
+                    "the plan search takes no --override entries or \
+                     [layer \"…\"] config sections"
+                );
+            }
+            let (plan, preport) = pipe.auto_plan(builder.base(), &space)?;
+            println!("{}", planner_table(&preport).render());
+            println!(
+                "searched plan: {} ({:.3} effective bits / budget {:.2})",
+                plan.label(),
+                preport.effective_bits,
+                preport.budget_bits
+            );
+            match args.get("save-plan") {
+                Some(out) => {
+                    std::fs::write(out, plan.to_manifest())?;
+                    println!("saved searched plan manifest to {out}");
+                }
+                None => println!("\n{}", plan.to_manifest()),
+            }
+            Ok(())
+        }
+        "budget-sweep" => {
+            let mut pipe = pipeline(&args)?;
+            let builder = plan_builder(&args)?;
+            let budgets: Vec<f64> = {
+                let csv = args.csv("budgets");
+                if csv.is_empty() {
+                    vec![2.0, 2.58, 3.0, 4.0]
+                } else {
+                    csv.iter()
+                        .map(|s| {
+                            s.parse().map_err(|_| {
+                                anyhow::anyhow!("--budgets expects numbers, got '{s}'")
+                            })
+                        })
+                        .collect::<Result<_>>()?
+                }
+            };
+            // candidate grid from --plan-methods/--plan-bits; the budget
+            // slot is replaced per sweep row
+            let template = SearchSpace::parse(
+                budgets[0],
+                args.get("plan-methods"),
+                args.get("plan-bits"),
+            )?;
+            let table = experiments::budget_sweep(
+                &mut pipe,
+                builder.base(),
+                &template,
+                &budgets,
+            )?;
+            println!("{}", table.render());
             Ok(())
         }
         "table1" => {
@@ -191,11 +297,15 @@ fn run() -> Result<()> {
 }
 
 const HELP: &str = "beacon — Beacon PTQ coordinator
-usage: beacon <info|eval|quantize|table1|table2|convergence|ablate-calib|ablate-ec|runtime-row> [flags]
+usage: beacon <info|eval|quantize|plan|budget-sweep|table1|table2|convergence|ablate-calib|ablate-ec|runtime-row> [flags]
 flags: --artifacts DIR --model NAME --backend pjrt|native --config FILE
        --method beacon|gptq|rtn|comq --bits B --loops K --ec --centering
        --ln_tune --threads N --save OUT.bin --save-plan PLAN.cfg --verbose
 plans: --override 'pattern=spec' (repeatable; ';'-separated list ok)
        spec = method[:bits][+ec|+noec|+centering|+nocentering|+loops=K|+damp=F]
        e.g. --override 'blocks.*.qkv.w=beacon:2+ec' --override 'blocks.*.fc?.w=comq:4'
-       config files take the same overrides as [layer \"pattern\"] sections";
+       config files take the same overrides as [layer \"pattern\"] sections
+search: quantize --auto-plan --budget-bits B  (greedy loss-aware bit allocation)
+       plan --budget-bits B --save-plan OUT.cfg   (search only, emit manifest)
+       budget-sweep --budgets 2,2.58,3,4          (searched vs uniform table)
+       --plan-methods m1,m2 / --plan-bits b1,b2 narrow the probe grid";

@@ -334,6 +334,27 @@ where
         .collect()
 }
 
+/// Fan a `layers × cands` probe grid over the layer axis: `f(li, ci)` is
+/// invoked for every cell, candidates serially inside each layer worker
+/// (they share the layer's activations/gram, so layer-major fan keeps the
+/// working set hot), layers across `sched.layer_threads`. Results gather
+/// as `out[li][ci]` in index order — bit-identical at any thread count,
+/// like [`run_layers`]. This is the planner's probe sweep.
+pub fn run_probe_grid<T, F>(
+    sched: Schedule,
+    layers: usize,
+    cands: usize,
+    f: F,
+) -> Result<Vec<Vec<T>>>
+where
+    T: Send,
+    F: Fn(usize, usize) -> Result<T> + Sync,
+{
+    run_layers(sched, layers, |li| {
+        (0..cands).map(|ci| f(li, ci)).collect::<Result<Vec<T>>>()
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -420,6 +441,24 @@ mod tests {
         // …and the full budget still goes wide when layers allow it
         assert_eq!(plan(8, 16, true), Schedule { layer_threads: 8, channel_threads: 1 });
         assert_eq!(plan(15, 8, true), Schedule { layer_threads: 5, channel_threads: 3 });
+    }
+
+    #[test]
+    fn run_probe_grid_gathers_cells_in_order() {
+        let sched = plan(4, 5, true);
+        let grid = run_probe_grid(sched, 5, 3, |li, ci| Ok(li * 10 + ci)).unwrap();
+        assert_eq!(grid.len(), 5);
+        for (li, row) in grid.iter().enumerate() {
+            assert_eq!(row, &vec![li * 10, li * 10 + 1, li * 10 + 2]);
+        }
+        let err = run_probe_grid(sched, 5, 3, |li, ci| {
+            if li == 2 && ci == 1 {
+                Err(anyhow::anyhow!("probe ({li},{ci}) failed"))
+            } else {
+                Ok(0usize)
+            }
+        });
+        assert!(err.unwrap_err().to_string().contains("(2,1)"));
     }
 
     #[test]

@@ -12,13 +12,20 @@ pub fn layer_recon_error(x: &Matrix, w: &Matrix, q: &Matrix) -> f64 {
 
 /// Same metric via the gram matrix G = XᵀX:
 /// ‖XD‖_F² = tr(DᵀGD). Turns two m×N×N' products into one m×N² gram
-/// (often already needed) plus N²×N' trace terms — the §Perf fast path
-/// for per-layer error reporting.
+/// (computed once per layer by the pipeline and shared with the planner
+/// probes) plus N²×N' trace terms — the §Perf fast path for per-layer
+/// error reporting.
+///
+/// The guard epsilon is applied post-sqrt on the denominator norm —
+/// exactly where [`layer_recon_error`] applies its `1e-12` — so the two
+/// variants agree even for degenerate (near-zero) activations. The trace
+/// terms are clamped at zero first: they are mathematically non-negative
+/// but can round slightly below zero for tiny inputs.
 pub fn layer_recon_error_gram(g: &Matrix, w: &Matrix, q: &Matrix) -> f64 {
     let d = w.sub(q);
-    let num2 = quad_trace(g, &d);
-    let den2 = quad_trace(g, w) + 1e-24;
-    (num2 / den2).max(0.0).sqrt()
+    let num = quad_trace(g, &d).max(0.0).sqrt();
+    let den = quad_trace(g, w).max(0.0).sqrt() + 1e-12;
+    num / den
 }
 
 /// tr(AᵀGA) = Σ_j a_jᵀ G a_j.
@@ -93,6 +100,26 @@ mod tests {
         let direct = layer_recon_error(&x, &w, &q);
         let viagram = layer_recon_error_gram(&x.gram(), &w, &q);
         assert!((direct - viagram).abs() < 1e-10, "{direct} vs {viagram}");
+    }
+
+    #[test]
+    fn gram_variant_matches_direct_for_degenerate_activations() {
+        // the old gram variant added its epsilon pre-sqrt (1e-24 on the
+        // squared norm), so near-zero activations made the two metrics
+        // diverge; both now guard post-sqrt with the same 1e-12
+        let mut g = Gen { rng: crate::data::rng::SplitMix64::new(5) };
+        let x = Matrix::from_vec(16, 4, g.vec_normal(64, 1e-13));
+        let w = Matrix::from_vec(4, 3, g.vec_normal(12, 1.0));
+        let mut q = w.clone();
+        for v in q.data.iter_mut() {
+            *v += 0.1;
+        }
+        let direct = layer_recon_error(&x, &w, &q);
+        let viagram = layer_recon_error_gram(&x.gram(), &w, &q);
+        assert!(
+            (direct - viagram).abs() <= 1e-6 * direct.max(1.0),
+            "{direct} vs {viagram}"
+        );
     }
 
     #[test]

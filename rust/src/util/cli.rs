@@ -74,6 +74,21 @@ impl Args {
         self.repeated.get(key).map(|v| v.as_slice()).unwrap_or(&[])
     }
 
+    /// Comma-separated values of a flag, trimmed, empties dropped
+    /// (`--plan-bits 2,3,4`); empty when the flag is absent.
+    pub fn csv(&self, key: &str) -> Vec<String> {
+        self.flags
+            .get(key)
+            .map(|v| {
+                v.split(',')
+                    .map(str::trim)
+                    .filter(|s| !s.is_empty())
+                    .map(String::from)
+                    .collect()
+            })
+            .unwrap_or_default()
+    }
+
     pub fn f64(&self, key: &str, default: f64) -> f64 {
         self.flags
             .get(key)
@@ -153,6 +168,16 @@ mod tests {
         assert_eq!(a.get("override"), Some("blocks.*.fc1.w=comq:4"));
         assert!(a.list("missing").is_empty());
         assert_eq!(a.list("bits"), &["3".to_string()]);
+    }
+
+    #[test]
+    fn csv_flag_splits_and_trims() {
+        let a = parse("plan --plan-bits 2,3,4 --plan-methods beacon");
+        assert_eq!(a.csv("plan-bits"), vec!["2", "3", "4"]);
+        assert_eq!(a.csv("plan-methods"), vec!["beacon"]);
+        assert!(a.csv("missing").is_empty());
+        let a = Args::parse(["x".to_string(), "--w= 2 , ,4 ".to_string()]);
+        assert_eq!(a.csv("w"), vec!["2", "4"]);
     }
 
     #[test]

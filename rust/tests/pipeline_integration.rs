@@ -299,6 +299,61 @@ fn uniform_plan_matches_legacy_cfg_path_bit_identically() {
 }
 
 #[test]
+fn auto_plan_search_end_to_end() {
+    let Some(mut pipe) = pipeline() else { return };
+    let base = QuantConfig { bits: 2.0, loops: 2, eval_count: 256, ..QuantConfig::default() };
+    let space = beacon_ptq::config::SearchSpace::parse(3.0, None, Some("2,3,4")).unwrap();
+    let (plan, report) = pipe.auto_plan(&base, &space).unwrap();
+
+    // the budget holds on the real layer sizes
+    let eff = plan.effective_bits(|name| pipe.weights_fp.get(name).numel());
+    assert!(eff <= 3.0 + 1e-9, "{eff}");
+    assert!((eff - report.effective_bits).abs() < 1e-9);
+    assert!(report.budget_utilization() <= 1.0 + 1e-9);
+
+    // acceptance criterion: the searched plan ties-or-beats the uniform
+    // plan at the budget width on the size-weighted probe objective over
+    // the bundled calibration set
+    let searched: f64 = report
+        .layers
+        .iter()
+        .map(|lr| lr.numel as f64 * lr.chosen.error)
+        .sum();
+    let uniform: f64 = report
+        .layers
+        .iter()
+        .map(|lr| {
+            let c = lr
+                .probes
+                .iter()
+                .filter(|c| (c.bits.0 - 3.0).abs() < 1e-9)
+                .min_by(|a, b| a.error.total_cmp(&b.error))
+                .expect("3-bit probe");
+            lr.numel as f64 * c.error
+        })
+        .sum();
+    assert!(searched <= uniform + 1e-9, "searched {searched} vs uniform-3 {uniform}");
+
+    // manifest round-trip against the model, like --save-plan emits it
+    let back = beacon_ptq::config::QuantPlan::from_manifest(
+        &plan.to_manifest(),
+        pipe.quantizable(),
+    )
+    .unwrap();
+    assert_eq!(back, plan);
+
+    // the search is bit-identical at another thread count
+    let mut base4 = base.clone();
+    base4.threads = 4;
+    let (plan4, _) = pipe.auto_plan(&base4, &space).unwrap();
+    assert_eq!(plan4.assignments, plan.assignments);
+
+    // and the searched plan runs end-to-end
+    let quant = pipe.quantize(&plan).unwrap();
+    assert!(quant.top1 > 0.5, "searched plan top-1 {}", quant.top1);
+}
+
+#[test]
 fn mixed_plan_end_to_end_with_manifest_round_trip() {
     let Some(mut pipe) = pipeline() else { return };
     // ≥ 2 methods and ≥ 2 bit widths across layers (acceptance criterion)

@@ -1,0 +1,236 @@
+//! Planner properties that need no artifacts (pure native kernels over
+//! synthetic layers with the real tiny-sim layer names):
+//!
+//! 1. the searched plan is bit-identical at any thread count (probes fan
+//!    through the engine scheduler with index-order gather),
+//! 2. allocation is monotone in the budget: a larger budget never
+//!    decreases any layer's width (prefix semantics over a
+//!    budget-independent upgrade sequence),
+//! 3. the size-weighted effective bits never exceed the budget,
+//! 4. a budget at the floor (resp. top) candidate width degenerates to
+//!    the uniform plan at that width, as does a single-width ladder,
+//! 5. with equal-size layers and unit step costs, greedy beats (or ties)
+//!    the uniform plan at the same effective bits on the probe
+//!    objective — the classic exchange argument: the k-th greedy pick
+//!    has gain ≥ the k-th largest uniform first-step gain,
+//! 6. the searched plan round-trips through the manifest machinery.
+
+use beacon_ptq::config::{Method, QuantConfig, QuantPlan, SearchSpace};
+use beacon_ptq::coordinator::planner::{search_plan, LayerProbe, PlannerReport};
+use beacon_ptq::data::rng::SplitMix64;
+use beacon_ptq::linalg::Matrix;
+use beacon_ptq::model::spec::{quantizable_layers, ViTConfig};
+use beacon_ptq::util::prop::Gen;
+
+/// Synthetic per-layer calibration data over the tiny-sim layer list.
+/// `uniform_shape` forces every layer to the same geometry (the
+/// equal-size precondition of the beats-uniform exchange argument).
+struct Fixture {
+    names: Vec<String>,
+    xs: Vec<Matrix>,
+    grams: Vec<Matrix>,
+    ws: Vec<Matrix>,
+}
+
+impl Fixture {
+    fn new(seed: u64, uniform_shape: bool) -> Fixture {
+        let names = quantizable_layers(&ViTConfig::tiny_sim());
+        let mut g = Gen { rng: SplitMix64::new(seed) };
+        let m = 96;
+        let mut xs = Vec::new();
+        let mut ws = Vec::new();
+        for (i, name) in names.iter().enumerate() {
+            let (n, np) = if uniform_shape {
+                (12, 10)
+            } else if name.contains("qkv") {
+                (12, 36)
+            } else if name.contains("fc1") {
+                (12, 24)
+            } else if name.contains("fc2") {
+                (24, 12)
+            } else {
+                (12, 12)
+            };
+            xs.push(Matrix::from_vec(m, n, g.vec_normal(m * n, 1.0)));
+            let mut w = Matrix::from_vec(n, np, g.vec_normal(n * np, 0.3));
+            if i % 3 == 0 {
+                // outlier-heavy layers: harder at low bits, so the
+                // allocation has real structure to find
+                for (k, v) in w.data.iter_mut().enumerate() {
+                    if k % 23 == 0 {
+                        *v *= 5.0;
+                    }
+                }
+            }
+            ws.push(w);
+        }
+        let grams = xs.iter().map(|x| x.gram()).collect();
+        Fixture { names, xs, grams, ws }
+    }
+
+    fn probes(&self) -> Vec<LayerProbe<'_>> {
+        self.names
+            .iter()
+            .enumerate()
+            .map(|(i, name)| LayerProbe {
+                name: name.as_str(),
+                x: &self.xs[i],
+                gram: &self.grams[i],
+                w: &self.ws[i],
+                numel: self.ws[i].rows * self.ws[i].cols,
+            })
+            .collect()
+    }
+
+    fn numel(&self, i: usize) -> usize {
+        self.ws[i].rows * self.ws[i].cols
+    }
+}
+
+fn base_cfg(threads: usize) -> QuantConfig {
+    // RTN probes: cheapest method, full planner machinery
+    QuantConfig { method: Method::Rtn, bits: 2.0, threads, ..QuantConfig::default() }
+}
+
+/// Size-weighted probe error of a searched report's chosen cells.
+fn weighted_chosen_error(fx: &Fixture, report: &PlannerReport) -> f64 {
+    report
+        .layers
+        .iter()
+        .enumerate()
+        .map(|(i, lr)| fx.numel(i) as f64 * lr.chosen.error)
+        .sum()
+}
+
+#[test]
+fn searched_plan_is_thread_count_invariant() {
+    let fx = Fixture::new(7, false);
+    let probes = fx.probes();
+    let space = SearchSpace::parse(2.58, None, None).unwrap();
+    let (plan1, report1) = search_plan(&base_cfg(1), &probes, &space).unwrap();
+    let (plan4, report4) = search_plan(&base_cfg(4), &probes, &space).unwrap();
+    // thread count rides through plan.base — compare the allocation
+    assert_eq!(plan1.assignments, plan4.assignments);
+    for (a, b) in report1.layers.iter().zip(&report4.layers) {
+        assert_eq!(a.probes.len(), b.probes.len());
+        for (ca, cb) in a.probes.iter().zip(&b.probes) {
+            assert_eq!(
+                ca.error.to_bits(),
+                cb.error.to_bits(),
+                "{}: probe error diverged across thread counts",
+                a.layer
+            );
+        }
+    }
+}
+
+#[test]
+fn allocation_is_monotone_in_budget_and_respects_it() {
+    let fx = Fixture::new(11, false);
+    let probes = fx.probes();
+    let base = base_cfg(0);
+    let budgets = [1.58, 2.0, 2.3, 2.58, 2.9, 3.0, 3.4, 4.0];
+    let mut prev: Option<QuantPlan> = None;
+    for b in budgets {
+        let space = SearchSpace::new(b);
+        let (plan, report) = search_plan(&base, &probes, &space).unwrap();
+        assert!(
+            report.effective_bits <= b + 1e-6,
+            "budget {b}: effective {}",
+            report.effective_bits
+        );
+        let eff = plan.effective_bits(|name| {
+            let i = fx.names.iter().position(|n| n == name).unwrap();
+            fx.numel(i)
+        });
+        assert!((eff - report.effective_bits).abs() < 1e-9);
+        if let Some(p) = &prev {
+            for (a, pa) in plan.assignments.iter().zip(&p.assignments) {
+                assert!(
+                    a.bits.0 >= pa.bits.0,
+                    "budget {b}: layer {} width decreased ({} -> {})",
+                    a.layer,
+                    pa.bits.0,
+                    a.bits.0
+                );
+            }
+        }
+        prev = Some(plan);
+    }
+}
+
+#[test]
+fn floor_top_and_single_width_budgets_are_uniform() {
+    let fx = Fixture::new(13, false);
+    let probes = fx.probes();
+    let base = base_cfg(0);
+    // floor of the default ladder
+    let (plan, _) = search_plan(&base, &probes, &SearchSpace::new(1.58)).unwrap();
+    assert!(plan.assignments.iter().all(|a| (a.bits.0 - 1.58).abs() < 1e-9));
+    // top of the default ladder
+    let (plan, report) = search_plan(&base, &probes, &SearchSpace::new(4.0)).unwrap();
+    assert!(plan.assignments.iter().all(|a| (a.bits.0 - 4.0).abs() < 1e-9));
+    assert!((report.effective_bits - 4.0).abs() < 1e-9);
+    assert_eq!(report.upgrades_applied, report.upgrades_total);
+    // single-width ladder equal to the budget
+    let space = SearchSpace::parse(3.0, None, Some("3")).unwrap();
+    let (plan, report) = search_plan(&base, &probes, &space).unwrap();
+    assert!(plan.assignments.iter().all(|a| (a.bits.0 - 3.0).abs() < 1e-9));
+    assert!((report.effective_bits - 3.0).abs() < 1e-9);
+    assert!(plan.uniform_config().is_some(), "{}", plan.label());
+}
+
+#[test]
+fn beats_uniform_at_equal_effective_bits_on_the_probe_objective() {
+    // equal-size layers + integer widths {2,3,4} + budget 3.0: every
+    // upgrade costs exactly 1/16 effective bit, so greedy applies
+    // exactly 16 upgrades (effective bits land on 3.0 exactly) and the
+    // exchange argument guarantees it ties-or-beats the uniform 3-bit
+    // plan on the size-weighted probe error
+    let fx = Fixture::new(17, true);
+    let probes = fx.probes();
+    let base = base_cfg(0);
+    let space = SearchSpace::parse(3.0, None, Some("2,3,4")).unwrap();
+    let (plan, report) = search_plan(&base, &probes, &space).unwrap();
+    assert!((report.effective_bits - 3.0).abs() < 1e-9, "{}", report.effective_bits);
+    let searched = weighted_chosen_error(&fx, &report);
+    // uniform 3-bit error straight from the probe matrix
+    let uniform: f64 = report
+        .layers
+        .iter()
+        .enumerate()
+        .map(|(i, lr)| {
+            let cell = lr
+                .probes
+                .iter()
+                .find(|c| (c.bits.0 - 3.0).abs() < 1e-9)
+                .expect("3-bit probe");
+            fx.numel(i) as f64 * cell.error
+        })
+        .sum();
+    assert!(
+        searched <= uniform + 1e-9,
+        "searched {searched} worse than uniform-3 {uniform}"
+    );
+    assert_eq!(plan.assignments.len(), 16);
+}
+
+#[test]
+fn searched_plan_round_trips_through_the_manifest() {
+    let fx = Fixture::new(19, false);
+    let probes = fx.probes();
+    let space = SearchSpace::parse(2.58, Some("rtn,comq"), Some("2,3,4")).unwrap();
+    let (plan, report) = search_plan(&base_cfg(0), &probes, &space).unwrap();
+    // 2 methods × 3 widths × 16 layers probed
+    assert_eq!(report.probe_count, 2 * 3 * 16);
+    let text = plan.to_manifest();
+    let back = QuantPlan::from_manifest(&text, &fx.names).unwrap();
+    assert_eq!(back, plan);
+    // and through a file, like --save-plan emits it
+    let dir = std::env::temp_dir().join("beacon_ptq_planner_tests");
+    std::fs::create_dir_all(&dir).unwrap();
+    let p = dir.join("searched.cfg");
+    std::fs::write(&p, &text).unwrap();
+    let back = QuantPlan::from_file(&p, &fx.names).unwrap();
+    assert_eq!(back, plan);
+}
