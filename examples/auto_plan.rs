@@ -13,6 +13,8 @@
 //!
 //! ```bash
 //! cargo run --release --example auto_plan
+//! # with a Chrome/Perfetto trace of the probe sweep:
+//! BEACON_TRACE=auto_plan_trace.json cargo run --release --example auto_plan
 //! ```
 
 use std::path::Path;
@@ -30,6 +32,19 @@ const MANIFEST_OUT: &str = "auto_plan_manifest.cfg";
 const BUDGET_BITS: f64 = 2.58;
 
 fn main() -> anyhow::Result<()> {
+    let trace = beacon_ptq::obs::trace_env();
+    if trace.is_some() {
+        beacon_ptq::obs::enable();
+    }
+    run()?;
+    if let Some(path) = trace {
+        beacon_ptq::obs::write_chrome_trace(Path::new(&path))?;
+        println!("trace written to {path} (open in ui.perfetto.dev)");
+    }
+    Ok(())
+}
+
+fn run() -> anyhow::Result<()> {
     if Path::new("artifacts/manifest__tiny-sim.json").exists() {
         match run_real() {
             Ok(()) => return Ok(()),

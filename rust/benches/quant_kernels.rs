@@ -13,6 +13,7 @@ use beacon_ptq::config::{PlanBuilder, QuantConfig, SearchSpace};
 use beacon_ptq::coordinator::planner::{search_plan, LayerProbe};
 use beacon_ptq::data::rng::SplitMix64;
 use beacon_ptq::linalg::{qr_factor, Matrix};
+use beacon_ptq::obs::{self, HistSummary};
 use beacon_ptq::quant::alphabet::{alphabet, BitWidth};
 use beacon_ptq::quant::beacon::{
     beacon_channel, beacon_layer, beacon_layer_prefactored, BeaconOpts,
@@ -37,6 +38,18 @@ struct Rec {
     threads: usize,
     median_ns: u128,
     ns_per_channel: f64,
+    /// per-channel latency distribution from the obs recorder
+    /// (`engine.channels.item_ns`); None for serial-only kernels
+    /// that never enter the channel fan (gptq).
+    chan: Option<HistSummary>,
+}
+
+/// Drain the recorder's per-channel histogram for the row just timed.
+fn chan_summary() -> Option<HistSummary> {
+    obs::snapshot()
+        .hists
+        .get("engine.channels.item_ns")
+        .map(|h| h.summary())
 }
 
 fn main() {
@@ -107,24 +120,30 @@ fn main() {
 
     // --- machine-readable perf record: BENCH_quant.json ---------------------
     println!("\n== thread-scaling sweep (method × bits × threads) ==");
+    // Record per-channel latency histograms for each row; reset before
+    // every timed section so a record's p50/p95/p99 covers only its own
+    // iterations.
+    obs::enable();
     let (m, nn, np) = (512usize, 64usize, 128usize);
     let (x, w) = case(7, m, nn, np);
     let f = qr_factor(&x, &x);
     let thread_grid = [1usize, 2, 4];
     let mut recs: Vec<Rec> = Vec::new();
-    let mut push = |method: &'static str, bits: BitWidth, threads, median_ns| {
+    let mut push = |method: &'static str, bits: BitWidth, threads, median_ns, chan| {
         recs.push(Rec {
             method,
             bits: bits.label(),
             threads,
             median_ns,
             ns_per_channel: median_ns as f64 / np as f64,
+            chan,
         });
     };
     for &bits in &[BitWidth::B2, BitWidth::B4] {
         let a = alphabet(bits);
         for &threads in &thread_grid {
             let opts = BeaconOpts { loops: 4, centering: false, threads };
+            obs::reset();
             let r = bench(
                 &format!("beacon sweep {nn}x{np} {} t={threads}", bits.label()),
                 1,
@@ -135,24 +154,27 @@ fn main() {
                     ));
                 },
             );
-            push("beacon", bits, threads, r.median_ns);
+            push("beacon", bits, threads, r.median_ns, chan_summary());
         }
     }
     for &threads in &thread_grid {
+        obs::reset();
         let r = bench(&format!("rtn {nn}x{np} 2-bit t={threads}"), 1, 3, || {
             black_box(rtn_layer_threads(&w, BitWidth::B2, threads));
         });
-        push("rtn", BitWidth::B2, threads, r.median_ns);
+        push("rtn", BitWidth::B2, threads, r.median_ns, chan_summary());
+        obs::reset();
         let r = bench(&format!("comq {nn}x{np} 2-bit K=4 t={threads}"), 1, 3, || {
             black_box(comq_layer_threads(&x, &w, BitWidth::B2, 4, threads));
         });
-        push("comq", BitWidth::B2, threads, r.median_ns);
+        push("comq", BitWidth::B2, threads, r.median_ns, chan_summary());
     }
     // GPTQ's row recursion is serial on the channel axis: one row, t=1
+    obs::reset();
     let r = bench(&format!("gptq {nn}x{np} 2-bit t=1"), 1, 3, || {
         black_box(gptq_layer(&x, &w, BitWidth::B2, 0.01));
     });
-    push("gptq", BitWidth::B2, 1, r.median_ns);
+    push("gptq", BitWidth::B2, 1, r.median_ns, chan_summary());
 
     // --- mixed-plan rows: heterogeneous per-layer method×bits through the
     // engine scheduler, exactly as Pipeline::quantize(&QuantPlan) fans it
@@ -191,6 +213,7 @@ fn main() {
             cases.len(),
             quantizers.iter().all(|q| q.parallel_safe()),
         );
+        obs::reset();
         let r = bench(&format!("mixed plan 4 layers t={threads}"), 1, 3, || {
             let out = engine::run_layers(sched, cases.len(), |li| {
                 let (x, w) = &cases[li];
@@ -205,6 +228,7 @@ fn main() {
             threads,
             median_ns: r.median_ns,
             ns_per_channel: r.median_ns as f64 / total_channels as f64,
+            chan: chan_summary(),
         });
     }
 
@@ -229,6 +253,7 @@ fn main() {
                 numel: numels[i],
             })
             .collect();
+        obs::reset();
         let r = bench(&format!("auto-plan search 4 layers t={threads}"), 1, 3, || {
             black_box(search_plan(&base, &probes, &space).unwrap());
         });
@@ -238,6 +263,7 @@ fn main() {
             threads,
             median_ns: r.median_ns,
             ns_per_channel: r.median_ns as f64 / total_channels as f64,
+            chan: chan_summary(),
         });
     }
 
@@ -252,14 +278,18 @@ fn main() {
     for (i, r) in recs.iter().enumerate() {
         s.push_str(&format!(
             "    {{\"method\": \"{}\", \"bits\": \"{}\", \"threads\": {}, \
-             \"median_ns\": {}, \"ns_per_channel\": {:.1}}}{}\n",
-            r.method,
-            r.bits,
-            r.threads,
-            r.median_ns,
-            r.ns_per_channel,
-            if i + 1 == recs.len() { "" } else { "," }
+             \"median_ns\": {}, \"ns_per_channel\": {:.1}",
+            r.method, r.bits, r.threads, r.median_ns, r.ns_per_channel,
         ));
+        // Optional latency-distribution fields; the perf gate's parser
+        // ignores keys it doesn't know, so the baseline grid is unchanged.
+        if let Some(c) = r.chan {
+            s.push_str(&format!(
+                ", \"p50_ns\": {}, \"p95_ns\": {}, \"p99_ns\": {}",
+                c.p50, c.p95, c.p99
+            ));
+        }
+        s.push_str(if i + 1 == recs.len() { "}\n" } else { "},\n" });
     }
     s.push_str("  ]\n}\n");
     std::fs::write("BENCH_quant.json", &s).expect("write BENCH_quant.json");

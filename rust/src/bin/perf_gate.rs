@@ -19,10 +19,14 @@
 //! cargo run --bin perf_gate -- --write-baseline
 //! ```
 //!
-//! Rows present only in the current record are reported as `new` (not a
-//! failure — the bench grid legitimately grows across PRs); baseline
-//! rows missing from the current record are warned about but do not
-//! fail the gate.
+//! The gate also pins the *grid*: a current row absent from the baseline
+//! (`new`) or a baseline row absent from the current record (`missing`)
+//! fails the gate — silent grid drift would otherwise let rows drop out
+//! of enforcement unnoticed. When the bench grid legitimately changes,
+//! rebaseline in the same PR (`--write-baseline` refreshes
+//! `host_threads` to the recording machine's core count too). A
+//! calibration summary (enforced vs uncalibrated placeholder rows)
+//! prints with every run.
 
 use std::process::ExitCode;
 
@@ -179,9 +183,21 @@ fn run() -> Result<bool> {
     let baseline_path = args.str("baseline", "BENCH_baseline.json");
     let current_path = args.str("current", "BENCH_quant.json");
     if args.switch("write-baseline") {
-        std::fs::copy(&current_path, &baseline_path)
-            .map_err(|e| anyhow!("copy {current_path} -> {baseline_path}: {e}"))?;
-        println!("rebaselined {baseline_path} from {current_path}");
+        let text = std::fs::read_to_string(&current_path)
+            .map_err(|e| anyhow!("read {current_path}: {e}"))?;
+        let mut v = Value::parse(&text).map_err(|e| anyhow!("{current_path}: {e}"))?;
+        if let Value::Obj(m) = &mut v {
+            // the bench writes host_threads as a placeholder; stamp the
+            // recording machine's core count so the baseline says where
+            // its numbers came from
+            let host = std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1);
+            m.insert("host_threads".to_string(), Value::Num(host as f64));
+        }
+        std::fs::write(&baseline_path, v.to_json())
+            .map_err(|e| anyhow!("write {baseline_path}: {e}"))?;
+        println!("rebaselined {baseline_path} from {current_path} (host_threads stamped)");
         return Ok(true);
     }
     let env_tol = std::env::var("PERF_GATE_TOLERANCE")
@@ -217,14 +233,15 @@ fn run() -> Result<bool> {
         );
     }
 
-    let regressions = cmps
-        .iter()
-        .filter(|c| c.verdict == Verdict::Regression)
-        .count();
-    let uncalibrated = cmps
-        .iter()
-        .filter(|c| c.verdict == Verdict::Uncalibrated)
-        .count();
+    let count = |v: Verdict| cmps.iter().filter(|c| c.verdict == v).count();
+    let regressions = count(Verdict::Regression);
+    let new_rows = count(Verdict::New);
+    let uncalibrated = count(Verdict::Uncalibrated);
+    let enforced = cmps.len() - new_rows - uncalibrated;
+    println!(
+        "calibration: {enforced} enforced row(s), {uncalibrated} uncalibrated \
+         placeholder(s) (ns_per_channel <= 0)"
+    );
     if uncalibrated > 0 {
         println!(
             "{uncalibrated} row(s) uncalibrated — record a baseline on the CI class \
@@ -233,11 +250,36 @@ fn run() -> Result<bool> {
     }
     if regressions > 0 {
         println!("FAIL: {regressions} row(s) regressed more than {tolerance}%");
-        Ok(false)
-    } else {
+    }
+    if new_rows > 0 {
+        println!(
+            "FAIL: {new_rows} bench row(s) missing from the baseline grid — \
+             rebaseline with: cargo run --bin perf_gate -- --write-baseline"
+        );
+    }
+    if !missing.is_empty() {
+        println!(
+            "FAIL: {} baseline row(s) missing from {current_path} — the bench \
+             grid drifted; rebaseline if intentional",
+            missing.len()
+        );
+    }
+    if gate_passes(&cmps, &missing) {
         println!("perf gate passed ({} rows compared)", cmps.len());
         Ok(true)
+    } else {
+        Ok(false)
     }
+}
+
+/// The gate decision: no regressions and no grid drift in either
+/// direction (every current row is pinned by the baseline, every
+/// baseline row is still measured).
+fn gate_passes(cmps: &[Comparison], missing: &[PerfRow]) -> bool {
+    missing.is_empty()
+        && !cmps
+            .iter()
+            .any(|c| matches!(c.verdict, Verdict::Regression | Verdict::New))
 }
 
 fn main() -> ExitCode {
@@ -304,6 +346,28 @@ mod tests {
         let (cmps, missing) = compare(&base, &cur, 25.0);
         assert_eq!(cmps[0].verdict, Verdict::New);
         assert_eq!(missing.len(), 1);
+    }
+
+    #[test]
+    fn gate_fails_on_grid_drift_both_directions() {
+        let base = vec![row("beacon", "2-bit", 1, 100.0), row("rtn", "2-bit", 1, 0.0)];
+        // healthy: same grid, within tolerance (uncalibrated row allowed)
+        let cur = vec![row("beacon", "2-bit", 1, 101.0), row("rtn", "2-bit", 1, 55.0)];
+        let (cmps, missing) = compare(&base, &cur, 25.0);
+        assert!(gate_passes(&cmps, &missing));
+        // current grew a row the baseline does not pin -> fail
+        let mut grown = cur.clone();
+        grown.push(row("comq", "2-bit", 1, 70.0));
+        let (cmps, missing) = compare(&base, &grown, 25.0);
+        assert!(!gate_passes(&cmps, &missing));
+        // current dropped a baseline row -> fail
+        let shrunk = vec![row("beacon", "2-bit", 1, 101.0)];
+        let (cmps, missing) = compare(&base, &shrunk, 25.0);
+        assert!(!gate_passes(&cmps, &missing));
+        // and a plain regression still fails
+        let slow = vec![row("beacon", "2-bit", 1, 200.0), row("rtn", "2-bit", 1, 55.0)];
+        let (cmps, missing) = compare(&base, &slow, 25.0);
+        assert!(!gate_passes(&cmps, &missing));
     }
 
     #[test]

@@ -165,12 +165,13 @@ pub fn convergence(pipe: &mut Pipeline, max_loops: usize) -> Result<Table> {
         let nthreads = crate::util::pool::resolve_threads(0);
         let mut cells = vec![quantizable[li].clone()];
         for loops in 0..=max_loops {
-            let objs = crate::util::pool::par_map_indexed(nch, nthreads, |j| {
-                let wj = w.col(j);
-                let (q, _) =
-                    beacon_channel(&l_cols, &lt_cols, &nnz, &wj, &a, loops);
-                beacon_objective(&f.l, &f.r, &wj, &q)
-            });
+            let objs =
+                crate::util::pool::par_map_labeled("engine.channels", nch, nthreads, |j| {
+                    let wj = w.col(j);
+                    let (q, _) =
+                        beacon_channel(&l_cols, &lt_cols, &nnz, &wj, &a, loops);
+                    beacon_objective(&f.l, &f.r, &wj, &q)
+                });
             let sum: f64 = objs.iter().sum();
             cells.push(format!("{:.5}", sum / nch as f64));
         }

@@ -25,7 +25,6 @@
 //! top-1 evaluation through the `vit_logits` artifact.
 
 use std::path::Path;
-use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
@@ -76,6 +75,9 @@ pub struct QuantReport {
     /// how the plan was searched, when it came from `--auto-plan`
     /// ([`Pipeline::auto_plan`]); `None` for hand-written plans
     pub planner: Option<super::planner::PlannerReport>,
+    /// recorder-derived run metrics (worker utilization, cache hit
+    /// rate, per-channel latency); `None` unless tracing was enabled
+    pub metrics: Option<crate::obs::MetricsReport>,
 }
 
 impl QuantReport {
@@ -200,11 +202,19 @@ impl Pipeline {
     /// which used to compute the same matrices independently.
     fn ensure_fp_grams(&mut self) -> Result<()> {
         self.ensure_fp_acts()?;
-        if self.grams_fp.is_none() {
+        if let Some(g) = &self.grams_fp {
+            crate::obs::counter("pipeline.gram_cache.hit", g.len() as u64);
+        } else {
+            let _span = crate::obs::span("phase", "phase.gram_build");
             let acts = self.acts_fp.as_ref().expect("ensured");
+            crate::obs::counter("pipeline.gram_cache.miss", acts.len() as u64);
             let threads = crate::util::pool::resolve_threads(0);
-            let grams =
-                crate::util::pool::par_map_indexed(acts.len(), threads, |i| acts[i].gram());
+            let grams = crate::util::pool::par_map_labeled(
+                "pipeline.grams",
+                acts.len(),
+                threads,
+                |i| acts[i].gram(),
+            );
             self.grams_fp = Some(grams);
         }
         Ok(())
@@ -497,7 +507,7 @@ impl Pipeline {
             !any_recapture && quantizers.iter().all(|q| q.parallel_safe());
         let sched = engine::plan(threads, quantizable.len(), layer_parallel);
 
-        let t0 = Instant::now();
+        let quantize_span = crate::obs::span("phase", "phase.quantize");
         let mut work = self.weights_fp.clone();
         let mut layer_errors = Vec::with_capacity(quantizable.len());
 
@@ -564,7 +574,7 @@ impl Pipeline {
             }
         }
         drop(quantizers);
-        let quantize_secs = t0.elapsed().as_secs_f64();
+        let quantize_secs = quantize_span.finish();
 
         let layers: Vec<LayerReport> = plan
             .assignments
@@ -581,18 +591,29 @@ impl Pipeline {
             plan.effective_bits(|name| self.weights_fp.get(name).numel());
 
         // optional LN tuning (distillation against the FP calib logits)
-        let t_ln = Instant::now();
+        let ln_span = crate::obs::span("phase", "phase.ln_tune");
         let ln_tune_losses = if base.ln_tune {
             let teacher = self.fp_logits_calib.clone().expect("ensured");
             crate::coordinator::lntune::tune(self, &mut work, &teacher, base)?
         } else {
             Vec::new()
         };
-        let ln_tune_secs = t_ln.elapsed().as_secs_f64();
+        let ln_tune_secs = ln_span.finish();
 
-        let t1 = Instant::now();
+        let eval_span = crate::obs::span("phase", "phase.eval");
         let top1 = crate::coordinator::eval::top1(self, &work, base.eval_count)?;
-        let eval_secs = t1.elapsed().as_secs_f64();
+        let eval_secs = eval_span.finish();
+
+        let metrics = crate::obs::enabled().then(|| {
+            crate::obs::MetricsReport::from_snapshot(
+                &crate::obs::snapshot(),
+                vec![
+                    ("quantize".to_string(), quantize_secs),
+                    ("ln_tune".to_string(), ln_tune_secs),
+                    ("eval".to_string(), eval_secs),
+                ],
+            )
+        });
 
         Ok((
             QuantReport {
@@ -606,6 +627,7 @@ impl Pipeline {
                 eval_secs,
                 ln_tune_losses,
                 planner: None,
+                metrics,
             },
             work,
         ))

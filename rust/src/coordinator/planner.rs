@@ -144,6 +144,17 @@ pub fn probe_errors(
     engine::run_probe_grid(sched, probes.len(), cands.len(), |li, ci| {
         let p = &probes[li];
         let (method, bits) = cands[ci];
+        let _probe_span = crate::obs::span_args("planner", || {
+            (
+                format!("probe {}:{}", method.name(), bits.label()),
+                vec![
+                    ("layer", p.name.to_string()),
+                    ("method", method.name().to_string()),
+                    ("bits", bits.label()),
+                ],
+            )
+        });
+        crate::obs::counter("planner.probes", 1);
         let qc = QuantConfig {
             method,
             bits: bits.0,
@@ -319,6 +330,7 @@ pub fn search_plan(
     probes: &[LayerProbe<'_>],
     space: &SearchSpace,
 ) -> Result<(QuantPlan, PlannerReport)> {
+    let _phase = crate::obs::span("phase", "phase.plan_search");
     let cells = probe_errors(base, probes, space)?;
     let numels: Vec<usize> = probes.iter().map(|p| p.numel).collect();
     let alloc = allocate(&cells, &numels, space.budget_bits)?;

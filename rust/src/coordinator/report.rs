@@ -120,6 +120,64 @@ pub fn plan_table(r: &super::pipeline::QuantReport) -> Table {
     t
 }
 
+fn fmt_bytes(b: u64) -> String {
+    if b >= 1 << 20 {
+        format!("{:.1} MiB", b as f64 / (1u64 << 20) as f64)
+    } else if b >= 1 << 10 {
+        format!("{:.1} KiB", b as f64 / 1024.0)
+    } else {
+        format!("{b} B")
+    }
+}
+
+/// Render a [`MetricsReport`](crate::obs::MetricsReport) — the
+/// recorder-derived metrics section of a traced run, one row per
+/// metric, styled like the planner table.
+pub fn metrics_table(m: &crate::obs::MetricsReport) -> Table {
+    let mut t = Table::new("run metrics (--trace)", &["metric", "value"]);
+    for (name, secs) in &m.phases {
+        t.row(vec![format!("{name} wall"), format!("{secs:.3} s")]);
+    }
+    if let Some(u) = m.worker_utilization {
+        t.row(vec![
+            format!("worker utilization ({} workers)", m.workers),
+            format!("{:.0}%", 100.0 * u),
+        ]);
+    }
+    if let Some(rate) = m.gram_cache_hit_rate() {
+        t.row(vec![
+            "gram cache hit rate".to_string(),
+            format!(
+                "{:.0}% ({} hit / {} miss)",
+                100.0 * rate,
+                m.gram_cache_hits,
+                m.gram_cache_misses
+            ),
+        ]);
+    }
+    if let Some(h) = &m.channel_ns {
+        t.row(vec![
+            format!("per-channel ns (n={})", h.count),
+            format!("p50 {} / p95 {} / p99 {}", h.p50, h.p95, h.p99),
+        ]);
+    }
+    if m.io_read_bytes > 0 || m.io_write_bytes > 0 {
+        t.row(vec![
+            "store I/O".to_string(),
+            format!(
+                "read {} / write {}",
+                fmt_bytes(m.io_read_bytes),
+                fmt_bytes(m.io_write_bytes)
+            ),
+        ]);
+    }
+    t.row(vec![
+        "recorder threads seen".to_string(),
+        m.threads_seen.to_string(),
+    ]);
+    t
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -198,11 +256,44 @@ mod tests {
             eval_secs: 0.0,
             ln_tune_losses: Vec::new(),
             planner: None,
+            metrics: None,
         };
         let s = plan_table(&r).render();
         assert!(s.contains("beacon"), "{s}");
         assert!(s.contains("2-bit"), "{s}");
         assert!(s.contains("0.1234"), "{s}");
         assert!(s.contains("2.50 effective bits"), "{s}");
+    }
+
+    #[test]
+    fn metrics_table_renders_sections() {
+        use crate::obs::{HistSummary, MetricsReport};
+        let m = MetricsReport {
+            phases: vec![("quantize".to_string(), 1.25), ("eval".to_string(), 0.5)],
+            worker_utilization: Some(0.82),
+            workers: 4,
+            gram_cache_hits: 6,
+            gram_cache_misses: 6,
+            io_read_bytes: 2048,
+            io_write_bytes: 3 << 20,
+            channel_ns: Some(HistSummary { count: 100, p50: 96, p95: 192, p99: 384, mean: 120 }),
+            threads_seen: 5,
+        };
+        let s = metrics_table(&m).render();
+        assert!(s.contains("quantize wall"), "{s}");
+        assert!(s.contains("1.250 s"), "{s}");
+        assert!(s.contains("worker utilization (4 workers)"), "{s}");
+        assert!(s.contains("82%"), "{s}");
+        assert!(s.contains("50% (6 hit / 6 miss)"), "{s}");
+        assert!(s.contains("p50 96 / p95 192 / p99 384"), "{s}");
+        assert!(s.contains("2.0 KiB"), "{s}");
+        assert!(s.contains("3.0 MiB"), "{s}");
+    }
+
+    #[test]
+    fn fmt_bytes_units() {
+        assert_eq!(fmt_bytes(42), "42 B");
+        assert_eq!(fmt_bytes(1536), "1.5 KiB");
+        assert_eq!(fmt_bytes(5 << 20), "5.0 MiB");
     }
 }

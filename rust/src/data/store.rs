@@ -54,6 +54,9 @@ impl Dataset {
             r.read_exact(&mut b)?;
             *l = i32::from_le_bytes(b);
         }
+        if let Ok(md) = std::fs::metadata(path) {
+            crate::obs::counter("io.read_bytes", md.len());
+        }
         Ok(Dataset { shape, count, images, labels })
     }
 
@@ -73,6 +76,10 @@ impl Dataset {
         }
         for l in &self.labels {
             w.write_all(&l.to_le_bytes())?;
+        }
+        w.flush()?;
+        if let Ok(md) = std::fs::metadata(path) {
+            crate::obs::counter("io.write_bytes", md.len());
         }
         Ok(())
     }

@@ -45,10 +45,12 @@ pub mod coordinator;
 pub mod data;
 pub mod linalg;
 pub mod model;
+pub mod obs;
 pub mod quant;
 pub mod runtime;
 pub mod util;
 
 pub use config::{LayerAssignment, Method, PlanBuilder, QuantConfig, QuantPlan, SearchSpace};
 pub use coordinator::Pipeline;
+pub use obs::MetricsReport;
 pub use quant::{LayerCtx, LayerQuant, Quantizer};

@@ -38,7 +38,7 @@ use anyhow::{bail, Result};
 
 use beacon_ptq::config::{PlanBuilder, QuantConfig, SearchSpace};
 use beacon_ptq::coordinator::experiments;
-use beacon_ptq::coordinator::report::{pct, plan_table, planner_table};
+use beacon_ptq::coordinator::report::{metrics_table, pct, plan_table, planner_table};
 use beacon_ptq::coordinator::{KernelBackend, Pipeline};
 use beacon_ptq::quant::alphabet::BitWidth;
 use beacon_ptq::util::cli::Args;
@@ -48,6 +48,16 @@ fn main() {
         eprintln!("error: {e:#}");
         std::process::exit(1);
     }
+}
+
+/// Where to write the Chrome trace, if tracing was requested:
+/// `--trace FILE`, bare `--trace` (default file name), or the
+/// `BEACON_TRACE` env var.
+fn trace_out(args: &Args) -> Option<PathBuf> {
+    args.get("trace")
+        .map(PathBuf::from)
+        .or_else(|| args.switch("trace").then(|| PathBuf::from("beacon_trace.json")))
+        .or_else(|| beacon_ptq::obs::trace_env().map(PathBuf::from))
 }
 
 fn pipeline(args: &Args) -> Result<Pipeline> {
@@ -108,6 +118,20 @@ fn table_bits() -> Vec<(BitWidth, usize)> {
 
 fn run() -> Result<()> {
     let args = Args::from_env();
+    let trace = trace_out(&args);
+    if trace.is_some() {
+        beacon_ptq::obs::enable();
+    }
+    let result = dispatch(&args);
+    if let Some(path) = trace {
+        beacon_ptq::obs::write_chrome_trace(&path)?;
+        println!("trace written to {} (open in ui.perfetto.dev)", path.display());
+    }
+    result
+}
+
+fn dispatch(args: &Args) -> Result<()> {
+    let args = args.clone();
     let sub = args.subcommand.clone().unwrap_or_else(|| "help".into());
     match sub.as_str() {
         "help" => {
@@ -176,6 +200,9 @@ fn run() -> Result<()> {
                     println!("\n{}", planner_table(preport).render());
                 }
                 println!("\n{}", plan_table(&report).render());
+                if let Some(m) = &report.metrics {
+                    println!("\n{}", metrics_table(m).render());
+                }
                 if !report.ln_tune_losses.is_empty() {
                     println!("ln-tune loss: {:?}", report.ln_tune_losses);
                 }
@@ -301,6 +328,8 @@ usage: beacon <info|eval|quantize|plan|budget-sweep|table1|table2|convergence|ab
 flags: --artifacts DIR --model NAME --backend pjrt|native --config FILE
        --method beacon|gptq|rtn|comq --bits B --loops K --ec --centering
        --ln_tune --threads N --save OUT.bin --save-plan PLAN.cfg --verbose
+       --trace [FILE]  write a Chrome trace (Perfetto / chrome://tracing)
+                       of the run; BEACON_TRACE=FILE does the same
 plans: --override 'pattern=spec' (repeatable; ';'-separated list ok)
        spec = method[:bits][+ec|+noec|+centering|+nocentering|+loops=K|+damp=F]
        e.g. --override 'blocks.*.qkv.w=beacon:2+ec' --override 'blocks.*.fc?.w=comq:4'

@@ -77,6 +77,9 @@ impl TensorBundle {
                 data,
             });
         }
+        if let Ok(md) = std::fs::metadata(path) {
+            crate::obs::counter("io.read_bytes", md.len());
+        }
         Ok(TensorBundle { tensors })
     }
 
@@ -94,6 +97,10 @@ impl TensorBundle {
             for v in &t.data {
                 w.write_all(&v.to_le_bytes())?;
             }
+        }
+        w.flush()?;
+        if let Ok(md) = std::fs::metadata(path) {
+            crate::obs::counter("io.write_bytes", md.len());
         }
         Ok(())
     }

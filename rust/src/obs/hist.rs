@@ -1,0 +1,162 @@
+//! Fixed log-bucket histogram: 64 power-of-two buckets covering the
+//! full `u64` range, mergeable across threads with plain addition.
+//!
+//! Value `v` lands in bucket `0` when `v == 0`, otherwise in bucket
+//! `64 - v.leading_zeros()` clamped to 63 — i.e. bucket `b >= 1` holds
+//! `[2^(b-1), 2^b)`. Percentiles report the bucket midpoint
+//! (`1.5 * 2^(b-1)`), which is within ±50% of the true value: plenty
+//! for "p99 per-channel ns" style summaries and entirely allocation-
+//! and float-free on the record path.
+
+/// Mergeable log-bucket histogram of `u64` samples (typically ns).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Hist {
+    pub counts: [u64; 64],
+    pub total: u64,
+    pub sum: u64,
+}
+
+impl Default for Hist {
+    fn default() -> Hist {
+        Hist { counts: [0u64; 64], total: 0, sum: 0 }
+    }
+}
+
+fn bucket(v: u64) -> usize {
+    if v == 0 {
+        0
+    } else {
+        ((64 - v.leading_zeros()) as usize).min(63)
+    }
+}
+
+/// Representative (midpoint) value for a bucket index.
+fn bucket_rep(b: usize) -> u64 {
+    if b == 0 {
+        0
+    } else {
+        let lo = 1u64 << (b - 1);
+        lo + lo / 2
+    }
+}
+
+impl Hist {
+    pub fn record(&mut self, v: u64) {
+        self.counts[bucket(v)] += 1;
+        self.total += 1;
+        self.sum = self.sum.saturating_add(v);
+    }
+
+    pub fn merge(&mut self, other: &Hist) {
+        for (c, o) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *c += o;
+        }
+        self.total += other.total;
+        self.sum = self.sum.saturating_add(other.sum);
+    }
+
+    /// Approximate percentile (`q` in [0, 1]) as the midpoint of the
+    /// bucket containing the q-th sample. Returns 0 on an empty hist.
+    pub fn percentile(&self, q: f64) -> u64 {
+        if self.total == 0 {
+            return 0;
+        }
+        let rank = ((q * self.total as f64).ceil() as u64).clamp(1, self.total);
+        let mut seen = 0u64;
+        for (b, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return bucket_rep(b);
+            }
+        }
+        bucket_rep(63)
+    }
+
+    pub fn mean(&self) -> u64 {
+        if self.total == 0 {
+            0
+        } else {
+            self.sum / self.total
+        }
+    }
+
+    pub fn summary(&self) -> HistSummary {
+        HistSummary {
+            count: self.total,
+            p50: self.percentile(0.50),
+            p95: self.percentile(0.95),
+            p99: self.percentile(0.99),
+            mean: self.mean(),
+        }
+    }
+}
+
+/// Condensed histogram stats for reports and bench rows.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct HistSummary {
+    pub count: u64,
+    pub p50: u64,
+    pub p95: u64,
+    pub p99: u64,
+    pub mean: u64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn buckets_are_powers_of_two() {
+        assert_eq!(bucket(0), 0);
+        assert_eq!(bucket(1), 1);
+        assert_eq!(bucket(2), 2);
+        assert_eq!(bucket(3), 2);
+        assert_eq!(bucket(4), 3);
+        assert_eq!(bucket(1023), 10);
+        assert_eq!(bucket(1024), 11);
+        assert_eq!(bucket(u64::MAX), 63);
+    }
+
+    #[test]
+    fn percentiles_track_distribution() {
+        let mut h = Hist::default();
+        for _ in 0..99 {
+            h.record(100); // bucket 7: [64, 128)
+        }
+        h.record(1 << 20); // one outlier
+        assert_eq!(h.total, 100);
+        assert_eq!(h.percentile(0.50), bucket_rep(7));
+        assert_eq!(h.percentile(0.95), bucket_rep(7));
+        // p99 rank = 99 -> still the common bucket; p100 hits the outlier
+        assert_eq!(h.percentile(0.99), bucket_rep(7));
+        assert_eq!(h.percentile(1.0), bucket_rep(21));
+        assert!(h.mean() > 100);
+    }
+
+    #[test]
+    fn merge_equals_combined_recording() {
+        let mut a = Hist::default();
+        let mut b = Hist::default();
+        let mut both = Hist::default();
+        for v in [3u64, 17, 400, 0, 65_000] {
+            a.record(v);
+            both.record(v);
+        }
+        for v in [5u64, 900, 12] {
+            b.record(v);
+            both.record(v);
+        }
+        a.merge(&b);
+        assert_eq!(a, both);
+        assert_eq!(a.summary(), both.summary());
+    }
+
+    #[test]
+    fn empty_hist_summary_is_zero() {
+        let s = Hist::default().summary();
+        assert_eq!(s.count, 0);
+        assert_eq!(s.p50, 0);
+        assert_eq!(s.p99, 0);
+        assert_eq!(s.mean, 0);
+    }
+}

@@ -1,0 +1,289 @@
+//! Zero-dependency observability: structured spans, counters and
+//! mergeable log-bucket histograms behind one global recorder.
+//!
+//! Recording model (see docs/OBS.md for the full design note):
+//!
+//! * **Disabled is free.** Every entry point checks one relaxed
+//!   `AtomicBool` and returns before touching thread-locals or
+//!   allocating — the instrumented hot paths compile to a load+branch.
+//! * **Enabled is lock-free on the hot path.** Events, counter deltas
+//!   and histogram samples accumulate in per-thread buffers
+//!   (`thread_local!`); a thread only takes the global mutex when its
+//!   outermost span closes (the buffer drains in one append/merge) or
+//!   when a counter fires outside any span (rare: store I/O).
+//! * **Recording never perturbs results.** The scheduler's outputs are
+//!   gathered in index order regardless of timing, and the recorder
+//!   only observes — the traced run is bit-identical to the untraced
+//!   one at any thread count (`rust/tests/obs_trace.rs` pins this).
+//!
+//! Consumers: [`trace::chrome_trace`] exports the Chrome trace-event
+//! JSON behind `beacon --trace FILE` / `BEACON_TRACE`, and
+//! [`report::MetricsReport`] condenses a snapshot into the metrics
+//! section of a `QuantReport`.
+
+pub mod hist;
+pub mod report;
+pub mod span;
+pub mod trace;
+
+pub use hist::{Hist, HistSummary};
+pub use report::MetricsReport;
+pub use span::{SpanEvent, SpanGuard};
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+/// Total records (span events + counter deltas + histogram merges)
+/// accepted since the last [`reset`] — the "disabled path records
+/// nothing" tests key off this staying at zero.
+static EVENTS_RECORDED: AtomicU64 = AtomicU64::new(0);
+
+#[derive(Default)]
+struct Store {
+    events: Vec<SpanEvent>,
+    counters: BTreeMap<String, u64>,
+    hists: BTreeMap<String, Hist>,
+}
+
+fn global() -> &'static Mutex<Store> {
+    static G: OnceLock<Mutex<Store>> = OnceLock::new();
+    G.get_or_init(|| Mutex::new(Store::default()))
+}
+
+/// The single time origin every span timestamp is relative to,
+/// initialized on first use (at [`enable`], in practice).
+fn epoch() -> Instant {
+    static E: OnceLock<Instant> = OnceLock::new();
+    *E.get_or_init(Instant::now)
+}
+
+pub(crate) fn now_ns() -> u64 {
+    epoch().elapsed().as_nanos() as u64
+}
+
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Turn recording on (idempotent). Pins the epoch so the first span's
+/// timestamp is small.
+pub fn enable() {
+    let _ = epoch();
+    ENABLED.store(true, Ordering::SeqCst);
+}
+
+pub fn disable() {
+    ENABLED.store(false, Ordering::SeqCst);
+}
+
+/// Records accepted since the last [`reset`] (spans + counters +
+/// histogram merges).
+pub fn events_recorded() -> u64 {
+    EVENTS_RECORDED.load(Ordering::SeqCst)
+}
+
+pub(crate) fn bump_recorded() {
+    EVENTS_RECORDED.fetch_add(1, Ordering::Relaxed);
+}
+
+/// Drop everything recorded so far (global store + this thread's
+/// buffer). Worker threads are scoped per fan, so between runs the
+/// calling thread's buffer is the only live one.
+pub fn reset() {
+    span::reset_thread();
+    let mut g = global().lock().unwrap();
+    *g = Store::default();
+    EVENTS_RECORDED.store(0, Ordering::SeqCst);
+}
+
+/// Open a span with a static name. The guard records on drop; keep it
+/// on the opening thread. `finish()` returns the elapsed seconds (the
+/// pipeline's phase timers read it), measured whether or not the
+/// recorder is on.
+pub fn span(cat: &'static str, name: &'static str) -> SpanGuard {
+    span::open(cat, || (name.to_string(), Vec::new()))
+}
+
+/// Open a span whose name/args are built lazily — `make` only runs when
+/// the recorder is enabled, so a disabled span allocates nothing.
+pub fn span_args<F>(cat: &'static str, make: F) -> SpanGuard
+where
+    F: FnOnce() -> (String, Vec<(&'static str, String)>),
+{
+    span::open(cat, make)
+}
+
+/// Add `delta` to the named counter. Inside a span the delta buffers
+/// thread-locally; outside one it goes straight to the global store.
+pub fn counter(name: &str, delta: u64) {
+    if !enabled() || delta == 0 {
+        return;
+    }
+    span::add_counter(name, delta);
+}
+
+/// Merge a locally accumulated histogram into the named global one
+/// (the pool's per-worker item-latency histograms land here).
+pub fn merge_hist(name: &str, h: Hist) {
+    if !enabled() || h.total == 0 {
+        return;
+    }
+    span::add_hist(name, h);
+}
+
+/// A coherent copy of everything recorded so far. Flushes the calling
+/// thread's buffer first, so spans closed on this thread are visible
+/// even while an outer span is still open.
+pub fn snapshot() -> Snapshot {
+    span::flush_thread();
+    let g = global().lock().unwrap();
+    Snapshot {
+        events: g.events.clone(),
+        counters: g.counters.clone(),
+        hists: g.hists.clone(),
+    }
+}
+
+/// Convenience: `true` when the `BEACON_TRACE` env var names a file.
+pub fn trace_env() -> Option<String> {
+    std::env::var("BEACON_TRACE").ok().filter(|v| !v.is_empty())
+}
+
+pub(crate) fn drain_into_global(
+    events: &mut Vec<SpanEvent>,
+    counters: &mut BTreeMap<String, u64>,
+    hists: &mut BTreeMap<String, Hist>,
+) {
+    if events.is_empty() && counters.is_empty() && hists.is_empty() {
+        return;
+    }
+    let mut g = global().lock().unwrap();
+    g.events.append(events);
+    for (k, v) in std::mem::take(counters) {
+        *g.counters.entry(k).or_insert(0) += v;
+    }
+    for (k, h) in std::mem::take(hists) {
+        g.hists.entry(k).or_insert_with(Hist::default).merge(&h);
+    }
+}
+
+/// Everything the recorder collected, merged across threads.
+#[derive(Debug, Clone, Default)]
+pub struct Snapshot {
+    pub events: Vec<SpanEvent>,
+    pub counters: BTreeMap<String, u64>,
+    pub hists: BTreeMap<String, Hist>,
+}
+
+/// Write the current snapshot as Chrome trace-event JSON (open in
+/// Perfetto or chrome://tracing).
+pub fn write_chrome_trace(path: &Path) -> Result<()> {
+    let snap = snapshot();
+    std::fs::write(path, trace::render(&snap))
+        .with_context(|| format!("write trace {path:?}"))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::MutexGuard;
+
+    /// Tests that toggle the global recorder serialize on this lock so
+    /// the rest of the lib test binary never observes a half-enabled
+    /// recorder.
+    fn lock() -> MutexGuard<'static, ()> {
+        static L: OnceLock<Mutex<()>> = OnceLock::new();
+        L.get_or_init(|| Mutex::new(()))
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+    }
+
+    #[test]
+    fn disabled_records_nothing() {
+        let _l = lock();
+        reset();
+        disable();
+        {
+            let _s = span("test", "outer");
+            counter("test.count", 3);
+            merge_hist("test.h", {
+                let mut h = Hist::default();
+                h.record(10);
+                h
+            });
+        }
+        assert_eq!(events_recorded(), 0);
+        let snap = snapshot();
+        assert!(snap.events.is_empty());
+        assert!(snap.counters.is_empty());
+        assert!(snap.hists.is_empty());
+    }
+
+    #[test]
+    fn nested_spans_record_depth_and_args() {
+        let _l = lock();
+        reset();
+        enable();
+        {
+            let _outer = span("test", "outer");
+            {
+                let _inner = span_args("test", || {
+                    ("inner".to_string(), vec![("k", "v".to_string())])
+                });
+            }
+            counter("test.count", 2);
+            counter("test.count", 5);
+        }
+        disable();
+        let snap = snapshot();
+        assert_eq!(snap.events.len(), 2);
+        // inner closes first, one level deeper than outer
+        assert_eq!(snap.events[0].name, "inner");
+        assert_eq!(snap.events[0].depth, 1);
+        assert_eq!(snap.events[0].args, vec![("k", "v".to_string())]);
+        assert_eq!(snap.events[1].name, "outer");
+        assert_eq!(snap.events[1].depth, 0);
+        assert_eq!(snap.events[0].tid, snap.events[1].tid);
+        // inner lies within outer's window
+        let (o, i) = (&snap.events[1], &snap.events[0]);
+        assert!(i.start_ns >= o.start_ns);
+        assert!(i.start_ns + i.dur_ns <= o.start_ns + o.dur_ns);
+        assert_eq!(snap.counters.get("test.count"), Some(&7));
+        assert!(events_recorded() >= 4);
+        reset();
+        assert_eq!(events_recorded(), 0);
+        assert!(snapshot().events.is_empty());
+    }
+
+    #[test]
+    fn finish_returns_elapsed_even_when_disabled() {
+        let _l = lock();
+        reset();
+        disable();
+        let s = span("test", "timed");
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        let secs = s.finish();
+        assert!(secs > 0.0);
+        assert_eq!(events_recorded(), 0);
+    }
+
+    #[test]
+    fn counter_outside_any_span_goes_global() {
+        let _l = lock();
+        reset();
+        enable();
+        counter("io.test_bytes", 123);
+        disable();
+        let snap = snapshot();
+        assert_eq!(snap.counters.get("io.test_bytes"), Some(&123));
+        reset();
+    }
+}

@@ -1,0 +1,141 @@
+//! Condensed metrics derived from a recorder [`Snapshot`] — the
+//! `metrics` section of a `QuantReport` and the extra columns in
+//! `BENCH_quant.json` rows.
+
+use super::hist::HistSummary;
+use super::Snapshot;
+
+/// Macro-level run metrics: per-phase wall time, scheduler worker
+/// utilization, gram-cache hit rate, store I/O volume and the
+/// per-channel latency distribution.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MetricsReport {
+    /// `(phase name, seconds)` in execution order, as handed in by the
+    /// pipeline (span timings survive even when the recorder is off).
+    pub phases: Vec<(String, f64)>,
+    /// Busy fraction of the worker pool inside the `phase.quantize`
+    /// window: sum of worker-span time / (window × distinct workers).
+    pub worker_utilization: Option<f64>,
+    /// Distinct `pool.worker` spans' thread ids seen in that window.
+    pub workers: usize,
+    pub gram_cache_hits: u64,
+    pub gram_cache_misses: u64,
+    pub io_read_bytes: u64,
+    pub io_write_bytes: u64,
+    /// Summary of `engine.channels.item_ns` (per-channel quantize ns).
+    pub channel_ns: Option<HistSummary>,
+    /// Distinct recorder thread ids across the whole snapshot.
+    pub threads_seen: usize,
+}
+
+impl MetricsReport {
+    /// Build from a snapshot plus the pipeline's phase timings.
+    pub fn from_snapshot(snap: &Snapshot, phases: Vec<(String, f64)>) -> MetricsReport {
+        let window = snap
+            .events
+            .iter()
+            .find(|e| e.name == "phase.quantize")
+            .map(|e| (e.start_ns, e.start_ns + e.dur_ns));
+        let mut worker_tids: Vec<u64> = Vec::new();
+        let mut busy_ns = 0u64;
+        if let Some((lo, hi)) = window {
+            for e in &snap.events {
+                if e.cat == "pool.worker" && e.start_ns >= lo && e.start_ns < hi {
+                    busy_ns += e.dur_ns;
+                    if !worker_tids.contains(&e.tid) {
+                        worker_tids.push(e.tid);
+                    }
+                }
+            }
+        }
+        let worker_utilization = match window {
+            Some((lo, hi)) if !worker_tids.is_empty() && hi > lo => {
+                let capacity = (hi - lo) as f64 * worker_tids.len() as f64;
+                Some((busy_ns as f64 / capacity).min(1.0))
+            }
+            _ => None,
+        };
+        let mut tids: Vec<u64> = Vec::new();
+        for e in &snap.events {
+            if !tids.contains(&e.tid) {
+                tids.push(e.tid);
+            }
+        }
+        let counter = |name: &str| snap.counters.get(name).copied().unwrap_or(0);
+        MetricsReport {
+            phases,
+            worker_utilization,
+            workers: worker_tids.len(),
+            gram_cache_hits: counter("pipeline.gram_cache.hit"),
+            gram_cache_misses: counter("pipeline.gram_cache.miss"),
+            io_read_bytes: counter("io.read_bytes"),
+            io_write_bytes: counter("io.write_bytes"),
+            channel_ns: snap.hists.get("engine.channels.item_ns").map(|h| h.summary()),
+            threads_seen: tids.len(),
+        }
+    }
+
+    /// Gram-cache hit rate in [0, 1]; `None` when the cache was never
+    /// consulted.
+    pub fn gram_cache_hit_rate(&self) -> Option<f64> {
+        let total = self.gram_cache_hits + self.gram_cache_misses;
+        if total == 0 {
+            None
+        } else {
+            Some(self.gram_cache_hits as f64 / total as f64)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::SpanEvent;
+
+    fn span(name: &str, cat: &'static str, tid: u64, start_ns: u64, dur_ns: u64) -> SpanEvent {
+        SpanEvent {
+            name: name.to_string(),
+            cat,
+            tid,
+            depth: 0,
+            start_ns,
+            dur_ns,
+            args: Vec::new(),
+        }
+    }
+
+    #[test]
+    fn utilization_counts_workers_in_quantize_window() {
+        let mut snap = Snapshot::default();
+        snap.events.push(span("phase.quantize", "phase", 1, 0, 1_000));
+        snap.events.push(span("engine.layers.worker", "pool.worker", 2, 0, 800));
+        snap.events.push(span("engine.layers.worker", "pool.worker", 3, 0, 600));
+        // outside the window: ignored
+        snap.events.push(span("engine.layers.worker", "pool.worker", 4, 5_000, 100));
+        let m = MetricsReport::from_snapshot(&snap, vec![("quantize".to_string(), 1e-6)]);
+        assert_eq!(m.workers, 2);
+        let u = m.worker_utilization.unwrap();
+        assert!((u - 0.7).abs() < 1e-9, "got {u}");
+        assert_eq!(m.threads_seen, 4);
+    }
+
+    #[test]
+    fn no_quantize_phase_means_no_utilization() {
+        let mut snap = Snapshot::default();
+        snap.events.push(span("phase.eval", "phase", 1, 0, 1_000));
+        let m = MetricsReport::from_snapshot(&snap, Vec::new());
+        assert!(m.worker_utilization.is_none());
+        assert_eq!(m.workers, 0);
+    }
+
+    #[test]
+    fn cache_hit_rate() {
+        let mut snap = Snapshot::default();
+        snap.counters.insert("pipeline.gram_cache.hit".to_string(), 3);
+        snap.counters.insert("pipeline.gram_cache.miss".to_string(), 1);
+        let m = MetricsReport::from_snapshot(&snap, Vec::new());
+        assert_eq!(m.gram_cache_hit_rate(), Some(0.75));
+        let empty = MetricsReport::from_snapshot(&Snapshot::default(), Vec::new());
+        assert_eq!(empty.gram_cache_hit_rate(), None);
+    }
+}

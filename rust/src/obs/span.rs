@@ -1,0 +1,174 @@
+//! Per-thread recording buffers and the RAII span guard.
+//!
+//! Each thread that records gets a `ThreadBuf` (thread-local): a small
+//! `tid` handed out from a global counter (stable, dense — friendlier
+//! than OS thread ids in a trace viewer), the current span depth, and
+//! pending events/counters/histograms. Closing the outermost span
+//! drains the buffer into the global store in one lock acquisition, so
+//! worker threads never contend mid-work.
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+use super::hist::Hist;
+
+/// One closed span, as stored and exported.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SpanEvent {
+    pub name: String,
+    pub cat: &'static str,
+    /// Recorder-assigned thread id (1 = first recording thread).
+    pub tid: u64,
+    /// Nesting depth on the owning thread at open time (0 = outermost).
+    pub depth: u32,
+    pub start_ns: u64,
+    pub dur_ns: u64,
+    pub args: Vec<(&'static str, String)>,
+}
+
+static NEXT_TID: AtomicU64 = AtomicU64::new(1);
+
+struct ThreadBuf {
+    tid: u64,
+    depth: u32,
+    events: Vec<SpanEvent>,
+    counters: BTreeMap<String, u64>,
+    hists: BTreeMap<String, Hist>,
+}
+
+impl ThreadBuf {
+    fn new() -> ThreadBuf {
+        ThreadBuf {
+            tid: NEXT_TID.fetch_add(1, Ordering::Relaxed),
+            depth: 0,
+            events: Vec::new(),
+            counters: BTreeMap::new(),
+            hists: BTreeMap::new(),
+        }
+    }
+
+    fn drain(&mut self) {
+        super::drain_into_global(&mut self.events, &mut self.counters, &mut self.hists);
+    }
+}
+
+thread_local! {
+    static BUF: RefCell<ThreadBuf> = RefCell::new(ThreadBuf::new());
+}
+
+/// What an enabled guard remembers about its open span.
+struct RecOpen {
+    name: String,
+    cat: &'static str,
+    start_ns: u64,
+    args: Vec<(&'static str, String)>,
+}
+
+/// RAII span guard: records a [`SpanEvent`] on drop when the recorder
+/// was enabled at open time. Must be dropped on the thread that opened
+/// it (it is `!Send` by construction — `RefCell` access is thread-local).
+pub struct SpanGuard {
+    start: Instant,
+    rec: Option<RecOpen>,
+    // Anchor the guard to its opening thread.
+    _not_send: std::marker::PhantomData<*const ()>,
+}
+
+pub(super) fn open<F>(cat: &'static str, make: F) -> SpanGuard
+where
+    F: FnOnce() -> (String, Vec<(&'static str, String)>),
+{
+    let start = Instant::now();
+    let rec = if super::enabled() {
+        let (name, args) = make();
+        let start_ns = super::now_ns();
+        BUF.with(|b| b.borrow_mut().depth += 1);
+        Some(RecOpen { name, cat, start_ns, args })
+    } else {
+        None
+    };
+    SpanGuard { start, rec, _not_send: std::marker::PhantomData }
+}
+
+impl SpanGuard {
+    /// Close the span and return its elapsed wall time in seconds —
+    /// the replacement for the pipeline's hand-rolled `Instant` timers.
+    /// Valid (and allocation-free) whether or not recording is on.
+    pub fn finish(self) -> f64 {
+        let secs = self.start.elapsed().as_secs_f64();
+        drop(self);
+        secs
+    }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        let Some(rec) = self.rec.take() else {
+            return;
+        };
+        let end_ns = super::now_ns();
+        BUF.with(|b| {
+            let mut b = b.borrow_mut();
+            b.depth = b.depth.saturating_sub(1);
+            let depth = b.depth;
+            let tid = b.tid;
+            b.events.push(SpanEvent {
+                name: rec.name,
+                cat: rec.cat,
+                tid,
+                depth,
+                start_ns: rec.start_ns,
+                dur_ns: end_ns.saturating_sub(rec.start_ns),
+                args: rec.args,
+            });
+            super::bump_recorded();
+            if depth == 0 {
+                b.drain();
+            }
+        });
+    }
+}
+
+/// Buffer a counter delta; flushes immediately when outside any span
+/// (e.g. store I/O on the main thread between phases).
+pub(super) fn add_counter(name: &str, delta: u64) {
+    BUF.with(|b| {
+        let mut b = b.borrow_mut();
+        *b.counters.entry(name.to_string()).or_insert(0) += delta;
+        super::bump_recorded();
+        if b.depth == 0 {
+            b.drain();
+        }
+    });
+}
+
+/// Buffer a histogram merge; same flush rule as [`add_counter`].
+pub(super) fn add_hist(name: &str, h: Hist) {
+    BUF.with(|b| {
+        let mut b = b.borrow_mut();
+        b.hists.entry(name.to_string()).or_insert_with(Hist::default).merge(&h);
+        super::bump_recorded();
+        if b.depth == 0 {
+            b.drain();
+        }
+    });
+}
+
+/// Push this thread's buffered records to the global store (snapshot
+/// support: see [`super::snapshot`]).
+pub(super) fn flush_thread() {
+    BUF.with(|b| b.borrow_mut().drain());
+}
+
+/// Clear this thread's buffer without publishing it (reset support).
+pub(super) fn reset_thread() {
+    BUF.with(|b| {
+        let mut b = b.borrow_mut();
+        b.depth = 0;
+        b.events.clear();
+        b.counters.clear();
+        b.hists.clear();
+    });
+}

@@ -1,0 +1,169 @@
+//! Chrome trace-event JSON export (the "JSON Array Format with
+//! metadata" flavor: a top-level object with a `traceEvents` array).
+//! Load the output in Perfetto (ui.perfetto.dev) or `chrome://tracing`.
+//!
+//! Each closed span becomes one complete event (`"ph": "X"`) with
+//! microsecond `ts`/`dur` relative to the recorder epoch; the viewer
+//! reconstructs nesting per track from time containment, which matches
+//! the recorder's per-thread depth exactly. Counters and histogram
+//! summaries ride along as top-level metadata objects so one file
+//! carries the whole snapshot.
+
+use std::collections::BTreeMap;
+
+use super::Snapshot;
+use crate::util::json::Value;
+
+fn obj(pairs: Vec<(&str, Value)>) -> Value {
+    let mut m = BTreeMap::new();
+    for (k, v) in pairs {
+        m.insert(k.to_string(), v);
+    }
+    Value::Obj(m)
+}
+
+fn num(n: u64) -> Value {
+    Value::Num(n as f64)
+}
+
+fn s(v: &str) -> Value {
+    Value::Str(v.to_string())
+}
+
+/// Build the trace document as a [`Value`] tree.
+pub fn chrome_trace(snap: &Snapshot) -> Value {
+    let mut events: Vec<Value> = Vec::with_capacity(snap.events.len() + 2);
+    events.push(obj(vec![
+        ("name", s("process_name")),
+        ("ph", s("M")),
+        ("pid", num(1)),
+        ("tid", num(0)),
+        ("args", obj(vec![("name", s("beacon"))])),
+    ]));
+    for ev in &snap.events {
+        let mut args: Vec<(&str, Value)> = vec![("depth", num(ev.depth as u64))];
+        for (k, v) in &ev.args {
+            args.push((*k, s(v)));
+        }
+        events.push(obj(vec![
+            ("name", s(&ev.name)),
+            ("cat", s(ev.cat)),
+            ("ph", s("X")),
+            ("pid", num(1)),
+            ("tid", num(ev.tid)),
+            ("ts", num(ev.start_ns / 1_000)),
+            ("dur", num((ev.dur_ns / 1_000).max(1))),
+            ("args", obj(args)),
+        ]));
+    }
+    let counters = obj(
+        snap.counters
+            .iter()
+            .map(|(k, v)| (k.as_str(), num(*v)))
+            .collect(),
+    );
+    let hists = obj(
+        snap.hists
+            .iter()
+            .map(|(k, h)| {
+                let sm = h.summary();
+                (
+                    k.as_str(),
+                    obj(vec![
+                        ("count", num(sm.count)),
+                        ("p50", num(sm.p50)),
+                        ("p95", num(sm.p95)),
+                        ("p99", num(sm.p99)),
+                        ("mean", num(sm.mean)),
+                    ]),
+                )
+            })
+            .collect(),
+    );
+    obj(vec![
+        ("traceEvents", Value::Arr(events)),
+        ("displayTimeUnit", s("ms")),
+        ("beaconCounters", counters),
+        ("beaconHistograms", hists),
+    ])
+}
+
+/// Render the trace document to a JSON string.
+pub fn render(snap: &Snapshot) -> String {
+    chrome_trace(snap).to_json()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::SpanEvent;
+
+    fn sample_snapshot() -> Snapshot {
+        let mut snap = Snapshot::default();
+        snap.events.push(SpanEvent {
+            name: "phase.quantize".to_string(),
+            cat: "phase",
+            tid: 1,
+            depth: 0,
+            start_ns: 5_000,
+            dur_ns: 2_000_000,
+            args: vec![("layers", "3".to_string())],
+        });
+        snap.events.push(SpanEvent {
+            name: "layer[0]".to_string(),
+            cat: "engine",
+            tid: 2,
+            depth: 1,
+            start_ns: 10_000,
+            dur_ns: 500_000,
+            args: Vec::new(),
+        });
+        snap.counters.insert("pipeline.gram_cache.hit".to_string(), 4);
+        let mut h = crate::obs::Hist::default();
+        h.record(900);
+        h.record(1_100);
+        snap.hists.insert("engine.channels.item_ns".to_string(), h);
+        snap
+    }
+
+    #[test]
+    fn trace_is_valid_json_with_expected_shape() {
+        let snap = sample_snapshot();
+        let text = render(&snap);
+        let v = Value::parse(&text).expect("trace must be valid JSON");
+        let evs = v.at(&["traceEvents"]).as_arr().unwrap();
+        // metadata event + 2 spans
+        assert_eq!(evs.len(), 3);
+        assert_eq!(evs[0].at(&["ph"]).as_str(), Some("M"));
+        let span = &evs[1];
+        assert_eq!(span.at(&["name"]).as_str(), Some("phase.quantize"));
+        assert_eq!(span.at(&["ph"]).as_str(), Some("X"));
+        assert_eq!(span.at(&["ts"]).as_f64(), Some(5.0));
+        assert_eq!(span.at(&["dur"]).as_f64(), Some(2_000.0));
+        assert_eq!(span.at(&["args", "layers"]).as_str(), Some("3"));
+        assert_eq!(evs[2].at(&["tid"]).as_f64(), Some(2.0));
+        assert_eq!(
+            v.at(&["beaconCounters", "pipeline.gram_cache.hit"]).as_f64(),
+            Some(4.0)
+        );
+        let hist = v.at(&["beaconHistograms", "engine.channels.item_ns"]);
+        assert_eq!(hist.at(&["count"]).as_f64(), Some(2.0));
+    }
+
+    #[test]
+    fn sub_microsecond_spans_keep_nonzero_duration() {
+        let mut snap = Snapshot::default();
+        snap.events.push(SpanEvent {
+            name: "tiny".to_string(),
+            cat: "test",
+            tid: 1,
+            depth: 0,
+            start_ns: 100,
+            dur_ns: 200,
+            args: Vec::new(),
+        });
+        let v = chrome_trace(&snap);
+        let evs = v.at(&["traceEvents"]).as_arr().unwrap();
+        assert_eq!(evs[1].at(&["dur"]).as_f64(), Some(1.0));
+    }
+}

@@ -235,7 +235,7 @@ pub fn beacon_layer_prefactored(
 
     let w_cols = w.columns();
     let nthreads = crate::util::pool::resolve_threads(opts.threads);
-    let results = crate::util::pool::par_map_indexed(np, nthreads, |j| {
+    let results = crate::util::pool::par_map_labeled("engine.channels", np, nthreads, |j| {
         let wj: Vec<f64> = if opts.centering {
             w_cols[j].iter().map(|v| v - z_w[j]).collect()
         } else {

@@ -43,7 +43,7 @@ pub fn comq_layer_threads(
 
     let w_cols = w.columns();
     let nthreads = crate::util::pool::resolve_threads(threads);
-    let cols = crate::util::pool::par_map_indexed(np, nthreads, |j| {
+    let cols = crate::util::pool::par_map_labeled("engine.channels", np, nthreads, |j| {
         let wj = &w_cols[j];
         let (c, z) = minmax_scale(wj, bits);
         let grid: Vec<f64> = (0..lv).map(|k| c * (k as f64 + z)).collect();

@@ -211,7 +211,7 @@ impl Quantizer for RtnQuantizer {
         let (n, np) = (w.rows, w.cols);
         let lv = levels(self.bits);
         let w_cols = w.columns();
-        let cols = pool::par_map_indexed(np, ctx.threads, |j| {
+        let cols = pool::par_map_labeled("engine.channels", np, ctx.threads, |j| {
             let wj = &w_cols[j];
             let (c, z) = minmax_scale(wj, self.bits);
             let mut codes = Vec::with_capacity(n);
@@ -324,14 +324,19 @@ pub fn plan(threads: usize, layers: usize, layer_parallel: bool) -> Schedule {
 
 /// Fan `f` over `0..layers` with the planned layer-axis width, gathering
 /// results in index order; the first error (in index order) propagates.
+/// Each layer runs inside an `engine`-category span (`layer[i]`), so a
+/// trace shows the layer fan nested under the owning phase.
 pub fn run_layers<T, F>(sched: Schedule, layers: usize, f: F) -> Result<Vec<T>>
 where
     T: Send,
     F: Fn(usize) -> Result<T> + Sync,
 {
-    pool::par_map_indexed(layers, sched.layer_threads, f)
-        .into_iter()
-        .collect()
+    pool::par_map_labeled("engine.layers", layers, sched.layer_threads, |li| {
+        let _span = crate::obs::span_args("engine", || (format!("layer[{li}]"), Vec::new()));
+        f(li)
+    })
+    .into_iter()
+    .collect()
 }
 
 /// Fan a `layers × cands` probe grid over the layer axis: `f(li, ci)` is

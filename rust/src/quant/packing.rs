@@ -47,9 +47,9 @@ pub fn pack_channel(
     }
 }
 
-/// Unpack to dequantized f32 values (c·q + offset).
-pub fn unpack_channel(p: &PackedChannel, width: BitWidth) -> Vec<f32> {
-    let alph = alphabet(width);
+/// Unpack the raw alphabet indices (the lossless payload: packing is
+/// exact on indices, while dequantized values go through f32).
+pub fn unpack_indices(p: &PackedChannel) -> Vec<usize> {
     let mask = if p.bits == 64 { u64::MAX } else { (1u64 << p.bits) - 1 };
     (0..p.len)
         .map(|i| {
@@ -59,9 +59,17 @@ pub fn unpack_channel(p: &PackedChannel, width: BitWidth) -> Vec<f32> {
             if off + p.bits as usize > 64 {
                 idx |= p.words[word + 1] << (64 - off);
             }
-            let idx = (idx & mask) as usize;
-            p.scale * alph[idx] as f32 + p.offset
+            (idx & mask) as usize
         })
+        .collect()
+}
+
+/// Unpack to dequantized f32 values (c·q + offset).
+pub fn unpack_channel(p: &PackedChannel, width: BitWidth) -> Vec<f32> {
+    let alph = alphabet(width);
+    unpack_indices(p)
+        .into_iter()
+        .map(|idx| p.scale * alph[idx] as f32 + p.offset)
         .collect()
 }
 
@@ -127,5 +135,61 @@ mod tests {
     #[should_panic(expected = "not on")]
     fn rejects_off_grid_codes() {
         pack_channel(&[0.25], 1.0, 0.0, BitWidth::B2);
+    }
+
+    #[test]
+    fn indices_roundtrip_bit_identical() {
+        // pack → unpack_indices must be lossless at every storage width,
+        // including ragged tails that leave a partial final word.
+        for (width, n) in [
+            (BitWidth::B2, 70usize), // 140 bits: 12 bits spill past word 2
+            (BitWidth::B3, 70),      // 210 bits: tail + boundary crossings
+            (BitWidth::B4, 70),      // 280 bits
+            (BitWidth::B2, 1),       // single element
+            (BitWidth::B3, 64),      // exact multiple of elements
+        ] {
+            let alph = alphabet(width);
+            let lv = alph.len();
+            let want: Vec<usize> = (0..n).map(|i| (i * 7 + 3) % lv).collect();
+            let codes: Vec<f64> = want.iter().map(|&k| alph[k]).collect();
+            let p = pack_channel(&codes, 0.37, -0.05, width);
+            assert_eq!(unpack_indices(&p), want, "{width:?} n={n}");
+        }
+    }
+
+    #[test]
+    fn ragged_tail_words_are_exact() {
+        // 70 × 3-bit = 210 bits → 4 words, last holds 18 live bits; the
+        // elements straddling words 1/2 and 2/3 (indices 21 and 42) and
+        // the final element must all survive.
+        let width = BitWidth::B3;
+        let alph = alphabet(width);
+        let want: Vec<usize> = (0..70).map(|i| i % 8).collect();
+        let codes: Vec<f64> = want.iter().map(|&k| alph[k]).collect();
+        let p = pack_channel(&codes, 1.0, 0.0, width);
+        assert_eq!(p.words.len(), 4);
+        let got = unpack_indices(&p);
+        assert_eq!(got[21], want[21]);
+        assert_eq!(got[42], want[42]);
+        assert_eq!(got[69], want[69]);
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn packed_bytes_vs_f32() {
+        // the storage model the paper's memory numbers assume: n f32
+        // weights (4n bytes) → ceil(n·bits/8) + 8 bytes of metadata
+        for (width, n, payload) in [
+            (BitWidth::B2, 1000usize, 250usize),
+            (BitWidth::B3, 1000, 375),
+            (BitWidth::B4, 1000, 500),
+            (BitWidth::B3, 70, 27), // ragged: ceil(210/8)
+        ] {
+            let alph = alphabet(width);
+            let codes: Vec<f64> = (0..n).map(|i| alph[i % alph.len()]).collect();
+            let p = pack_channel(&codes, 1.0, 0.0, width);
+            assert_eq!(packed_bytes(&p), payload + 8, "{width:?}");
+            assert!(packed_bytes(&p) < n * 4, "{width:?} must beat f32");
+        }
     }
 }

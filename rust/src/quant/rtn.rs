@@ -50,7 +50,7 @@ pub fn rtn_layer(w: &Matrix, bits: BitWidth) -> Matrix {
 pub fn rtn_layer_threads(w: &Matrix, bits: BitWidth, threads: usize) -> Matrix {
     let nthreads = crate::util::pool::resolve_threads(threads);
     let w_cols = w.columns();
-    let cols = crate::util::pool::par_map_indexed(w.cols, nthreads, |j| {
+    let cols = crate::util::pool::par_map_labeled("engine.channels", w.cols, nthreads, |j| {
         rtn_channel(&w_cols[j], bits)
     });
     let mut out = Matrix::zeros(w.rows, w.cols);

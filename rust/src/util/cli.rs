@@ -187,4 +187,16 @@ mod tests {
         assert_eq!(a.f64("bits", 4.0), 4.0);
         assert!(!a.switch("ec"));
     }
+
+    #[test]
+    fn trace_flag_forms() {
+        // `--trace out.json` carries a path; a bare trailing `--trace`
+        // parses as a switch (the binary then picks a default file name)
+        let a = parse("quantize --trace out.json");
+        assert_eq!(a.get("trace"), Some("out.json"));
+        assert!(!a.switch("trace"));
+        let a = parse("quantize --trace");
+        assert_eq!(a.get("trace"), None);
+        assert!(a.switch("trace"));
+    }
 }

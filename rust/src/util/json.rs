@@ -1,4 +1,6 @@
-//! Minimal recursive-descent JSON parser — enough for the AOT manifest.
+//! Minimal recursive-descent JSON parser — enough for the AOT manifest —
+//! plus a writer ([`Value::to_json`]) used by the trace exporter and the
+//! perf-gate baseline rewrite.
 //!
 //! Supports the full JSON grammar except `\u` surrogate pairs (the manifest
 //! is ASCII). Numbers parse to f64; use [`Value::as_usize`] for counts.
@@ -92,6 +94,70 @@ impl Value {
             _ => None,
         }
     }
+
+    /// Serialize to compact JSON. Object keys come out sorted (BTreeMap
+    /// order); integral numbers print without a fractional part, so a
+    /// parse → to_json round trip of integer-valued documents is exact.
+    pub fn to_json(&self) -> String {
+        let mut out = String::new();
+        self.write_json(&mut out);
+        out
+    }
+
+    fn write_json(&self, out: &mut String) {
+        match self {
+            Value::Null => out.push_str("null"),
+            Value::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Value::Num(n) => {
+                if !n.is_finite() {
+                    out.push_str("null");
+                } else if n.fract() == 0.0 && n.abs() < 9.0e15 {
+                    out.push_str(&format!("{}", *n as i64));
+                } else {
+                    out.push_str(&format!("{n}"));
+                }
+            }
+            Value::Str(s) => write_json_string(s, out),
+            Value::Arr(a) => {
+                out.push('[');
+                for (i, v) in a.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    v.write_json(out);
+                }
+                out.push(']');
+            }
+            Value::Obj(m) => {
+                out.push('{');
+                for (i, (k, v)) in m.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    write_json_string(k, out);
+                    out.push(':');
+                    v.write_json(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+}
+
+fn write_json_string(s: &str, out: &mut String) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
 }
 
 struct Parser<'a> {
@@ -315,5 +381,37 @@ mod tests {
     fn whitespace_tolerant() {
         let v = Value::parse(" {\n\t\"k\" :\r [ 1 , 2 ] } ").unwrap();
         assert_eq!(v.at(&["k"]).as_arr().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn writer_round_trips() {
+        let src = r#"{"a":[1,2.5,{"b":"c"}],"d":{},"e":null,"f":true,"g":-7}"#;
+        let v = Value::parse(src).unwrap();
+        let out = v.to_json();
+        assert_eq!(Value::parse(&out).unwrap(), v);
+        // keys are sorted and integers stay integral
+        assert_eq!(out, src);
+    }
+
+    #[test]
+    fn writer_escapes_strings() {
+        let v = Value::Str("a\"b\\c\nd\u{1}".to_string());
+        let out = v.to_json();
+        assert_eq!(out, "\"a\\\"b\\\\c\\nd\\u0001\"");
+        assert_eq!(Value::parse(&out).unwrap(), v);
+    }
+
+    #[test]
+    fn writer_handles_large_integers_exactly() {
+        // span timestamps are u64 ns well above 2^32
+        let v = Value::Num(123_456_789_012_345.0);
+        assert_eq!(v.to_json(), "123456789012345");
+        assert_eq!(Value::parse(&v.to_json()).unwrap(), v);
+    }
+
+    #[test]
+    fn writer_maps_nonfinite_to_null() {
+        assert_eq!(Value::Num(f64::NAN).to_json(), "null");
+        assert_eq!(Value::Num(f64::INFINITY).to_json(), "null");
     }
 }

@@ -12,9 +12,20 @@
 //! design, finished items never contend on one lock, so a channel sweep
 //! with thousands of cheap items scales with the thread count instead of
 //! serializing on the gather.
+//!
+//! [`par_map_labeled`] is the instrumented entry point: when the `obs`
+//! recorder is enabled it wraps the fan in a span, opens one
+//! `pool.worker` span per worker thread and accumulates per-item
+//! latencies into a worker-local histogram merged once at worker exit
+//! (`"{label}.item_ns"`). When the recorder is disabled the code path
+//! is exactly the uninstrumented fan — recording can never perturb the
+//! index-ordered gather, so traced runs stay bit-identical.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
+use std::time::Instant;
+
+use crate::obs;
 
 pub fn default_threads() -> usize {
     std::env::var("BEACON_THREADS")
@@ -47,10 +58,60 @@ where
     T: Send,
     F: Fn(usize) -> T + Sync,
 {
+    par_map_labeled("pool", n, nthreads, f)
+}
+
+/// [`par_map_indexed`] with a stable label for observability: the fan
+/// span, per-worker spans, the `"{label}.items"` counter and the
+/// `"{label}.item_ns"` histogram are all keyed off it.
+pub fn par_map_labeled<T, F>(label: &'static str, n: usize, nthreads: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
     let nthreads = nthreads.clamp(1, n.max(1));
     if nthreads <= 1 || n <= 1 {
-        return (0..n).map(f).collect();
+        if !obs::enabled() {
+            return (0..n).map(f).collect();
+        }
+        let _fan = obs::span_args("pool", || {
+            (label.to_string(), vec![("items", n.to_string()), ("workers", "1".to_string())])
+        });
+        let mut hist = obs::Hist::default();
+        let out = (0..n)
+            .map(|i| {
+                let t = Instant::now();
+                let r = f(i);
+                hist.record(t.elapsed().as_nanos() as u64);
+                r
+            })
+            .collect();
+        obs::counter(&format!("{label}.items"), n as u64);
+        obs::merge_hist(&format!("{label}.item_ns"), hist);
+        return out;
     }
+    if !obs::enabled() {
+        return fan(n, nthreads, &f, None);
+    }
+    let _fan = obs::span_args("pool", || {
+        (
+            label.to_string(),
+            vec![("items", n.to_string()), ("workers", nthreads.to_string())],
+        )
+    });
+    fan(n, nthreads, &f, Some(label))
+}
+
+/// The shared fan-out: spawn `nthreads` scoped workers over an atomic
+/// cursor and gather `(index, value)` pairs into slot order. With
+/// `label = Some`, each worker wraps itself in a `pool.worker` span and
+/// times items into a worker-local histogram; with `None` this is the
+/// original uninstrumented hot path, byte for byte.
+fn fan<T, F>(n: usize, nthreads: usize, f: &F, label: Option<&'static str>) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
     let cursor = AtomicUsize::new(0);
     let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
     let (tx, rx) = mpsc::channel::<(usize, T)>();
@@ -58,15 +119,40 @@ where
         for _ in 0..nthreads {
             let tx = tx.clone();
             let cursor = &cursor;
-            let f = &f;
-            scope.spawn(move || loop {
-                let i = cursor.fetch_add(1, Ordering::Relaxed);
-                if i >= n {
-                    break;
-                }
-                let r = f(i);
-                if tx.send((i, r)).is_err() {
-                    break;
+            scope.spawn(move || {
+                if let Some(label) = label {
+                    let worker = obs::span_args("pool.worker", || {
+                        (format!("{label}.worker"), Vec::new())
+                    });
+                    let mut hist = obs::Hist::default();
+                    let mut items = 0u64;
+                    loop {
+                        let i = cursor.fetch_add(1, Ordering::Relaxed);
+                        if i >= n {
+                            break;
+                        }
+                        let t = Instant::now();
+                        let r = f(i);
+                        hist.record(t.elapsed().as_nanos() as u64);
+                        items += 1;
+                        if tx.send((i, r)).is_err() {
+                            break;
+                        }
+                    }
+                    obs::counter(&format!("{label}.items"), items);
+                    obs::merge_hist(&format!("{label}.item_ns"), hist);
+                    drop(worker);
+                } else {
+                    loop {
+                        let i = cursor.fetch_add(1, Ordering::Relaxed);
+                        if i >= n {
+                            break;
+                        }
+                        let r = f(i);
+                        if tx.send((i, r)).is_err() {
+                            break;
+                        }
+                    }
                 }
             });
         }

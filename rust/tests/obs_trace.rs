@@ -1,0 +1,163 @@
+//! Integration tests for the observability recorder against the real
+//! layer/channel scheduler:
+//!
+//! 1. spans nest across worker threads (≥ 2 distinct tids, each layer
+//!    span time-contained in a worker span on its own thread),
+//! 2. the disabled path records nothing at all,
+//! 3. the emitted Chrome trace JSON round-trips through the repo's own
+//!    `util::json` parser,
+//! 4. quantization outputs are bit-identical with tracing on vs off at
+//!    `threads ∈ {1, 4}` — recording never perturbs the numerics.
+//!
+//! The recorder is process-global, so every test takes `lock()` and
+//! resets state on entry.
+
+use std::sync::{Mutex, OnceLock};
+
+use beacon_ptq::config::QuantConfig;
+use beacon_ptq::data::rng::SplitMix64;
+use beacon_ptq::linalg::Matrix;
+use beacon_ptq::obs;
+use beacon_ptq::quant::engine::{self, LayerCtx, LayerQuant, Quantizer as _};
+use beacon_ptq::util::json::Value;
+use beacon_ptq::util::prop::Gen;
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+    LOCK.get_or_init(|| Mutex::new(()))
+        .lock()
+        .unwrap_or_else(|e| e.into_inner())
+}
+
+fn case(seed: u64, m: usize, n: usize, np: usize) -> (Matrix, Matrix) {
+    let mut g = Gen { rng: SplitMix64::new(seed) };
+    let x = Matrix::from_vec(m, n, g.vec_normal(m * n, 1.0));
+    let w = Matrix::from_vec(n, np, g.vec_normal(n * np, 0.3));
+    (x, w)
+}
+
+/// Quantize synthetic layers through the engine scheduler, exactly as
+/// the pipeline fans them.
+fn run_engine(layers: &[(Matrix, Matrix)], threads: usize) -> Vec<LayerQuant> {
+    let c = QuantConfig { bits: 2.0, loops: 2, ..QuantConfig::default() };
+    let q = c.method.quantizer(c.bit_width().unwrap(), &c);
+    let sched = engine::plan(threads, layers.len(), q.parallel_safe());
+    engine::run_layers(sched, layers.len(), |li| {
+        let (x, w) = &layers[li];
+        q.quantize_layer(&LayerCtx::plain(x, w, sched.channel_threads))
+    })
+    .unwrap()
+}
+
+#[test]
+fn spans_nest_across_scheduler_threads() {
+    let _g = lock();
+    obs::enable();
+    obs::reset();
+    let layers: Vec<_> = (0..6).map(|i| case(20 + i, 48, 8, 6)).collect();
+    let out = run_engine(&layers, 4);
+    let snap = obs::snapshot();
+    obs::disable();
+    assert_eq!(out.len(), layers.len());
+
+    // the fan span sits on the calling thread
+    assert!(snap.events.iter().any(|e| e.cat == "pool" && e.name == "engine.layers"));
+
+    // plan(4, 6, true) is a 4×1 split, so ≥ 2 worker threads recorded
+    let mut worker_tids: Vec<u64> = snap
+        .events
+        .iter()
+        .filter(|e| e.cat == "pool.worker")
+        .map(|e| e.tid)
+        .collect();
+    worker_tids.sort_unstable();
+    worker_tids.dedup();
+    assert!(worker_tids.len() >= 2, "want ≥ 2 workers, got {worker_tids:?}");
+
+    // one span per layer, each nested (depth + time) inside the worker
+    // span on its own thread
+    let layer_spans: Vec<_> = snap.events.iter().filter(|e| e.cat == "engine").collect();
+    assert_eq!(layer_spans.len(), layers.len());
+    for l in &layer_spans {
+        assert!(l.depth >= 1, "{} should nest under its worker", l.name);
+        let contained = snap.events.iter().any(|w| {
+            w.cat == "pool.worker"
+                && w.tid == l.tid
+                && w.start_ns <= l.start_ns
+                && l.start_ns + l.dur_ns <= w.start_ns + w.dur_ns
+        });
+        assert!(contained, "{} not inside a worker span", l.name);
+    }
+}
+
+#[test]
+fn disabled_path_records_nothing() {
+    let _g = lock();
+    obs::disable();
+    obs::reset();
+    let before = obs::events_recorded();
+    let layers: Vec<_> = (0..4).map(|i| case(40 + i, 48, 8, 4)).collect();
+    let _ = run_engine(&layers, 4);
+    assert_eq!(obs::events_recorded(), before, "disabled run recorded");
+    let snap = obs::snapshot();
+    assert!(snap.events.is_empty());
+    assert!(snap.counters.is_empty());
+    assert!(snap.hists.is_empty());
+}
+
+#[test]
+fn chrome_trace_round_trips_through_util_json() {
+    let _g = lock();
+    obs::enable();
+    obs::reset();
+    {
+        let _outer = obs::span("phase", "phase.quantize");
+        let _inner = obs::span("engine", "layer[0]");
+    }
+    obs::counter("planner.probes", 3);
+    let dir = std::env::temp_dir().join("beacon_ptq_obs_trace_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("trace.json");
+    obs::write_chrome_trace(&path).unwrap();
+    obs::disable();
+
+    let text = std::fs::read_to_string(&path).unwrap();
+    let v = Value::parse(&text).expect("trace must be valid JSON");
+    assert_eq!(v.get("displayTimeUnit").and_then(|d| d.as_str()), Some("ms"));
+    let events = v.get("traceEvents").and_then(|e| e.as_arr()).unwrap();
+    // process_name metadata + the two spans
+    assert!(events.len() >= 3, "{} trace events", events.len());
+    for name in ["phase.quantize", "layer[0]"] {
+        assert!(
+            events.iter().any(|e| e.get("name").and_then(|n| n.as_str()) == Some(name)),
+            "missing span {name}"
+        );
+    }
+    let counters = v.get("beaconCounters").and_then(|c| c.as_obj()).unwrap();
+    assert_eq!(counters.get("planner.probes").and_then(|c| c.as_f64()), Some(3.0));
+}
+
+#[test]
+fn traced_runs_are_bit_identical_to_untraced() {
+    let _g = lock();
+    let layers: Vec<_> = (0..5).map(|i| case(30 + i, 48, 8, 5)).collect();
+    for threads in [1usize, 4] {
+        obs::disable();
+        obs::reset();
+        let plain = run_engine(&layers, threads);
+        obs::enable();
+        obs::reset();
+        let traced = run_engine(&layers, threads);
+        obs::disable();
+        assert_eq!(plain.len(), traced.len());
+        for (li, (a, b)) in plain.iter().zip(&traced).enumerate() {
+            let what = format!("t={threads} layer {li}");
+            assert_eq!(a.codes, b.codes, "{what}: codes");
+            assert_eq!(a.scales, b.scales, "{what}: scales");
+            assert_eq!(a.offsets, b.offsets, "{what}: offsets");
+            let pb: Vec<u64> = a.dequant.data.iter().map(|v| v.to_bits()).collect();
+            let tb: Vec<u64> = b.dequant.data.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(pb, tb, "{what}: dequant bits");
+        }
+    }
+}
