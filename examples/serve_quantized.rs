@@ -3,8 +3,16 @@
 //! classification requests through the PJRT executable, reporting
 //! latency/throughput — the deployment half of the story.
 //!
+//! The server runs with the tracking allocator installed and the obs
+//! recorder on when `BEACON_TRACE=FILE` is set: each request is a
+//! `serve.request` span (so the trace shows the request stream next to
+//! the heap counter track), request latencies merge into a
+//! `serve.request_ns` histogram, and the run ends with a heap
+//! scoreboard.
+//!
 //! ```bash
 //! cargo run --release --example serve_quantized [-- <num_requests>]
+//! BEACON_TRACE=serve_trace.json cargo run --release --example serve_quantized
 //! ```
 
 use std::path::Path;
@@ -13,13 +21,21 @@ use std::time::Instant;
 use beacon_ptq::config::QuantConfig;
 use beacon_ptq::coordinator::Pipeline;
 use beacon_ptq::model::WeightStore;
+use beacon_ptq::obs::{self, Hist, TrackingAlloc};
 use beacon_ptq::runtime::client::{literal_f32, literal_to_f32};
+
+#[global_allocator]
+static ALLOC: TrackingAlloc = TrackingAlloc;
 
 fn main() -> anyhow::Result<()> {
     let requests: usize = std::env::args()
         .nth(1)
         .and_then(|v| v.parse().ok())
         .unwrap_or(32);
+    let trace = obs::trace_env();
+    if trace.is_some() {
+        obs::enable();
+    }
 
     let mut pipe = Pipeline::from_artifacts("artifacts", "tiny-sim")?;
     let m = pipe.artifacts.manifest.clone();
@@ -35,6 +51,7 @@ fn main() -> anyhow::Result<()> {
         store.save(ckpt)?;
         store
     };
+    obs::memory::set_resident("serve.weight_store", store.resident_bytes());
 
     // weight literals stay resident; each request only uploads images
     let mut weight_inputs = Vec::new();
@@ -51,10 +68,14 @@ fn main() -> anyhow::Result<()> {
     );
 
     let mut latencies = Vec::with_capacity(requests);
+    let mut request_ns = Hist::default();
     let mut correct = 0usize;
     let mut total = 0usize;
     let t_all = Instant::now();
     for r in 0..requests {
+        let span = obs::span_args("serve", || {
+            (format!("serve.request[{r}]"), vec![("batch", b.to_string())])
+        });
         // rotate through the eval split as the request stream
         let lo = (r * b) % (pipe.eval.count - b + 1);
         let hi = lo + b;
@@ -66,6 +87,8 @@ fn main() -> anyhow::Result<()> {
         let t = Instant::now();
         let out = pipe.runtime.exec(&m.vit_logits, &inputs)?;
         let logits = literal_to_f32(&out[0])?;
+        let secs = span.finish();
+        request_ns.record((secs * 1e9) as u64);
         latencies.push(t.elapsed().as_secs_f64() * 1e3);
         for (bi, item) in (lo..hi).enumerate() {
             let row = &logits[bi * k..(bi + 1) * k];
@@ -82,6 +105,7 @@ fn main() -> anyhow::Result<()> {
         }
     }
     let wall = t_all.elapsed().as_secs_f64();
+    obs::merge_hist("serve.request_ns", request_ns);
     latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
     let p50 = latencies[latencies.len() / 2];
     let p95 = latencies[(latencies.len() * 95 / 100).min(latencies.len() - 1)];
@@ -93,5 +117,20 @@ fn main() -> anyhow::Result<()> {
         total,
         wall
     );
+    if obs::memory::tracking() {
+        let s = obs::memory::stats();
+        println!(
+            "heap            : peak {:.1} MiB, live {:.1} MiB \
+             ({} allocs / {} frees)",
+            s.peak_bytes as f64 / (1 << 20) as f64,
+            s.live_bytes as f64 / (1 << 20) as f64,
+            s.allocs,
+            s.deallocs
+        );
+    }
+    if let Some(path) = trace {
+        obs::write_chrome_trace(Path::new(&path))?;
+        println!("trace written to {path} (open in ui.perfetto.dev)");
+    }
     Ok(())
 }

@@ -8,12 +8,19 @@
 //! ns/channel` record — so the perf trajectory is tracked across PRs.
 //! The beacon rows time the *prefactored* layer sweep (QR hoisted out),
 //! i.e. exactly the channel fan-out the engine scheduler parallelizes.
+//!
+//! The bench also runs with the tracking allocator installed and writes
+//! `BENCH_memory.json` (`method × bits → peak heap bytes` per layer
+//! quantize) for the perf gate's memory section. The allocator costs a
+//! few relaxed atomic ops per allocation; the kernels are
+//! allocation-light in the hot loop, so the latency rows stay
+//! comparable with earlier records.
 
 use beacon_ptq::config::{PlanBuilder, QuantConfig, SearchSpace};
 use beacon_ptq::coordinator::planner::{search_plan, LayerProbe};
 use beacon_ptq::data::rng::SplitMix64;
 use beacon_ptq::linalg::{qr_factor, Matrix};
-use beacon_ptq::obs::{self, HistSummary};
+use beacon_ptq::obs::{self, memory, HistSummary, TrackingAlloc};
 use beacon_ptq::quant::alphabet::{alphabet, BitWidth};
 use beacon_ptq::quant::beacon::{
     beacon_channel, beacon_layer, beacon_layer_prefactored, BeaconOpts,
@@ -24,6 +31,9 @@ use beacon_ptq::quant::{
 };
 use beacon_ptq::util::bench::{bench, black_box};
 use beacon_ptq::util::prop::Gen;
+
+#[global_allocator]
+static ALLOC: TrackingAlloc = TrackingAlloc;
 
 fn case(seed: u64, m: usize, n: usize, np: usize) -> (Matrix, Matrix) {
     let mut g = Gen { rng: SplitMix64::new(seed) };
@@ -267,6 +277,45 @@ fn main() {
         });
     }
 
+    // --- peak-heap rows: BENCH_memory.json --------------------------------
+    // One layer quantize per (method, bits) with the high-water mark
+    // re-armed at the section's live level, so each row reports the
+    // *transient* peak the kernel adds on top of its inputs.
+    println!("\n== peak heap per layer quantize (method × bits, t=1) ==");
+    struct MemRec {
+        method: &'static str,
+        bits: String,
+        peak_bytes: u64,
+    }
+    let mut mem_recs: Vec<MemRec> = Vec::new();
+    {
+        let mut mem_row =
+            |method: &'static str, bits: BitWidth, run: &mut dyn FnMut()| {
+                let live0 = memory::live_bytes();
+                memory::reset_peak();
+                run();
+                let peak = memory::peak_bytes().saturating_sub(live0);
+                println!("  {method} {}: peak {} bytes", bits.label(), peak);
+                mem_recs.push(MemRec { method, bits: bits.label(), peak_bytes: peak });
+            };
+        for &bits in &[BitWidth::B2, BitWidth::B4] {
+            let a = alphabet(bits);
+            let opts = BeaconOpts { loops: 4, centering: false, threads: 1 };
+            mem_row("beacon", bits, &mut || {
+                black_box(beacon_layer_prefactored(&f.l, &f.r, &x, &x, &w, &a, &opts));
+            });
+        }
+        mem_row("rtn", BitWidth::B2, &mut || {
+            black_box(rtn_layer(&w, BitWidth::B2));
+        });
+        mem_row("comq", BitWidth::B2, &mut || {
+            black_box(comq_layer(&x, &w, BitWidth::B2, 4));
+        });
+        mem_row("gptq", BitWidth::B2, &mut || {
+            black_box(gptq_layer(&x, &w, BitWidth::B2, 0.01));
+        });
+    }
+
     let host = std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1);
     let mut s = String::new();
     s.push_str("{\n  \"bench\": \"quant_kernels\",\n");
@@ -296,5 +345,27 @@ fn main() {
     println!(
         "\nwrote BENCH_quant.json ({} records, host_threads={host})",
         recs.len()
+    );
+
+    let mut s = String::new();
+    s.push_str("{\n  \"bench\": \"quant_memory\",\n");
+    s.push_str(&format!(
+        "  \"layer\": {{\"rows\": {m}, \"n\": {nn}, \"channels\": {np}}},\n"
+    ));
+    s.push_str(&format!("  \"host_threads\": {host},\n"));
+    s.push_str("  \"results\": [\n");
+    for (i, r) in mem_recs.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"method\": \"{}\", \"bits\": \"{}\", \"threads\": 1, \
+             \"peak_bytes\": {}",
+            r.method, r.bits, r.peak_bytes,
+        ));
+        s.push_str(if i + 1 == mem_recs.len() { "}\n" } else { "},\n" });
+    }
+    s.push_str("  ]\n}\n");
+    std::fs::write("BENCH_memory.json", &s).expect("write BENCH_memory.json");
+    println!(
+        "wrote BENCH_memory.json ({} records, host_threads={host})",
+        mem_recs.len()
     );
 }

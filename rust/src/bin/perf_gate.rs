@@ -1,18 +1,22 @@
 //! `perf_gate` — the CI perf-regression gate over the machine-readable
-//! kernel perf record.
+//! kernel perf records.
 //!
 //! `cargo bench --bench quant_kernels` writes `BENCH_quant.json`
-//! (`method × bits × threads → ns/channel`); this binary diffs it
-//! against the committed `BENCH_baseline.json` and **fails (exit 1) when
-//! any matching row regresses by more than the tolerance** (default 25%,
-//! `--tolerance-pct` / `PERF_GATE_TOLERANCE`), printing a one-table
-//! summary either way.
+//! (`method × bits × threads → ns/channel`) and `BENCH_memory.json`
+//! (same grid → peak heap bytes per layer quantize, via the tracking
+//! allocator); this binary diffs each against its committed baseline
+//! (`BENCH_baseline.json` / `BENCH_memory_baseline.json`) and **fails
+//! (exit 1) when any matching row regresses by more than the tolerance**
+//! (default 25%, `--tolerance-pct` / `PERF_GATE_TOLERANCE`), printing a
+//! one-table summary per section either way. The memory section is
+//! skipped (with a note) when `BENCH_memory.json` is absent.
 //!
-//! Baseline rows with `ns_per_channel <= 0` are *uncalibrated*
-//! placeholders: they pin the expected row set without enforcing a
-//! number (CI hardware differs from dev machines, so a baseline must be
-//! recorded on the machine that checks it). To (re)calibrate on the
-//! reference machine:
+//! Baseline rows with a value `<= 0` are *uncalibrated* placeholders:
+//! they pin the expected row set without enforcing a number (CI hardware
+//! differs from dev machines, so a baseline must be recorded on the
+//! machine that checks it). The run prints the total uncalibrated count;
+//! `--require-calibrated` turns any uncalibrated row into a failure. To
+//! (re)calibrate on the reference machine:
 //!
 //! ```bash
 //! cargo bench --bench quant_kernels
@@ -22,11 +26,10 @@
 //! The gate also pins the *grid*: a current row absent from the baseline
 //! (`new`) or a baseline row absent from the current record (`missing`)
 //! fails the gate — silent grid drift would otherwise let rows drop out
-//! of enforcement unnoticed. When the bench grid legitimately changes,
-//! rebaseline in the same PR (`--write-baseline` refreshes
-//! `host_threads` to the recording machine's core count too). A
-//! calibration summary (enforced vs uncalibrated placeholder rows)
-//! prints with every run.
+//! of enforcement unnoticed. When a bench grid legitimately changes,
+//! rebaseline in the same PR (`--write-baseline` refreshes both
+//! baselines and stamps `host_threads` with the recording machine's
+//! core count).
 
 use std::process::ExitCode;
 
@@ -41,7 +44,8 @@ struct PerfRow {
     method: String,
     bits: String,
     threads: usize,
-    ns_per_channel: f64,
+    /// the gated measurement: ns/channel or peak bytes, per section
+    value: f64,
 }
 
 impl PerfRow {
@@ -76,7 +80,7 @@ impl Verdict {
 #[derive(Debug)]
 struct Comparison {
     current: PerfRow,
-    baseline_ns: Option<f64>,
+    baseline: Option<f64>,
     delta_pct: Option<f64>,
     verdict: Verdict,
 }
@@ -95,19 +99,18 @@ fn compare(
         let cmp = match base {
             None => Comparison {
                 current: cur.clone(),
-                baseline_ns: None,
+                baseline: None,
                 delta_pct: None,
                 verdict: Verdict::New,
             },
-            Some(b) if b.ns_per_channel <= 0.0 => Comparison {
+            Some(b) if b.value <= 0.0 => Comparison {
                 current: cur.clone(),
-                baseline_ns: Some(b.ns_per_channel),
+                baseline: Some(b.value),
                 delta_pct: None,
                 verdict: Verdict::Uncalibrated,
             },
             Some(b) => {
-                let delta =
-                    100.0 * (cur.ns_per_channel - b.ns_per_channel) / b.ns_per_channel;
+                let delta = 100.0 * (cur.value - b.value) / b.value;
                 let verdict = if delta > tolerance_pct {
                     Verdict::Regression
                 } else if delta < -tolerance_pct {
@@ -117,7 +120,7 @@ fn compare(
                 };
                 Comparison {
                     current: cur.clone(),
-                    baseline_ns: Some(b.ns_per_channel),
+                    baseline: Some(b.value),
                     delta_pct: Some(delta),
                     verdict,
                 }
@@ -133,13 +136,13 @@ fn compare(
     (out, missing)
 }
 
-fn load_rows(path: &str) -> Result<Vec<PerfRow>> {
+fn load_rows(path: &str, value_key: &str) -> Result<Vec<PerfRow>> {
     let text = std::fs::read_to_string(path)
         .map_err(|e| anyhow!("read {path}: {e}"))?;
-    parse_rows(&text).map_err(|e| anyhow!("{path}: {e:#}"))
+    parse_rows(&text, value_key).map_err(|e| anyhow!("{path}: {e:#}"))
 }
 
-fn parse_rows(text: &str) -> Result<Vec<PerfRow>> {
+fn parse_rows(text: &str, value_key: &str) -> Result<Vec<PerfRow>> {
     let v = Value::parse(text).map_err(|e| anyhow!("{e}"))?;
     let results = v
         .get("results")
@@ -162,65 +165,65 @@ fn parse_rows(text: &str) -> Result<Vec<PerfRow>> {
             threads: field("threads")?
                 .as_usize()
                 .ok_or_else(|| anyhow!("results[{i}].threads not a number"))?,
-            ns_per_channel: field("ns_per_channel")?
+            value: field(value_key)?
                 .as_f64()
-                .ok_or_else(|| anyhow!("results[{i}].ns_per_channel not a number"))?,
+                .ok_or_else(|| anyhow!("results[{i}].{value_key} not a number"))?,
         });
     }
     Ok(rows)
 }
 
-fn fmt_ns(v: Option<f64>) -> String {
+fn fmt_value(v: Option<f64>, bytes: bool) -> String {
     match v {
-        Some(ns) if ns > 0.0 => format!("{ns:.1}"),
-        Some(_) => "—".to_string(),
-        None => "—".to_string(),
+        Some(x) if x > 0.0 => {
+            if bytes {
+                format!("{x:.0}")
+            } else {
+                format!("{x:.1}")
+            }
+        }
+        _ => "—".to_string(),
     }
 }
 
-fn run() -> Result<bool> {
-    let args = Args::from_env();
-    let baseline_path = args.str("baseline", "BENCH_baseline.json");
-    let current_path = args.str("current", "BENCH_quant.json");
-    if args.switch("write-baseline") {
-        let text = std::fs::read_to_string(&current_path)
-            .map_err(|e| anyhow!("read {current_path}: {e}"))?;
-        let mut v = Value::parse(&text).map_err(|e| anyhow!("{current_path}: {e}"))?;
-        if let Value::Obj(m) = &mut v {
-            // the bench writes host_threads as a placeholder; stamp the
-            // recording machine's core count so the baseline says where
-            // its numbers came from
-            let host = std::thread::available_parallelism()
-                .map(|n| n.get())
-                .unwrap_or(1);
-            m.insert("host_threads".to_string(), Value::Num(host as f64));
-        }
-        std::fs::write(&baseline_path, v.to_json())
-            .map_err(|e| anyhow!("write {baseline_path}: {e}"))?;
-        println!("rebaselined {baseline_path} from {current_path} (host_threads stamped)");
-        return Ok(true);
-    }
-    let env_tol = std::env::var("PERF_GATE_TOLERANCE")
-        .ok()
-        .and_then(|v| v.parse().ok())
-        .unwrap_or(25.0);
-    let tolerance = args.f64("tolerance-pct", env_tol);
+/// What one gated section concluded: whether it passed and how many of
+/// its baseline rows are uncalibrated placeholders.
+#[derive(Debug, Clone, Copy)]
+struct SectionOutcome {
+    pass: bool,
+    uncalibrated: usize,
+}
 
-    let baseline = load_rows(&baseline_path)?;
-    let current = load_rows(&current_path)?;
+/// Run one gate section (latency or memory): load both records, diff,
+/// print the table and any FAIL lines, and return the outcome.
+fn gate_section(
+    label: &str,
+    value_key: &str,
+    baseline_path: &str,
+    current_path: &str,
+    tolerance: f64,
+    bytes: bool,
+) -> Result<SectionOutcome> {
+    let baseline = load_rows(baseline_path, value_key)?;
+    let current = load_rows(current_path, value_key)?;
     let (cmps, missing) = compare(&baseline, &current, tolerance);
 
+    let unit = if bytes { "bytes" } else { "ns/ch" };
+    let bh = format!("baseline {unit}");
+    let ch = format!("current {unit}");
     let mut t = Table::new(
-        &format!("perf gate — {current_path} vs {baseline_path} (tolerance {tolerance}%)"),
-        &["method", "bits", "threads", "baseline ns/ch", "current ns/ch", "Δ%", "verdict"],
+        &format!(
+            "{label} gate — {current_path} vs {baseline_path} (tolerance {tolerance}%)"
+        ),
+        &["method", "bits", "threads", bh.as_str(), ch.as_str(), "Δ%", "verdict"],
     );
     for c in &cmps {
         t.row(vec![
             c.current.method.clone(),
             c.current.bits.clone(),
             c.current.threads.to_string(),
-            fmt_ns(c.baseline_ns),
-            fmt_ns(Some(c.current.ns_per_channel)),
+            fmt_value(c.baseline, bytes),
+            fmt_value(Some(c.current.value), bytes),
             c.delta_pct.map(|d| format!("{d:+.1}")).unwrap_or_else(|| "—".to_string()),
             c.verdict.label().to_string(),
         ]);
@@ -239,37 +242,125 @@ fn run() -> Result<bool> {
     let uncalibrated = count(Verdict::Uncalibrated);
     let enforced = cmps.len() - new_rows - uncalibrated;
     println!(
-        "calibration: {enforced} enforced row(s), {uncalibrated} uncalibrated \
-         placeholder(s) (ns_per_channel <= 0)"
+        "{label} calibration: {enforced} enforced row(s), {uncalibrated} \
+         uncalibrated placeholder(s) ({value_key} <= 0)"
     );
-    if uncalibrated > 0 {
-        println!(
-            "{uncalibrated} row(s) uncalibrated — record a baseline on the CI class \
-             of machine with: cargo run --bin perf_gate -- --write-baseline"
-        );
-    }
     if regressions > 0 {
-        println!("FAIL: {regressions} row(s) regressed more than {tolerance}%");
+        println!("FAIL: {regressions} {label} row(s) regressed more than {tolerance}%");
     }
     if new_rows > 0 {
         println!(
-            "FAIL: {new_rows} bench row(s) missing from the baseline grid — \
+            "FAIL: {new_rows} {label} bench row(s) missing from the baseline grid — \
              rebaseline with: cargo run --bin perf_gate -- --write-baseline"
         );
     }
     if !missing.is_empty() {
         println!(
-            "FAIL: {} baseline row(s) missing from {current_path} — the bench \
-             grid drifted; rebaseline if intentional",
+            "FAIL: {} {label} baseline row(s) missing from {current_path} — the \
+             bench grid drifted; rebaseline if intentional",
             missing.len()
         );
     }
-    if gate_passes(&cmps, &missing) {
-        println!("perf gate passed ({} rows compared)", cmps.len());
-        Ok(true)
-    } else {
-        Ok(false)
+    let pass = gate_passes(&cmps, &missing);
+    if pass {
+        println!("{label} gate passed ({} rows compared)", cmps.len());
     }
+    Ok(SectionOutcome { pass, uncalibrated })
+}
+
+/// Copy `current_path` over `baseline_path`, stamping `host_threads`
+/// with the recording machine's core count so the baseline says where
+/// its numbers came from.
+fn write_baseline(current_path: &str, baseline_path: &str) -> Result<()> {
+    let text = std::fs::read_to_string(current_path)
+        .map_err(|e| anyhow!("read {current_path}: {e}"))?;
+    let mut v = Value::parse(&text).map_err(|e| anyhow!("{current_path}: {e}"))?;
+    if let Value::Obj(m) = &mut v {
+        let host = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1);
+        m.insert("host_threads".to_string(), Value::Num(host as f64));
+    }
+    std::fs::write(baseline_path, v.to_json())
+        .map_err(|e| anyhow!("write {baseline_path}: {e}"))?;
+    println!("rebaselined {baseline_path} from {current_path} (host_threads stamped)");
+    Ok(())
+}
+
+fn run() -> Result<bool> {
+    let args = Args::from_env();
+    let baseline_path = args.str("baseline", "BENCH_baseline.json");
+    let current_path = args.str("current", "BENCH_quant.json");
+    let mem_baseline_path =
+        args.str("memory-baseline", "BENCH_memory_baseline.json");
+    let mem_current_path = args.str("memory-current", "BENCH_memory.json");
+    if args.switch("write-baseline") {
+        write_baseline(&current_path, &baseline_path)?;
+        if std::path::Path::new(&mem_current_path).exists() {
+            write_baseline(&mem_current_path, &mem_baseline_path)?;
+        } else {
+            println!(
+                "memory baseline not written: {mem_current_path} not found \
+                 (run cargo bench --bench quant_kernels first)"
+            );
+        }
+        return Ok(true);
+    }
+    let env_tol = std::env::var("PERF_GATE_TOLERANCE")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(25.0);
+    let tolerance = args.f64("tolerance-pct", env_tol);
+
+    let latency = gate_section(
+        "perf",
+        "ns_per_channel",
+        &baseline_path,
+        &current_path,
+        tolerance,
+        false,
+    )?;
+    let memory = if std::path::Path::new(&mem_current_path).exists() {
+        Some(gate_section(
+            "memory",
+            "peak_bytes",
+            &mem_baseline_path,
+            &mem_current_path,
+            tolerance,
+            true,
+        )?)
+    } else {
+        println!(
+            "memory gate skipped: {mem_current_path} not found \
+             (cargo bench --bench quant_kernels writes it)"
+        );
+        None
+    };
+
+    let mem_uncal = match &memory {
+        Some(m) => m.uncalibrated,
+        None => 0,
+    };
+    let uncalibrated = latency.uncalibrated + mem_uncal;
+    println!("total uncalibrated placeholder row(s): {uncalibrated}");
+    if uncalibrated > 0 {
+        println!(
+            "record baselines on the CI class of machine with: \
+             cargo run --bin perf_gate -- --write-baseline"
+        );
+    }
+    if args.switch("require-calibrated") && uncalibrated > 0 {
+        println!(
+            "FAIL: --require-calibrated set but {uncalibrated} baseline row(s) \
+             are uncalibrated placeholders"
+        );
+        return Ok(false);
+    }
+    let mem_pass = match &memory {
+        Some(m) => m.pass,
+        None => true,
+    };
+    Ok(latency.pass && mem_pass)
 }
 
 /// The gate decision: no regressions and no grid drift in either
@@ -297,12 +388,12 @@ fn main() -> ExitCode {
 mod tests {
     use super::*;
 
-    fn row(method: &str, bits: &str, threads: usize, ns: f64) -> PerfRow {
+    fn row(method: &str, bits: &str, threads: usize, value: f64) -> PerfRow {
         PerfRow {
             method: method.to_string(),
             bits: bits.to_string(),
             threads,
-            ns_per_channel: ns,
+            value,
         }
     }
 
@@ -381,12 +472,40 @@ mod tests {
     {"method": "mixed-plan", "bits": "2+4", "threads": 4, "median_ns": 9999, "ns_per_channel": 20.8}
   ]
 }"#;
-        let rows = parse_rows(text).unwrap();
+        let rows = parse_rows(text, "ns_per_channel").unwrap();
         assert_eq!(rows.len(), 2);
         assert_eq!(rows[0].method, "beacon");
         assert_eq!(rows[1].threads, 4);
-        assert!((rows[1].ns_per_channel - 20.8).abs() < 1e-9);
-        assert!(parse_rows("{}").is_err());
-        assert!(parse_rows("{\"results\": [{\"method\": \"x\"}]}").is_err());
+        assert!((rows[1].value - 20.8).abs() < 1e-9);
+        assert!(parse_rows("{}", "ns_per_channel").is_err());
+        assert!(parse_rows("{\"results\": [{\"method\": \"x\"}]}", "ns_per_channel")
+            .is_err());
+    }
+
+    #[test]
+    fn parses_memory_record_shape() {
+        let text = r#"{
+  "bench": "quant_memory",
+  "layer": {"rows": 512, "n": 64, "channels": 128},
+  "host_threads": 8,
+  "results": [
+    {"method": "beacon", "bits": "2-bit", "threads": 1, "peak_bytes": 1048576.0},
+    {"method": "rtn", "bits": "2-bit", "threads": 1, "peak_bytes": 262144.0}
+  ]
+}"#;
+        let rows = parse_rows(text, "peak_bytes").unwrap();
+        assert_eq!(rows.len(), 2);
+        assert!((rows[0].value - 1_048_576.0).abs() < 1e-9);
+        // the latency key is absent from memory records
+        assert!(parse_rows(text, "ns_per_channel").is_err());
+    }
+
+    #[test]
+    fn value_formatting_per_section() {
+        assert_eq!(fmt_value(Some(964.53), false), "964.5");
+        assert_eq!(fmt_value(Some(1048576.0), true), "1048576");
+        // placeholders and absent baselines render as em dash
+        assert_eq!(fmt_value(Some(0.0), true), "—");
+        assert_eq!(fmt_value(None, false), "—");
     }
 }

@@ -78,6 +78,9 @@ pub struct QuantReport {
     /// recorder-derived run metrics (worker utilization, cache hit
     /// rate, per-channel latency); `None` unless tracing was enabled
     pub metrics: Option<crate::obs::MetricsReport>,
+    /// heap accounting (per-phase deltas, resident footprints, packed
+    /// ratio); `None` unless tracing was enabled
+    pub memory: Option<crate::obs::MemoryReport>,
 }
 
 impl QuantReport {
@@ -88,6 +91,50 @@ impl QuantReport {
     /// The legacy `(layer name, error)` view of the per-layer rows.
     pub fn layer_errors(&self) -> impl Iterator<Item = (&str, f64)> + '_ {
         self.layers.iter().map(|r| (r.layer.as_str(), r.error))
+    }
+}
+
+/// Accumulates the packed-weights footprint across layers for the
+/// [`MemoryReport`](crate::obs::MemoryReport) packed-vs-f32 ratio —
+/// the paper's storage-model claim, checked on the actual codes. Any
+/// off-grid channel (e.g. an experimental method emitting raw values)
+/// voids the whole measurement rather than reporting a partial ratio.
+#[derive(Default)]
+struct PackedAccum {
+    payload: u64,
+    meta: u64,
+    fp: u64,
+    weighted_bits: u64,
+    failed: bool,
+}
+
+impl PackedAccum {
+    fn add_layer(&mut self, lq: &LayerQuant, bits: BitWidth) {
+        if self.failed {
+            return;
+        }
+        match crate::quant::packing::layer_packed_bytes(&lq.codes, bits) {
+            Some((payload, meta)) => {
+                let numel: u64 = lq.codes.iter().map(|c| c.len() as u64).sum();
+                self.payload += payload;
+                self.meta += meta;
+                self.fp += numel * 4;
+                self.weighted_bits += numel * u64::from(bits.storage_bits());
+            }
+            None => self.failed = true,
+        }
+    }
+
+    fn finish(self) -> Option<crate::obs::memory::PackedFootprint> {
+        if self.failed || self.fp == 0 {
+            return None;
+        }
+        Some(crate::obs::memory::PackedFootprint {
+            payload_bytes: self.payload,
+            meta_bytes: self.meta,
+            fp_bytes: self.fp,
+            theoretical_ratio: self.weighted_bits as f64 / (self.fp as f64 * 8.0),
+        })
     }
 }
 
@@ -114,6 +161,12 @@ impl Pipeline {
         let weights_fp = WeightStore::load(&artifacts.manifest.weights, &cfg)?;
         let calib = Dataset::load(&artifacts.manifest.calib)?;
         let eval = Dataset::load(&artifacts.manifest.eval)?;
+        crate::obs::memory::set_resident(
+            "model.weights_fp",
+            weights_fp.resident_bytes(),
+        );
+        crate::obs::memory::set_resident("data.calib", calib.resident_bytes());
+        crate::obs::memory::set_resident("data.eval", eval.resident_bytes());
         let runtime = Runtime::cpu()?;
         Ok(Pipeline {
             runtime,
@@ -215,6 +268,9 @@ impl Pipeline {
                 threads,
                 |i| acts[i].gram(),
             );
+            let bytes: u64 =
+                grams.iter().map(|g| (g.data.len() * 8) as u64).sum();
+            crate::obs::memory::set_resident("pipeline.gram_cache", bytes);
             self.grams_fp = Some(grams);
         }
         Ok(())
@@ -510,6 +566,9 @@ impl Pipeline {
         let quantize_span = crate::obs::span("phase", "phase.quantize");
         let mut work = self.weights_fp.clone();
         let mut layer_errors = Vec::with_capacity(quantizable.len());
+        // packed-footprint accounting is traced-runs-only: it walks
+        // every code, so the untraced hot path skips it entirely
+        let mut packed_acc = crate::obs::enabled().then(PackedAccum::default);
 
         if sched.layer_threads > 1 {
             // independent layers: every layer quantizes the FP weights
@@ -531,11 +590,16 @@ impl Pipeline {
                     &w,
                     &lq.dequant,
                 );
-                Ok((err, lq.dequant))
+                Ok((err, lq))
             })?;
-            for (lname, (err, dequant)) in quantizable.iter().zip(results) {
+            for (li, (lname, (err, lq))) in
+                quantizable.iter().zip(results).enumerate()
+            {
                 layer_errors.push(err);
-                work.set_matrix(lname, &dequant);
+                if let Some(acc) = packed_acc.as_mut() {
+                    acc.add_layer(&lq, plan.assignments[li].bits);
+                }
+                work.set_matrix(lname, &lq.dequant);
             }
         } else {
             let mut acts_q: Option<Vec<Matrix>> = None;
@@ -570,10 +634,20 @@ impl Pipeline {
                     &w,
                     &lq.dequant,
                 ));
+                if let Some(acc) = packed_acc.as_mut() {
+                    acc.add_layer(&lq, plan.assignments[li].bits);
+                }
                 work.set_matrix(lname, &lq.dequant);
             }
         }
         drop(quantizers);
+        let packed = packed_acc.and_then(PackedAccum::finish);
+        if let Some(pf) = &packed {
+            crate::obs::memory::set_resident(
+                "quant.packed_channels",
+                pf.payload_bytes + pf.meta_bytes,
+            );
+        }
         let quantize_secs = quantize_span.finish();
 
         let layers: Vec<LayerReport> = plan
@@ -604,16 +678,24 @@ impl Pipeline {
         let top1 = crate::coordinator::eval::top1(self, &work, base.eval_count)?;
         let eval_secs = eval_span.finish();
 
-        let metrics = crate::obs::enabled().then(|| {
-            crate::obs::MetricsReport::from_snapshot(
-                &crate::obs::snapshot(),
-                vec![
-                    ("quantize".to_string(), quantize_secs),
-                    ("ln_tune".to_string(), ln_tune_secs),
-                    ("eval".to_string(), eval_secs),
-                ],
+        // one snapshot feeds both report sections (metrics + memory),
+        // so their event views can never disagree
+        let (metrics, memory) = if crate::obs::enabled() {
+            let snap = crate::obs::snapshot();
+            (
+                Some(crate::obs::MetricsReport::from_snapshot(
+                    &snap,
+                    vec![
+                        ("quantize".to_string(), quantize_secs),
+                        ("ln_tune".to_string(), ln_tune_secs),
+                        ("eval".to_string(), eval_secs),
+                    ],
+                )),
+                Some(crate::obs::MemoryReport::from_snapshot(&snap, packed)),
             )
-        });
+        } else {
+            (None, None)
+        };
 
         Ok((
             QuantReport {
@@ -628,6 +710,7 @@ impl Pipeline {
                 ln_tune_losses,
                 planner: None,
                 metrics,
+                memory,
             },
             work,
         ))

@@ -332,6 +332,11 @@ pub fn search_plan(
 ) -> Result<(QuantPlan, PlannerReport)> {
     let _phase = crate::obs::span("phase", "phase.plan_search");
     let cells = probe_errors(base, probes, space)?;
+    let grid_bytes: u64 = cells
+        .iter()
+        .map(|row| (row.len() * std::mem::size_of::<ProbeCell>()) as u64)
+        .sum();
+    crate::obs::memory::set_resident("planner.probe_grid", grid_bytes);
     let numels: Vec<usize> = probes.iter().map(|p| p.numel).collect();
     let alloc = allocate(&cells, &numels, space.budget_bits)?;
 

@@ -158,7 +158,10 @@ pub fn metrics_table(m: &crate::obs::MetricsReport) -> Table {
     if let Some(h) = &m.channel_ns {
         t.row(vec![
             format!("per-channel ns (n={})", h.count),
-            format!("p50 {} / p95 {} / p99 {}", h.p50, h.p95, h.p99),
+            format!(
+                "min {} / p50 {} / p95 {} / p99 {} / max {} / mean {}",
+                h.min, h.p50, h.p95, h.p99, h.max, h.mean
+            ),
         ]);
     }
     if m.io_read_bytes > 0 || m.io_write_bytes > 0 {
@@ -175,6 +178,66 @@ pub fn metrics_table(m: &crate::obs::MetricsReport) -> Table {
         "recorder threads seen".to_string(),
         m.threads_seen.to_string(),
     ]);
+    t
+}
+
+/// Render a [`MemoryReport`](crate::obs::MemoryReport) — the heap
+/// section of a traced run: allocator totals, per-phase deltas,
+/// registered resident footprints and the packed-vs-f32 ratio.
+pub fn memory_table(m: &crate::obs::MemoryReport) -> Table {
+    let mut t = Table::new("memory (--trace)", &["metric", "value"]);
+    if !m.tracking {
+        t.row(vec![
+            "heap tracking".to_string(),
+            "off (run a binary with TrackingAlloc installed)".to_string(),
+        ]);
+    } else {
+        t.row(vec![
+            "heap peak / live".to_string(),
+            format!(
+                "{} / {}",
+                fmt_bytes(m.stats.peak_bytes),
+                fmt_bytes(m.stats.live_bytes)
+            ),
+        ]);
+        t.row(vec![
+            "allocations".to_string(),
+            format!(
+                "{} allocs / {} frees ({} allocated)",
+                m.stats.allocs,
+                m.stats.deallocs,
+                fmt_bytes(m.stats.alloc_bytes)
+            ),
+        ]);
+        for p in &m.phases {
+            let sign = if p.net_bytes < 0 { "-" } else { "+" };
+            t.row(vec![
+                format!("{} heap", p.name),
+                format!(
+                    "net {}{} / peak {}",
+                    sign,
+                    fmt_bytes(p.net_bytes.unsigned_abs()),
+                    fmt_bytes(p.peak_bytes)
+                ),
+            ]);
+        }
+    }
+    for (name, bytes) in &m.resident {
+        t.row(vec![format!("{name} resident"), fmt_bytes(*bytes)]);
+    }
+    if let Some(pf) = &m.packed {
+        t.row(vec![
+            "packed weights vs f32".to_string(),
+            format!(
+                "{} / {} = {:.2}% (theoretical {:.2}%, +{} metadata)",
+                fmt_bytes(pf.payload_bytes),
+                fmt_bytes(pf.fp_bytes),
+                100.0 * pf.ratio(),
+                100.0 * pf.theoretical_ratio,
+                fmt_bytes(pf.meta_bytes)
+            ),
+        ]);
+    }
     t
 }
 
@@ -257,6 +320,7 @@ mod tests {
             ln_tune_losses: Vec::new(),
             planner: None,
             metrics: None,
+            memory: None,
         };
         let s = plan_table(&r).render();
         assert!(s.contains("beacon"), "{s}");
@@ -276,7 +340,15 @@ mod tests {
             gram_cache_misses: 6,
             io_read_bytes: 2048,
             io_write_bytes: 3 << 20,
-            channel_ns: Some(HistSummary { count: 100, p50: 96, p95: 192, p99: 384, mean: 120 }),
+            channel_ns: Some(HistSummary {
+                count: 100,
+                p50: 96,
+                p95: 192,
+                p99: 384,
+                mean: 120,
+                min: 64,
+                max: 512,
+            }),
             threads_seen: 5,
         };
         let s = metrics_table(&m).render();
@@ -285,9 +357,75 @@ mod tests {
         assert!(s.contains("worker utilization (4 workers)"), "{s}");
         assert!(s.contains("82%"), "{s}");
         assert!(s.contains("50% (6 hit / 6 miss)"), "{s}");
-        assert!(s.contains("p50 96 / p95 192 / p99 384"), "{s}");
+        assert!(
+            s.contains("min 64 / p50 96 / p95 192 / p99 384 / max 512 / mean 120"),
+            "{s}"
+        );
         assert!(s.contains("2.0 KiB"), "{s}");
         assert!(s.contains("3.0 MiB"), "{s}");
+    }
+
+    #[test]
+    fn memory_table_renders_tracked_run() {
+        use crate::obs::memory::{PackedFootprint, PhaseMem};
+        use crate::obs::{MemStats, MemoryReport};
+        let m = MemoryReport {
+            tracking: true,
+            stats: MemStats {
+                live_bytes: 10 << 20,
+                peak_bytes: 90 << 20,
+                allocs: 1_000,
+                deallocs: 900,
+                alloc_bytes: 200 << 20,
+                freed_bytes: 190 << 20,
+            },
+            phases: vec![
+                PhaseMem {
+                    name: "phase.quantize".to_string(),
+                    net_bytes: 5 << 20,
+                    peak_bytes: 90 << 20,
+                },
+                PhaseMem {
+                    name: "phase.eval".to_string(),
+                    net_bytes: -(2 << 20),
+                    peak_bytes: 90 << 20,
+                },
+            ],
+            resident: vec![("pipeline.gram_cache".to_string(), 38 << 20)],
+            packed: Some(PackedFootprint {
+                payload_bytes: 1 << 20,
+                meta_bytes: 2048,
+                fp_bytes: 16 << 20,
+                theoretical_ratio: 2.0 / 32.0,
+            }),
+        };
+        let s = memory_table(&m).render();
+        assert!(s.contains("90.0 MiB / 10.0 MiB"), "{s}");
+        assert!(s.contains("1000 allocs / 900 frees"), "{s}");
+        assert!(s.contains("phase.quantize heap"), "{s}");
+        assert!(s.contains("net +5.0 MiB"), "{s}");
+        assert!(s.contains("net -2.0 MiB"), "{s}");
+        assert!(s.contains("pipeline.gram_cache resident"), "{s}");
+        assert!(s.contains("38.0 MiB"), "{s}");
+        assert!(s.contains("= 6.25% (theoretical 6.25%"), "{s}");
+    }
+
+    #[test]
+    fn memory_table_untracked_says_so() {
+        use crate::obs::{MemStats, MemoryReport};
+        let m = MemoryReport {
+            tracking: false,
+            stats: MemStats::default(),
+            phases: Vec::new(),
+            resident: vec![("model.weight_store".to_string(), 4096)],
+            packed: None,
+        };
+        let s = memory_table(&m).render();
+        assert!(s.contains("heap tracking"), "{s}");
+        assert!(s.contains("off"), "{s}");
+        // resident footprints don't need the allocator
+        assert!(s.contains("model.weight_store resident"), "{s}");
+        assert!(s.contains("4.0 KiB"), "{s}");
     }
 
     #[test]

@@ -84,6 +84,12 @@ impl Dataset {
         Ok(())
     }
 
+    /// Heap footprint (f32 images + i32 labels), for the resident-bytes
+    /// registry.
+    pub fn resident_bytes(&self) -> u64 {
+        (self.images.len() * 4 + self.labels.len() * 4) as u64
+    }
+
     /// Take the first `n` samples (used for calibration-size ablations).
     pub fn take(&self, n: usize) -> Dataset {
         let n = n.min(self.count);
@@ -149,6 +155,15 @@ mod tests {
         let ds = Dataset { shape, count: 5, images, labels };
         assert_eq!(ds.batch(1, 3).len(), 2 * 4);
         assert_eq!(ds.batch(1, 3)[0], ds.image(1)[0]);
+    }
+
+    #[test]
+    fn resident_bytes_counts_payloads() {
+        let shape = ImageShape { h: 2, w: 2, c: 1 };
+        let (images, labels) = generate(shape, 10, 2, 8);
+        let ds = Dataset { shape, count: 8, images, labels };
+        // 8 images × 4 px × 4 B + 8 labels × 4 B
+        assert_eq!(ds.resident_bytes(), 8 * 4 * 4 + 8 * 4);
     }
 
     #[test]

@@ -38,10 +38,19 @@ use anyhow::{bail, Result};
 
 use beacon_ptq::config::{PlanBuilder, QuantConfig, SearchSpace};
 use beacon_ptq::coordinator::experiments;
-use beacon_ptq::coordinator::report::{metrics_table, pct, plan_table, planner_table};
+use beacon_ptq::coordinator::report::{
+    memory_table, metrics_table, pct, plan_table, planner_table,
+};
 use beacon_ptq::coordinator::{KernelBackend, Pipeline};
+use beacon_ptq::obs::TrackingAlloc;
 use beacon_ptq::quant::alphabet::BitWidth;
 use beacon_ptq::util::cli::Args;
+
+// Heap accounting for `--trace` runs: live/peak byte counters feed the
+// MemoryReport and the trace's heap counter track. A few relaxed atomic
+// ops per allocation — negligible next to the kernels.
+#[global_allocator]
+static ALLOC: TrackingAlloc = TrackingAlloc;
 
 fn main() {
     if let Err(e) = run() {
@@ -203,6 +212,9 @@ fn dispatch(args: &Args) -> Result<()> {
                 if let Some(m) = &report.metrics {
                     println!("\n{}", metrics_table(m).render());
                 }
+                if let Some(mem) = &report.memory {
+                    println!("\n{}", memory_table(mem).render());
+                }
                 if !report.ln_tune_losses.is_empty() {
                     println!("ln-tune loss: {:?}", report.ln_tune_losses);
                 }
@@ -329,7 +341,8 @@ flags: --artifacts DIR --model NAME --backend pjrt|native --config FILE
        --method beacon|gptq|rtn|comq --bits B --loops K --ec --centering
        --ln_tune --threads N --save OUT.bin --save-plan PLAN.cfg --verbose
        --trace [FILE]  write a Chrome trace (Perfetto / chrome://tracing)
-                       of the run; BEACON_TRACE=FILE does the same
+                       of the run, with a heap counter track; BEACON_TRACE=FILE
+                       does the same. --verbose adds metrics + memory tables
 plans: --override 'pattern=spec' (repeatable; ';'-separated list ok)
        spec = method[:bits][+ec|+noec|+centering|+nocentering|+loops=K|+damp=F]
        e.g. --override 'blocks.*.qkv.w=beacon:2+ec' --override 'blocks.*.fc?.w=comq:4'

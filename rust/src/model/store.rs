@@ -36,6 +36,12 @@ impl Tensor {
             data: m.to_f32(),
         }
     }
+
+    /// Heap footprint of this tensor (payload + name + shape), for the
+    /// resident-bytes registry.
+    pub fn resident_bytes(&self) -> u64 {
+        (self.data.len() * 4 + self.name.len() + self.shape.len() * 8) as u64
+    }
 }
 
 #[derive(Debug, Clone, Default)]
@@ -190,6 +196,12 @@ impl WeightStore {
         };
         bundle.save(path)
     }
+
+    /// Summed heap footprint of all tensors, for the resident-bytes
+    /// registry (f32 payloads dominate; map/order overhead is noise).
+    pub fn resident_bytes(&self) -> u64 {
+        self.tensors.values().map(Tensor::resident_bytes).sum()
+    }
 }
 
 fn read_u32<R: Read>(r: &mut R) -> Result<u32> {
@@ -249,6 +261,21 @@ mod tests {
         for (t, s) in ordered.iter().zip(&spec) {
             assert_eq!(t.name, s.name);
         }
+    }
+
+    #[test]
+    fn resident_bytes_dominated_by_payload() {
+        let cfg = ViTConfig::tiny_sim();
+        let store = dummy_store(&cfg);
+        let payload: u64 = store
+            .ordered()
+            .iter()
+            .map(|t| (t.data.len() * 4) as u64)
+            .sum();
+        let total = store.resident_bytes();
+        assert!(total >= payload);
+        // name/shape overhead is small next to the f32 payloads
+        assert!(total < payload + payload / 4 + 4096, "{total} vs {payload}");
     }
 
     #[test]

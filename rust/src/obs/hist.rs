@@ -9,16 +9,24 @@
 //! and float-free on the record path.
 
 /// Mergeable log-bucket histogram of `u64` samples (typically ns).
+///
+/// Besides the bucketed quantiles, the exact `min`/`max` ride along:
+/// unlike the percentiles they survive merging without bucket error
+/// (min of mins, max of maxes).
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Hist {
     pub counts: [u64; 64],
     pub total: u64,
     pub sum: u64,
+    /// exact smallest sample (`u64::MAX` while empty)
+    pub min: u64,
+    /// exact largest sample (0 while empty)
+    pub max: u64,
 }
 
 impl Default for Hist {
     fn default() -> Hist {
-        Hist { counts: [0u64; 64], total: 0, sum: 0 }
+        Hist { counts: [0u64; 64], total: 0, sum: 0, min: u64::MAX, max: 0 }
     }
 }
 
@@ -45,6 +53,8 @@ impl Hist {
         self.counts[bucket(v)] += 1;
         self.total += 1;
         self.sum = self.sum.saturating_add(v);
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
     }
 
     pub fn merge(&mut self, other: &Hist) {
@@ -53,6 +63,8 @@ impl Hist {
         }
         self.total += other.total;
         self.sum = self.sum.saturating_add(other.sum);
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
     }
 
     /// Approximate percentile (`q` in [0, 1]) as the midpoint of the
@@ -87,11 +99,14 @@ impl Hist {
             p95: self.percentile(0.95),
             p99: self.percentile(0.99),
             mean: self.mean(),
+            min: if self.total == 0 { 0 } else { self.min },
+            max: self.max,
         }
     }
 }
 
-/// Condensed histogram stats for reports and bench rows.
+/// Condensed histogram stats for reports and bench rows. `min`/`max`
+/// are exact (merge-stable); the quantiles are bucket midpoints.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct HistSummary {
     pub count: u64,
@@ -99,6 +114,8 @@ pub struct HistSummary {
     pub p95: u64,
     pub p99: u64,
     pub mean: u64,
+    pub min: u64,
+    pub max: u64,
 }
 
 #[cfg(test)]
@@ -131,6 +148,9 @@ mod tests {
         assert_eq!(h.percentile(0.99), bucket_rep(7));
         assert_eq!(h.percentile(1.0), bucket_rep(21));
         assert!(h.mean() > 100);
+        // min/max are exact, not bucket midpoints
+        assert_eq!(h.summary().min, 100);
+        assert_eq!(h.summary().max, 1 << 20);
     }
 
     #[test]
@@ -149,6 +169,13 @@ mod tests {
         a.merge(&b);
         assert_eq!(a, both);
         assert_eq!(a.summary(), both.summary());
+        assert_eq!(a.summary().min, 0);
+        assert_eq!(a.summary().max, 65_000);
+        // merging an empty hist is the identity (min stays u64::MAX
+        // internally but never leaks into a summary)
+        let mut c = both.clone();
+        c.merge(&Hist::default());
+        assert_eq!(c.summary(), both.summary());
     }
 
     #[test]
@@ -158,5 +185,7 @@ mod tests {
         assert_eq!(s.p50, 0);
         assert_eq!(s.p99, 0);
         assert_eq!(s.mean, 0);
+        assert_eq!(s.min, 0);
+        assert_eq!(s.max, 0);
     }
 }

@@ -1,0 +1,333 @@
+//! Memory observability: a tracking global allocator, a resident-bytes
+//! registry for the big structural buffers, and the `MemoryReport`
+//! section of a `QuantReport`.
+//!
+//! [`TrackingAlloc`] wraps `std::alloc::System` and keeps live/peak
+//! byte counts plus alloc/dealloc totals in relaxed atomics — a few ns
+//! per allocation, no locks, no allocation of its own. Binaries opt in
+//! with `#[global_allocator]` (the `beacon` CLI, the kernel bench, the
+//! serving example and the memory test suite all do); with the system
+//! allocator the counters simply stay at zero and every consumer
+//! reports "untracked" instead of wrong numbers.
+//!
+//! Peak tracking uses `fetch_max` on the post-increment live count.
+//! Relaxed ordering is safe here because the counters are monotone
+//! *summaries*, not synchronization: every `fetch_add`/`fetch_max` is
+//! individually atomic, so no update is lost — the only slack is that a
+//! reader racing an in-flight allocation on another thread can observe
+//! the `LIVE` bump before the matching `PEAK` max lands. The high-water
+//! mark is exact once the racing allocation's `fetch_max` completes,
+//! which is what phase close-out and end-of-run reporting read.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+
+use super::Snapshot;
+
+static LIVE: AtomicU64 = AtomicU64::new(0);
+static PEAK: AtomicU64 = AtomicU64::new(0);
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+static DEALLOCS: AtomicU64 = AtomicU64::new(0);
+static ALLOC_BYTES: AtomicU64 = AtomicU64::new(0);
+static FREED_BYTES: AtomicU64 = AtomicU64::new(0);
+
+/// Heap-tracking allocator delegating to [`System`]. Install with
+/// `#[global_allocator] static A: TrackingAlloc = TrackingAlloc;`.
+pub struct TrackingAlloc;
+
+#[inline]
+fn on_alloc(size: usize) {
+    ALLOCS.fetch_add(1, Ordering::Relaxed);
+    ALLOC_BYTES.fetch_add(size as u64, Ordering::Relaxed);
+    let live = LIVE.fetch_add(size as u64, Ordering::Relaxed) + size as u64;
+    PEAK.fetch_max(live, Ordering::Relaxed);
+}
+
+#[inline]
+fn on_dealloc(size: usize) {
+    DEALLOCS.fetch_add(1, Ordering::Relaxed);
+    FREED_BYTES.fetch_add(size as u64, Ordering::Relaxed);
+    LIVE.fetch_sub(size as u64, Ordering::Relaxed);
+}
+
+unsafe impl GlobalAlloc for TrackingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        let p = System.alloc(layout);
+        if !p.is_null() {
+            on_alloc(layout.size());
+        }
+        p
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        let p = System.alloc_zeroed(layout);
+        if !p.is_null() {
+            on_alloc(layout.size());
+        }
+        p
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout);
+        on_dealloc(layout.size());
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        let p = System.realloc(ptr, layout, new_size);
+        if !p.is_null() {
+            on_dealloc(layout.size());
+            on_alloc(new_size);
+        }
+        p
+    }
+}
+
+/// Point-in-time allocator counters (all zero when [`TrackingAlloc`] is
+/// not the process allocator).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct MemStats {
+    pub live_bytes: u64,
+    pub peak_bytes: u64,
+    pub allocs: u64,
+    pub deallocs: u64,
+    pub alloc_bytes: u64,
+    pub freed_bytes: u64,
+}
+
+pub fn stats() -> MemStats {
+    MemStats {
+        live_bytes: LIVE.load(Ordering::Relaxed),
+        peak_bytes: PEAK.load(Ordering::Relaxed),
+        allocs: ALLOCS.load(Ordering::Relaxed),
+        deallocs: DEALLOCS.load(Ordering::Relaxed),
+        alloc_bytes: ALLOC_BYTES.load(Ordering::Relaxed),
+        freed_bytes: FREED_BYTES.load(Ordering::Relaxed),
+    }
+}
+
+pub fn live_bytes() -> u64 {
+    LIVE.load(Ordering::Relaxed)
+}
+
+pub fn peak_bytes() -> u64 {
+    PEAK.load(Ordering::Relaxed)
+}
+
+/// `true` when [`TrackingAlloc`] is installed as the global allocator —
+/// detected by the alloc counter being nonzero, which any running Rust
+/// program long since guarantees (argv/env/runtime setup all allocate).
+pub fn tracking() -> bool {
+    ALLOCS.load(Ordering::Relaxed) > 0
+}
+
+/// Restart the high-water mark from the current live count, returning
+/// that count — the bench uses this to measure per-section peaks.
+pub fn reset_peak() -> u64 {
+    let live = LIVE.load(Ordering::Relaxed);
+    PEAK.store(live, Ordering::Relaxed);
+    live
+}
+
+/// Resident-bytes registry: the gram cache, weight/data stores and
+/// packed channels publish their *structural* footprint here under a
+/// stable name (last write per name wins). Unlike the allocator
+/// counters this is opt-in per data structure, so the report can say
+/// "the gram cache is 38 MiB of the 90 MiB peak".
+fn registry() -> &'static Mutex<BTreeMap<String, u64>> {
+    static R: OnceLock<Mutex<BTreeMap<String, u64>>> = OnceLock::new();
+    R.get_or_init(|| Mutex::new(BTreeMap::new()))
+}
+
+/// Publish (or refresh) a named structure's resident byte count. Cheap
+/// and rare (once per cache build / store load), so it is not gated on
+/// the recorder being enabled — footprints registered before
+/// `obs::enable()` still show up in the report.
+pub fn set_resident(name: &str, bytes: u64) {
+    registry().lock().unwrap().insert(name.to_string(), bytes);
+}
+
+pub(crate) fn resident_snapshot() -> BTreeMap<String, u64> {
+    registry().lock().unwrap().clone()
+}
+
+pub(crate) fn reset_registry() {
+    registry().lock().unwrap().clear();
+}
+
+/// Per-phase heap movement, read off the phase span's open/close
+/// live-byte samples.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PhaseMem {
+    pub name: String,
+    /// live-bytes delta across the phase (negative = net free)
+    pub net_bytes: i64,
+    /// process high-water mark observed at phase close
+    pub peak_bytes: u64,
+}
+
+/// Packed-weights footprint vs the f32 weights they replace — the
+/// paper's storage-model claim, measured on the actual codes.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PackedFootprint {
+    /// bit-stream payload: Σ ceil(len·storage_bits / 8) over channels
+    pub payload_bytes: u64,
+    /// per-channel metadata (scale + offset f32s)
+    pub meta_bytes: u64,
+    /// the f32 weights being replaced: Σ numel · 4
+    pub fp_bytes: u64,
+    /// Σ numel·storage_bits / Σ numel·32 — what the payload ratio must
+    /// track (ceil-rounding per channel is the only slack)
+    pub theoretical_ratio: f64,
+}
+
+impl PackedFootprint {
+    /// Measured payload-over-f32 ratio (metadata reported separately:
+    /// scale/offset bytes are per-channel constants, not per-weight).
+    pub fn ratio(&self) -> f64 {
+        if self.fp_bytes == 0 {
+            return 0.0;
+        }
+        self.payload_bytes as f64 / self.fp_bytes as f64
+    }
+
+    /// Relative deviation of the measured ratio from the theoretical
+    /// bits ratio — the memory-footprint assertion checks this ≤ 10%.
+    pub fn ratio_error(&self) -> f64 {
+        if self.theoretical_ratio == 0.0 {
+            return 0.0;
+        }
+        (self.ratio() / self.theoretical_ratio - 1.0).abs()
+    }
+}
+
+/// The memory section of a `QuantReport`: allocator totals, per-phase
+/// heap deltas, registered resident footprints and the packed ratio.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MemoryReport {
+    /// whether [`TrackingAlloc`] is installed (false ⇒ stats are zero)
+    pub tracking: bool,
+    pub stats: MemStats,
+    /// one row per closed `cat == "phase"` span, in close order
+    pub phases: Vec<PhaseMem>,
+    /// registered structural footprints, name-sorted
+    pub resident: Vec<(String, u64)>,
+    pub packed: Option<PackedFootprint>,
+}
+
+impl MemoryReport {
+    /// Build from a snapshot (phase spans carry the live-byte samples)
+    /// plus the pipeline's packed-footprint measurement.
+    pub fn from_snapshot(snap: &Snapshot, packed: Option<PackedFootprint>) -> MemoryReport {
+        let phases = snap
+            .events
+            .iter()
+            .filter(|e| e.cat == "phase")
+            .map(|e| PhaseMem {
+                name: e.name.clone(),
+                net_bytes: e.live_close_bytes as i64 - e.live_open_bytes as i64,
+                peak_bytes: e.peak_close_bytes,
+            })
+            .collect();
+        MemoryReport {
+            tracking: tracking(),
+            stats: stats(),
+            phases,
+            resident: snap.resident.iter().map(|(k, v)| (k.clone(), *v)).collect(),
+            packed,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::SpanEvent;
+
+    #[test]
+    fn resident_registry_roundtrip() {
+        let _l = crate::obs::test_lock();
+        reset_registry();
+        set_resident("test.gram_cache", 1024);
+        set_resident("test.weights", 2048);
+        set_resident("test.gram_cache", 4096); // last write wins
+        let snap = resident_snapshot();
+        assert_eq!(snap.get("test.gram_cache"), Some(&4096));
+        assert_eq!(snap.get("test.weights"), Some(&2048));
+        reset_registry();
+        assert!(resident_snapshot().is_empty());
+    }
+
+    #[test]
+    fn packed_footprint_ratio_math() {
+        // 4096 weights at 2-bit: payload 1024 B vs 16384 B of f32
+        let pf = PackedFootprint {
+            payload_bytes: 1024,
+            meta_bytes: 8,
+            fp_bytes: 16384,
+            theoretical_ratio: 2.0 / 32.0,
+        };
+        assert!((pf.ratio() - 0.0625).abs() < 1e-12);
+        assert!(pf.ratio_error() < 1e-12);
+        let empty = PackedFootprint {
+            payload_bytes: 0,
+            meta_bytes: 0,
+            fp_bytes: 0,
+            theoretical_ratio: 0.0,
+        };
+        assert_eq!(empty.ratio(), 0.0);
+        assert_eq!(empty.ratio_error(), 0.0);
+    }
+
+    #[test]
+    fn report_extracts_phase_deltas_from_spans() {
+        let mut snap = Snapshot::default();
+        snap.events.push(SpanEvent {
+            name: "phase.quantize".to_string(),
+            cat: "phase",
+            tid: 1,
+            depth: 0,
+            start_ns: 0,
+            dur_ns: 1_000,
+            args: Vec::new(),
+            live_open_bytes: 1_000,
+            live_close_bytes: 5_000,
+            peak_close_bytes: 9_000,
+        });
+        snap.events.push(SpanEvent {
+            name: "phase.eval".to_string(),
+            cat: "phase",
+            tid: 1,
+            depth: 0,
+            start_ns: 2_000,
+            dur_ns: 500,
+            args: Vec::new(),
+            live_open_bytes: 5_000,
+            live_close_bytes: 3_000,
+            peak_close_bytes: 9_500,
+        });
+        // non-phase spans are ignored
+        snap.events.push(SpanEvent {
+            name: "layer[0]".to_string(),
+            cat: "engine",
+            tid: 2,
+            depth: 1,
+            start_ns: 10,
+            dur_ns: 10,
+            args: Vec::new(),
+            live_open_bytes: 7,
+            live_close_bytes: 7,
+            peak_close_bytes: 7,
+        });
+        snap.resident.insert("pipeline.gram_cache".to_string(), 777);
+        let r = MemoryReport::from_snapshot(&snap, None);
+        assert_eq!(r.phases.len(), 2);
+        assert_eq!(r.phases[0].name, "phase.quantize");
+        assert_eq!(r.phases[0].net_bytes, 4_000);
+        assert_eq!(r.phases[0].peak_bytes, 9_000);
+        assert_eq!(r.phases[1].net_bytes, -2_000);
+        assert_eq!(r.resident, vec![("pipeline.gram_cache".to_string(), 777)]);
+        assert!(r.packed.is_none());
+    }
+}

@@ -22,11 +22,13 @@
 //! section of a `QuantReport`.
 
 pub mod hist;
+pub mod memory;
 pub mod report;
 pub mod span;
 pub mod trace;
 
 pub use hist::{Hist, HistSummary};
+pub use memory::{MemStats, MemoryReport, TrackingAlloc};
 pub use report::MetricsReport;
 pub use span::{SpanEvent, SpanGuard};
 
@@ -94,10 +96,13 @@ pub(crate) fn bump_recorded() {
 }
 
 /// Drop everything recorded so far (global store + this thread's
-/// buffer). Worker threads are scoped per fan, so between runs the
-/// calling thread's buffer is the only live one.
+/// buffer + the resident-bytes registry). Worker threads are scoped per
+/// fan, so between runs the calling thread's buffer is the only live
+/// one. Allocator counters are *not* reset — they are process-lifetime
+/// monotone (use [`memory::reset_peak`] to re-arm the high-water mark).
 pub fn reset() {
     span::reset_thread();
+    memory::reset_registry();
     let mut g = global().lock().unwrap();
     *g = Store::default();
     EVENTS_RECORDED.store(0, Ordering::SeqCst);
@@ -143,11 +148,13 @@ pub fn merge_hist(name: &str, h: Hist) {
 /// even while an outer span is still open.
 pub fn snapshot() -> Snapshot {
     span::flush_thread();
+    let resident = memory::resident_snapshot();
     let g = global().lock().unwrap();
     Snapshot {
         events: g.events.clone(),
         counters: g.counters.clone(),
         hists: g.hists.clone(),
+        resident,
     }
 }
 
@@ -180,6 +187,8 @@ pub struct Snapshot {
     pub events: Vec<SpanEvent>,
     pub counters: BTreeMap<String, u64>,
     pub hists: BTreeMap<String, Hist>,
+    /// registered structural footprints ([`memory::set_resident`])
+    pub resident: BTreeMap<String, u64>,
 }
 
 /// Write the current snapshot as Chrome trace-event JSON (open in
@@ -191,19 +200,24 @@ pub fn write_chrome_trace(path: &Path) -> Result<()> {
     Ok(())
 }
 
+/// Tests that toggle the global recorder (or the resident registry,
+/// which [`reset`] clears) serialize on this lock so the rest of the
+/// lib test binary never observes a half-enabled recorder. Shared with
+/// the `memory` submodule's tests.
+#[cfg(test)]
+pub(crate) fn test_lock() -> std::sync::MutexGuard<'static, ()> {
+    static L: OnceLock<Mutex<()>> = OnceLock::new();
+    L.get_or_init(|| Mutex::new(()))
+        .lock()
+        .unwrap_or_else(|e| e.into_inner())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::sync::MutexGuard;
 
-    /// Tests that toggle the global recorder serialize on this lock so
-    /// the rest of the lib test binary never observes a half-enabled
-    /// recorder.
-    fn lock() -> MutexGuard<'static, ()> {
-        static L: OnceLock<Mutex<()>> = OnceLock::new();
-        L.get_or_init(|| Mutex::new(()))
-            .lock()
-            .unwrap_or_else(|e| e.into_inner())
+    fn lock() -> std::sync::MutexGuard<'static, ()> {
+        test_lock()
     }
 
     #[test]

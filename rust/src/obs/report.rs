@@ -101,6 +101,9 @@ mod tests {
             start_ns,
             dur_ns,
             args: Vec::new(),
+            live_open_bytes: 0,
+            live_close_bytes: 0,
+            peak_close_bytes: 0,
         }
     }
 

@@ -26,6 +26,12 @@ pub struct SpanEvent {
     pub start_ns: u64,
     pub dur_ns: u64,
     pub args: Vec<(&'static str, String)>,
+    /// Heap live bytes sampled at span open/close and the process
+    /// high-water mark at close, from [`super::memory`]. All zero when
+    /// the tracking allocator is not installed.
+    pub live_open_bytes: u64,
+    pub live_close_bytes: u64,
+    pub peak_close_bytes: u64,
 }
 
 static NEXT_TID: AtomicU64 = AtomicU64::new(1);
@@ -64,6 +70,7 @@ struct RecOpen {
     cat: &'static str,
     start_ns: u64,
     args: Vec<(&'static str, String)>,
+    live_open_bytes: u64,
 }
 
 /// RAII span guard: records a [`SpanEvent`] on drop when the recorder
@@ -84,8 +91,9 @@ where
     let rec = if super::enabled() {
         let (name, args) = make();
         let start_ns = super::now_ns();
+        let live_open_bytes = super::memory::live_bytes();
         BUF.with(|b| b.borrow_mut().depth += 1);
-        Some(RecOpen { name, cat, start_ns, args })
+        Some(RecOpen { name, cat, start_ns, args, live_open_bytes })
     } else {
         None
     };
@@ -109,6 +117,8 @@ impl Drop for SpanGuard {
             return;
         };
         let end_ns = super::now_ns();
+        let live_close_bytes = super::memory::live_bytes();
+        let peak_close_bytes = super::memory::peak_bytes();
         BUF.with(|b| {
             let mut b = b.borrow_mut();
             b.depth = b.depth.saturating_sub(1);
@@ -122,6 +132,9 @@ impl Drop for SpanGuard {
                 start_ns: rec.start_ns,
                 dur_ns: end_ns.saturating_sub(rec.start_ns),
                 args: rec.args,
+                live_open_bytes: rec.live_open_bytes,
+                live_close_bytes,
+                peak_close_bytes,
             });
             super::bump_recorded();
             if depth == 0 {

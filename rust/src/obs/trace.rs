@@ -30,6 +30,20 @@ fn s(v: &str) -> Value {
     Value::Str(v.to_string())
 }
 
+/// Perfetto counter event (`"ph": "C"`): one named numeric sample; the
+/// viewer draws the series as a track next to the span rows.
+fn counter_event(name: &str, ts_ns: u64, bytes: u64) -> Value {
+    obj(vec![
+        ("name", s(name)),
+        ("cat", s("memory")),
+        ("ph", s("C")),
+        ("pid", num(1)),
+        ("tid", num(0)),
+        ("ts", num(ts_ns / 1_000)),
+        ("args", obj(vec![("bytes", num(bytes))])),
+    ])
+}
+
 /// Build the trace document as a [`Value`] tree.
 pub fn chrome_trace(snap: &Snapshot) -> Value {
     let mut events: Vec<Value> = Vec::with_capacity(snap.events.len() + 2);
@@ -56,6 +70,28 @@ pub fn chrome_trace(snap: &Snapshot) -> Value {
             ("args", obj(args)),
         ]));
     }
+    // Heap timeline from the spans' live-byte samples (tracking
+    // allocator installed ⇒ nonzero). Two points per span — open and
+    // close — time-sorted into one "heap.live_bytes" counter track,
+    // plus the high-water mark at each close.
+    let mut live: Vec<(u64, u64)> = Vec::new();
+    let mut peak: Vec<(u64, u64)> = Vec::new();
+    for ev in &snap.events {
+        if ev.live_open_bytes == 0 && ev.live_close_bytes == 0 {
+            continue;
+        }
+        live.push((ev.start_ns, ev.live_open_bytes));
+        live.push((ev.start_ns + ev.dur_ns, ev.live_close_bytes));
+        peak.push((ev.start_ns + ev.dur_ns, ev.peak_close_bytes));
+    }
+    live.sort_unstable();
+    peak.sort_unstable();
+    for (ts, bytes) in live {
+        events.push(counter_event("heap.live_bytes", ts, bytes));
+    }
+    for (ts, bytes) in peak {
+        events.push(counter_event("heap.peak_bytes", ts, bytes));
+    }
     let counters = obj(
         snap.counters
             .iter()
@@ -75,9 +111,17 @@ pub fn chrome_trace(snap: &Snapshot) -> Value {
                         ("p95", num(sm.p95)),
                         ("p99", num(sm.p99)),
                         ("mean", num(sm.mean)),
+                        ("min", num(sm.min)),
+                        ("max", num(sm.max)),
                     ]),
                 )
             })
+            .collect(),
+    );
+    let resident = obj(
+        snap.resident
+            .iter()
+            .map(|(k, v)| (k.as_str(), num(*v)))
             .collect(),
     );
     obj(vec![
@@ -85,6 +129,7 @@ pub fn chrome_trace(snap: &Snapshot) -> Value {
         ("displayTimeUnit", s("ms")),
         ("beaconCounters", counters),
         ("beaconHistograms", hists),
+        ("beaconResident", resident),
     ])
 }
 
@@ -108,6 +153,9 @@ mod tests {
             start_ns: 5_000,
             dur_ns: 2_000_000,
             args: vec![("layers", "3".to_string())],
+            live_open_bytes: 0,
+            live_close_bytes: 0,
+            peak_close_bytes: 0,
         });
         snap.events.push(SpanEvent {
             name: "layer[0]".to_string(),
@@ -117,6 +165,9 @@ mod tests {
             start_ns: 10_000,
             dur_ns: 500_000,
             args: Vec::new(),
+            live_open_bytes: 0,
+            live_close_bytes: 0,
+            peak_close_bytes: 0,
         });
         snap.counters.insert("pipeline.gram_cache.hit".to_string(), 4);
         let mut h = crate::obs::Hist::default();
@@ -161,9 +212,58 @@ mod tests {
             start_ns: 100,
             dur_ns: 200,
             args: Vec::new(),
+            live_open_bytes: 0,
+            live_close_bytes: 0,
+            peak_close_bytes: 0,
         });
         let v = chrome_trace(&snap);
         let evs = v.at(&["traceEvents"]).as_arr().unwrap();
         assert_eq!(evs[1].at(&["dur"]).as_f64(), Some(1.0));
+    }
+
+    #[test]
+    fn heap_counter_events_emitted_for_mem_samples() {
+        let mut snap = Snapshot::default();
+        snap.events.push(SpanEvent {
+            name: "phase.quantize".to_string(),
+            cat: "phase",
+            tid: 1,
+            depth: 0,
+            start_ns: 10_000,
+            dur_ns: 30_000,
+            args: Vec::new(),
+            live_open_bytes: 1_000_000,
+            live_close_bytes: 3_000_000,
+            peak_close_bytes: 5_000_000,
+        });
+        snap.resident.insert("pipeline.gram_cache".to_string(), 4_096);
+        let v = chrome_trace(&snap);
+        let evs = v.at(&["traceEvents"]).as_arr().unwrap();
+        // metadata + span + 2 live samples + 1 peak sample
+        assert_eq!(evs.len(), 5);
+        let cs: Vec<_> = evs
+            .iter()
+            .filter(|e| e.at(&["ph"]).as_str() == Some("C"))
+            .collect();
+        assert_eq!(cs.len(), 3);
+        assert_eq!(cs[0].at(&["name"]).as_str(), Some("heap.live_bytes"));
+        assert_eq!(cs[0].at(&["ts"]).as_f64(), Some(10.0));
+        assert_eq!(cs[0].at(&["args", "bytes"]).as_f64(), Some(1_000_000.0));
+        assert_eq!(cs[1].at(&["ts"]).as_f64(), Some(40.0));
+        assert_eq!(cs[1].at(&["args", "bytes"]).as_f64(), Some(3_000_000.0));
+        assert_eq!(cs[2].at(&["name"]).as_str(), Some("heap.peak_bytes"));
+        assert_eq!(cs[2].at(&["args", "bytes"]).as_f64(), Some(5_000_000.0));
+        assert_eq!(
+            v.at(&["beaconResident", "pipeline.gram_cache"]).as_f64(),
+            Some(4_096.0)
+        );
+    }
+
+    #[test]
+    fn zero_mem_spans_emit_no_counter_events() {
+        // system allocator (all samples zero): the heap track is absent
+        let v = chrome_trace(&sample_snapshot());
+        let evs = v.at(&["traceEvents"]).as_arr().unwrap();
+        assert!(evs.iter().all(|e| e.at(&["ph"]).as_str() != Some("C")));
     }
 }

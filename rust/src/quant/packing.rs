@@ -15,22 +15,25 @@ pub struct PackedChannel {
     pub words: Vec<u64>,
 }
 
-/// Map code values (alphabet elements) to indices and pack.
-pub fn pack_channel(
-    codes: &[f64],
+impl PackedChannel {
+    /// Heap + inline footprint of this packed channel, for the
+    /// resident-bytes registry.
+    pub fn resident_bytes(&self) -> usize {
+        self.words.len() * 8 + std::mem::size_of::<PackedChannel>()
+    }
+}
+
+/// Pack pre-resolved alphabet indices into the bit stream.
+pub fn pack_indices(
+    idxs: &[usize],
     scale: f64,
     offset: f64,
     width: BitWidth,
 ) -> PackedChannel {
-    let alph = alphabet(width);
     let bits = width.storage_bits();
-    let mut words = vec![0u64; (codes.len() * bits as usize + 63) / 64];
-    for (i, v) in codes.iter().enumerate() {
-        let idx = alph
-            .iter()
-            .position(|a| (a - v).abs() < 1e-9)
-            .unwrap_or_else(|| panic!("code {v} not on {width:?} alphabet"))
-            as u64;
+    let mut words = vec![0u64; (idxs.len() * bits as usize + 63) / 64];
+    for (i, &k) in idxs.iter().enumerate() {
+        let idx = k as u64;
         let bitpos = i * bits as usize;
         let (word, off) = (bitpos / 64, bitpos % 64);
         words[word] |= idx << off;
@@ -40,11 +43,88 @@ pub fn pack_channel(
     }
     PackedChannel {
         bits,
-        len: codes.len(),
+        len: idxs.len(),
         scale: scale as f32,
         offset: offset as f32,
         words,
     }
+}
+
+/// Map code values (alphabet elements) to indices and pack. Panics on
+/// off-alphabet codes; see [`try_pack_channel`] for the tolerant form.
+pub fn pack_channel(
+    codes: &[f64],
+    scale: f64,
+    offset: f64,
+    width: BitWidth,
+) -> PackedChannel {
+    let alph = alphabet(width);
+    let idxs: Vec<usize> = codes
+        .iter()
+        .map(|v| {
+            alph.iter()
+                .position(|a| (a - v).abs() < 1e-9)
+                .unwrap_or_else(|| panic!("code {v} not on {width:?} alphabet"))
+        })
+        .collect();
+    pack_indices(&idxs, scale, offset, width)
+}
+
+/// Resolve one code value to an alphabet index, accepting both code
+/// conventions in the repo: Beacon emits alphabet *values* (±0.5,
+/// ±1.5, …) while the min-max methods (RTN/GPTQ/COMQ) emit integer
+/// level indices `k ∈ [0, levels)`. Alphabet match wins when a value
+/// satisfies both (only possible on the integer-valued 1.58-bit grid,
+/// where either reading yields an in-range index).
+fn code_index(v: f64, alph: &[f64], levels: usize) -> Option<usize> {
+    if let Some(i) = alph.iter().position(|a| (a - v).abs() < 1e-9) {
+        return Some(i);
+    }
+    let k = v.round();
+    if (k - v).abs() < 1e-9 && k >= 0.0 && k < levels as f64 {
+        Some(k as usize)
+    } else {
+        None
+    }
+}
+
+/// Pack a channel whose codes follow either convention (alphabet values
+/// or integer level indices); `None` when any code is off-grid — the
+/// footprint accounting degrades gracefully instead of panicking.
+pub fn try_pack_channel(
+    codes: &[f64],
+    scale: f64,
+    offset: f64,
+    width: BitWidth,
+) -> Option<PackedChannel> {
+    let alph = alphabet(width);
+    let levels = alph.len();
+    let idxs: Vec<usize> = codes
+        .iter()
+        .map(|v| code_index(*v, &alph, levels))
+        .collect::<Option<Vec<usize>>>()?;
+    Some(pack_indices(&idxs, scale, offset, width))
+}
+
+/// Packed storage for a whole layer's codes without materializing the
+/// bit streams: `(payload_bytes, meta_bytes)` where payload is
+/// Σ ceil(len·bits/8) and meta is 8 bytes (scale + offset f32) per
+/// channel. `None` when any channel has off-grid codes.
+pub fn layer_packed_bytes(
+    codes: &[Vec<f64>],
+    width: BitWidth,
+) -> Option<(u64, u64)> {
+    let alph = alphabet(width);
+    let levels = alph.len();
+    let bits = width.storage_bits() as u64;
+    let mut payload = 0u64;
+    for ch in codes {
+        if !ch.iter().all(|v| code_index(*v, &alph, levels).is_some()) {
+            return None;
+        }
+        payload += (ch.len() as u64 * bits + 7) / 8;
+    }
+    Some((payload, codes.len() as u64 * 8))
 }
 
 /// Unpack the raw alphabet indices (the lossless payload: packing is
@@ -173,6 +253,61 @@ mod tests {
         assert_eq!(got[42], want[42]);
         assert_eq!(got[69], want[69]);
         assert_eq!(got, want);
+    }
+
+    #[test]
+    fn try_pack_accepts_alphabet_codes() {
+        // Beacon convention: codes are alphabet values
+        let width = BitWidth::B2;
+        let alph = alphabet(width);
+        let want: Vec<usize> = (0..70).map(|i| i % 4).collect();
+        let codes: Vec<f64> = want.iter().map(|&k| alph[k]).collect();
+        let p = try_pack_channel(&codes, 0.2, 0.0, width).unwrap();
+        assert_eq!(unpack_indices(&p), want);
+        // identical to the panicking path
+        let q = pack_channel(&codes, 0.2, 0.0, width);
+        assert_eq!(p.words, q.words);
+    }
+
+    #[test]
+    fn try_pack_accepts_integer_index_codes() {
+        // min-max convention (RTN/GPTQ/COMQ): codes are level indices
+        let width = BitWidth::B3;
+        let want: Vec<usize> = (0..70).map(|i| (i * 5 + 1) % 8).collect();
+        let codes: Vec<f64> = want.iter().map(|&k| k as f64).collect();
+        let p = try_pack_channel(&codes, 1.0, 0.0, width).unwrap();
+        assert_eq!(unpack_indices(&p), want);
+    }
+
+    #[test]
+    fn try_pack_rejects_off_grid() {
+        assert!(try_pack_channel(&[0.25], 1.0, 0.0, BitWidth::B2).is_none());
+        assert!(try_pack_channel(&[-1.0], 1.0, 0.0, BitWidth::B4).is_none());
+        assert!(try_pack_channel(&[16.0], 1.0, 0.0, BitWidth::B4).is_none());
+    }
+
+    #[test]
+    fn layer_packed_bytes_matches_per_channel_packing() {
+        let width = BitWidth::B2;
+        let alph = alphabet(width);
+        let codes: Vec<Vec<f64>> = (0..4)
+            .map(|c| (0..70).map(|i| alph[(i + c) % 4]).collect())
+            .collect();
+        let (payload, meta) = layer_packed_bytes(&codes, width).unwrap();
+        // 70 × 2 bits = 140 bits → 18 bytes per channel
+        assert_eq!(payload, 4 * 18);
+        assert_eq!(meta, 4 * 8);
+        assert!(layer_packed_bytes(&[vec![0.25]], width).is_none());
+    }
+
+    #[test]
+    fn resident_bytes_covers_words() {
+        let width = BitWidth::B2;
+        let alph = alphabet(width);
+        let codes: Vec<f64> = (0..256).map(|i| alph[i % 4]).collect();
+        let p = pack_channel(&codes, 1.0, 0.0, width);
+        // 512 bits = 8 words
+        assert!(p.resident_bytes() >= 64);
     }
 
     #[test]

@@ -1,0 +1,194 @@
+//! Integration tests for the memory-observability layer with the
+//! tracking allocator actually installed as the global allocator (the
+//! lib unit tests can't do that — `#[global_allocator]` is per binary):
+//!
+//! 1. allocator counters are monotone and peak ≥ live across worker
+//!    threads ∈ {1, 4},
+//! 2. packed-vs-f32 footprint tracks the storage-bits ratio at every
+//!    supported bit width,
+//! 3. quantization outputs stay bit-identical with tracing on vs off
+//!    while every allocation routes through `TrackingAlloc`,
+//! 4. phase spans capture live-heap deltas, and the resident registry
+//!    round-trips through `obs::snapshot()`.
+//!
+//! Allocator counters and the recorder are process-global, so every
+//! test takes `lock()`; with all tests serialized, the main thread is
+//! the only allocator when assertions read live/peak.
+
+use std::sync::{Mutex, OnceLock};
+
+use beacon_ptq::config::QuantConfig;
+use beacon_ptq::data::rng::SplitMix64;
+use beacon_ptq::linalg::Matrix;
+use beacon_ptq::obs::{self, memory, TrackingAlloc};
+use beacon_ptq::quant::alphabet::{alphabet, BitWidth};
+use beacon_ptq::quant::engine::{self, LayerCtx, LayerQuant, Quantizer as _};
+use beacon_ptq::quant::packing::layer_packed_bytes;
+use beacon_ptq::util::prop::Gen;
+
+#[global_allocator]
+static ALLOC: TrackingAlloc = TrackingAlloc;
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+    LOCK.get_or_init(|| Mutex::new(()))
+        .lock()
+        .unwrap_or_else(|e| e.into_inner())
+}
+
+fn case(seed: u64, m: usize, n: usize, np: usize) -> (Matrix, Matrix) {
+    let mut g = Gen { rng: SplitMix64::new(seed) };
+    let x = Matrix::from_vec(m, n, g.vec_normal(m * n, 1.0));
+    let w = Matrix::from_vec(n, np, g.vec_normal(n * np, 0.3));
+    (x, w)
+}
+
+fn run_engine(layers: &[(Matrix, Matrix)], threads: usize) -> Vec<LayerQuant> {
+    let c = QuantConfig { bits: 2.0, loops: 2, ..QuantConfig::default() };
+    let q = c.method.quantizer(c.bit_width().unwrap(), &c);
+    let sched = engine::plan(threads, layers.len(), q.parallel_safe());
+    engine::run_layers(sched, layers.len(), |li| {
+        let (x, w) = &layers[li];
+        q.quantize_layer(&LayerCtx::plain(x, w, sched.channel_threads))
+    })
+    .unwrap()
+}
+
+#[test]
+fn allocator_counters_monotone_across_threads() {
+    let _g = lock();
+    assert!(memory::tracking(), "global allocator must be TrackingAlloc");
+    for threads in [1usize, 4] {
+        let s0 = memory::stats();
+        let handles: Vec<_> = (0..threads)
+            .map(|t| {
+                std::thread::spawn(move || {
+                    let mut keep: Vec<Vec<u8>> = Vec::new();
+                    for i in 0..64 {
+                        keep.push(vec![t as u8; 4096 + i]);
+                    }
+                    keep.iter().map(|v| v.len()).sum::<usize>()
+                })
+            })
+            .collect();
+        let mut churned = 0usize;
+        for h in handles {
+            churned += h.join().unwrap();
+        }
+        let s1 = memory::stats();
+        assert!(churned >= threads * 64 * 4096);
+        assert!(s1.allocs > s0.allocs, "t={threads}: allocs must grow");
+        assert!(
+            s1.alloc_bytes >= s0.alloc_bytes + churned as u64,
+            "t={threads}: alloc_bytes {} → {} missed {churned} churned",
+            s0.alloc_bytes,
+            s1.alloc_bytes
+        );
+        assert!(s1.deallocs >= s0.deallocs, "t={threads}: deallocs monotone");
+        assert!(s1.allocs >= s1.deallocs, "t={threads}: frees ≤ allocs");
+        assert!(s1.peak_bytes >= s0.peak_bytes, "t={threads}: peak monotone");
+        // workers joined and the lock serializes tests, so this thread
+        // is the only allocator: the invariant must hold exactly
+        let live = memory::live_bytes();
+        let peak = memory::peak_bytes();
+        assert!(peak >= live, "t={threads}: peak {peak} < live {live}");
+    }
+}
+
+#[test]
+fn packed_footprint_tracks_bits_ratio_per_width() {
+    let _g = lock();
+    let n = 4096usize;
+    let channels = 4usize;
+    for width in BitWidth::ALL {
+        let alph = alphabet(width);
+        let codes: Vec<Vec<f64>> = (0..channels)
+            .map(|c| (0..n).map(|i| alph[(i + c) % alph.len()]).collect())
+            .collect();
+        let (payload, meta) = layer_packed_bytes(&codes, width).unwrap();
+        let fp_bytes = (channels * n * 4) as f64;
+        let ratio = payload as f64 / fp_bytes;
+        let theoretical = f64::from(width.storage_bits()) / 32.0;
+        let err = (ratio / theoretical - 1.0).abs();
+        assert!(
+            err < 0.10,
+            "{width:?}: packed/f32 ratio {ratio:.4} strays {err:.3} from \
+             theoretical {theoretical:.4}"
+        );
+        assert_eq!(meta, channels as u64 * 8, "{width:?}: 8 B metadata/channel");
+    }
+}
+
+#[test]
+fn traced_runs_bit_identical_under_tracking_allocator() {
+    let _g = lock();
+    let layers: Vec<_> = (0..5).map(|i| case(60 + i, 48, 8, 5)).collect();
+    for threads in [1usize, 4] {
+        obs::disable();
+        obs::reset();
+        let plain = run_engine(&layers, threads);
+        obs::enable();
+        obs::reset();
+        let traced = run_engine(&layers, threads);
+        obs::disable();
+        assert_eq!(plain.len(), traced.len());
+        for (li, (a, b)) in plain.iter().zip(&traced).enumerate() {
+            let what = format!("t={threads} layer {li}");
+            assert_eq!(a.codes, b.codes, "{what}: codes");
+            assert_eq!(a.scales, b.scales, "{what}: scales");
+            assert_eq!(a.offsets, b.offsets, "{what}: offsets");
+            let pb: Vec<u64> = a.dequant.data.iter().map(|v| v.to_bits()).collect();
+            let tb: Vec<u64> = b.dequant.data.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(pb, tb, "{what}: dequant bits");
+        }
+    }
+}
+
+#[test]
+fn phase_spans_capture_live_heap_delta() {
+    let _g = lock();
+    obs::enable();
+    obs::reset();
+    let sink: Vec<u8>;
+    {
+        let _s = obs::span("phase", "phase.memtest");
+        sink = vec![7u8; 512 * 1024];
+    }
+    let snap = obs::snapshot();
+    obs::disable();
+    assert_eq!(sink.len(), 512 * 1024);
+    let ev = snap
+        .events
+        .iter()
+        .find(|e| e.name == "phase.memtest")
+        .expect("phase span recorded");
+    assert!(
+        ev.live_close_bytes >= ev.live_open_bytes + 500_000,
+        "span must see the 512 KiB allocated inside it: open {} close {}",
+        ev.live_open_bytes,
+        ev.live_close_bytes
+    );
+    assert!(
+        ev.peak_close_bytes >= ev.live_close_bytes,
+        "peak {} < live {} at span close",
+        ev.peak_close_bytes,
+        ev.live_close_bytes
+    );
+}
+
+#[test]
+fn resident_registry_roundtrips_through_snapshot() {
+    let _g = lock();
+    obs::enable();
+    obs::reset();
+    memory::set_resident("test.block", 12_345);
+    memory::set_resident("test.block", 23_456); // last write wins
+    memory::set_resident("test.other", 99);
+    let snap = obs::snapshot();
+    obs::disable();
+    assert_eq!(snap.resident.get("test.block"), Some(&23_456));
+    assert_eq!(snap.resident.get("test.other"), Some(&99));
+    obs::reset();
+    let snap2 = obs::snapshot();
+    assert!(snap2.resident.is_empty(), "reset clears the registry");
+}

@@ -15,12 +15,21 @@
 use std::sync::{Mutex, OnceLock};
 
 use beacon_ptq::config::QuantConfig;
+// Debug runs of this suite route every allocation through the tracking
+// allocator, proving the recorder itself survives being metered (the
+// bit-identity test then covers traced-vs-untraced under tracking too).
+#[cfg(debug_assertions)]
+use beacon_ptq::obs::TrackingAlloc;
 use beacon_ptq::data::rng::SplitMix64;
 use beacon_ptq::linalg::Matrix;
 use beacon_ptq::obs;
 use beacon_ptq::quant::engine::{self, LayerCtx, LayerQuant, Quantizer as _};
 use beacon_ptq::util::json::Value;
 use beacon_ptq::util::prop::Gen;
+
+#[cfg(debug_assertions)]
+#[global_allocator]
+static ALLOC: TrackingAlloc = TrackingAlloc;
 
 fn lock() -> std::sync::MutexGuard<'static, ()> {
     static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
