@@ -1,31 +1,65 @@
-//! Serve a quantized checkpoint: load the 2-bit weights produced by
-//! `quantize_vit` (quantizing on the fly if missing), then answer batched
-//! classification requests through the PJRT executable, reporting
-//! latency/throughput — the deployment half of the story.
+//! Packed-weight serving: quantize a small model, ship it as a BPK1
+//! [`PackedStore`], and serve batched requests straight off the packed
+//! bit streams through the fused unpack-dequant-GEMM kernel — the
+//! deployment half of the paper's memory claim, measured rather than
+//! asserted.
 //!
-//! The server runs with the tracking allocator installed and the obs
-//! recorder on when `BEACON_TRACE=FILE` is set: each request is a
-//! `serve.request` span (so the trace shows the request stream next to
-//! the heap counter track), request latencies merge into a
-//! `serve.request_ns` histogram, and the run ends with a heap
-//! scoreboard.
+//! For each bit width (4-bit, then 2-bit) the run:
+//!
+//! 1. quantizes a deterministic synthetic model with native Beacon and
+//!    writes the packed checkpoint to disk (sources are dropped);
+//! 2. serves the request stream twice from that same file — once as a
+//!    dense f32 deployment (channels unpacked to f32 at load), once
+//!    fully packed (fused kernel, no weight matrix ever materialized) —
+//!    measuring weight resident bytes and the phase's peak-heap delta
+//!    with the tracking allocator;
+//! 3. asserts the packed path stays under the storage-ratio cap
+//!    (≤ 0.5× f32 at 4-bit, ≤ 0.3× at 2-bit) on both measures, and that
+//!    the fused `packed_matvec` is bit-identical to unpack-then-matvec
+//!    at 1 and 4 threads.
 //!
 //! ```bash
 //! cargo run --release --example serve_quantized [-- <num_requests>]
 //! BEACON_TRACE=serve_trace.json cargo run --release --example serve_quantized
 //! ```
 
-use std::path::Path;
+use std::path::{Path, PathBuf};
 use std::time::Instant;
 
-use beacon_ptq::config::QuantConfig;
-use beacon_ptq::coordinator::Pipeline;
-use beacon_ptq::model::WeightStore;
+use beacon_ptq::config::{Method, QuantConfig};
+use beacon_ptq::coordinator::report::Table;
+use beacon_ptq::data::rng::SplitMix64;
+use beacon_ptq::linalg::{
+    packed_gemm, packed_matvec, packed_matvec_threads, Matrix,
+};
+use beacon_ptq::model::{PackedLayer, PackedStore};
 use beacon_ptq::obs::{self, Hist, TrackingAlloc};
-use beacon_ptq::runtime::client::{literal_f32, literal_to_f32};
+use beacon_ptq::quant::alphabet::BitWidth;
+use beacon_ptq::quant::engine::{LayerCtx, Quantizer as _};
+use beacon_ptq::quant::packing::unpack_channel;
+use beacon_ptq::util::prop::Gen;
 
 #[global_allocator]
 static ALLOC: TrackingAlloc = TrackingAlloc;
+
+/// Synthetic model geometry: weight-dominant layers so the weight store
+/// (not activations) decides both paths' footprints.
+const LAYERS: usize = 6;
+const N: usize = 256; // channel length (weight rows)
+const NP: usize = 256; // channels per layer (weight cols)
+const CALIB_ROWS: usize = 320; // ≥ N so the QR prefactor is well-posed
+const BATCH: usize = 8;
+
+struct WidthResult {
+    label: String,
+    f32_resident: u64,
+    f32_peak: u64,
+    packed_resident: u64,
+    packed_peak: u64,
+    cap: f64,
+    p50_ms: f64,
+    p95_ms: f64,
+}
 
 fn main() -> anyhow::Result<()> {
     let requests: usize = std::env::args()
@@ -37,93 +71,39 @@ fn main() -> anyhow::Result<()> {
         obs::enable();
     }
 
-    let mut pipe = Pipeline::from_artifacts("artifacts", "tiny-sim")?;
-    let m = pipe.artifacts.manifest.clone();
-    let ckpt = Path::new("artifacts/quantized__tiny-sim_2bit.bin");
-
-    let store = if ckpt.exists() {
-        println!("loading quantized checkpoint {ckpt:?}");
-        WeightStore::load(ckpt, &m.cfg)?
-    } else {
-        println!("no checkpoint found — quantizing now (2-bit beacon)...");
-        let qc = QuantConfig { bits: 2.0, loops: 4, ..QuantConfig::default() };
-        let (_, store) = pipe.quantize_cfg_with_weights(&qc)?;
-        store.save(ckpt)?;
-        store
-    };
-    obs::memory::set_resident("serve.weight_store", store.resident_bytes());
-
-    // weight literals stay resident; each request only uploads images
-    let mut weight_inputs = Vec::new();
-    for t in store.ordered() {
-        let dims: Vec<i64> = t.shape.iter().map(|d| *d as i64).collect();
-        weight_inputs.push(literal_f32(&t.data, &dims)?);
+    let mut rows = Vec::new();
+    for (width, cap) in [(BitWidth::B4, 0.5), (BitWidth::B2, 0.3)] {
+        rows.push(run_width(width, cap, requests)?);
     }
 
-    let b = m.eval_batch;
-    let k = m.cfg.num_classes;
-    println!(
-        "serving {requests} requests of batch {b} ({} images total)\n",
-        requests * b
+    let mut t = Table::new(
+        "packed vs f32 serving footprint",
+        &[
+            "width", "f32 resident", "packed resident", "ratio",
+            "f32 peak", "packed peak", "ratio", "cap", "p50/p95 ms",
+        ],
     );
-
-    let mut latencies = Vec::with_capacity(requests);
-    let mut request_ns = Hist::default();
-    let mut correct = 0usize;
-    let mut total = 0usize;
-    let t_all = Instant::now();
-    for r in 0..requests {
-        let span = obs::span_args("serve", || {
-            (format!("serve.request[{r}]"), vec![("batch", b.to_string())])
-        });
-        // rotate through the eval split as the request stream
-        let lo = (r * b) % (pipe.eval.count - b + 1);
-        let hi = lo + b;
-        let mut inputs = weight_inputs.clone();
-        inputs.push(literal_f32(
-            pipe.eval.batch(lo, hi),
-            &[b as i64, m.cfg.image as i64, m.cfg.image as i64, m.cfg.channels as i64],
-        )?);
-        let t = Instant::now();
-        let out = pipe.runtime.exec(&m.vit_logits, &inputs)?;
-        let logits = literal_to_f32(&out[0])?;
-        let secs = span.finish();
-        request_ns.record((secs * 1e9) as u64);
-        latencies.push(t.elapsed().as_secs_f64() * 1e3);
-        for (bi, item) in (lo..hi).enumerate() {
-            let row = &logits[bi * k..(bi + 1) * k];
-            let pred = row
-                .iter()
-                .enumerate()
-                .max_by(|a, c| a.1.partial_cmp(c.1).unwrap())
-                .map(|(i, _)| i)
-                .unwrap();
-            if pred as i32 == pipe.eval.labels[item] {
-                correct += 1;
-            }
-            total += 1;
-        }
+    for r in &rows {
+        t.row(vec![
+            r.label.clone(),
+            mib(r.f32_resident),
+            mib(r.packed_resident),
+            format!("{:.2}", r.packed_resident as f64 / r.f32_resident as f64),
+            mib(r.f32_peak),
+            mib(r.packed_peak),
+            format!("{:.2}", r.packed_peak as f64 / r.f32_peak as f64),
+            format!("{:.2}", r.cap),
+            format!("{:.2}/{:.2}", r.p50_ms, r.p95_ms),
+        ]);
     }
-    let wall = t_all.elapsed().as_secs_f64();
-    obs::merge_hist("serve.request_ns", request_ns);
-    latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let p50 = latencies[latencies.len() / 2];
-    let p95 = latencies[(latencies.len() * 95 / 100).min(latencies.len() - 1)];
-    println!("online accuracy : {:.2}%", 100.0 * correct as f64 / total as f64);
-    println!("batch latency   : p50 {p50:.2} ms, p95 {p95:.2} ms");
-    println!(
-        "throughput      : {:.0} images/s ({} images in {:.2}s)",
-        (total as f64) / wall,
-        total,
-        wall
-    );
+    println!("\n{}", t.render());
+
     if obs::memory::tracking() {
         let s = obs::memory::stats();
         println!(
-            "heap            : peak {:.1} MiB, live {:.1} MiB \
-             ({} allocs / {} frees)",
-            s.peak_bytes as f64 / (1 << 20) as f64,
-            s.live_bytes as f64 / (1 << 20) as f64,
+            "heap: peak {} live {} ({} allocs / {} frees)",
+            mib(s.peak_bytes),
+            mib(s.live_bytes),
             s.allocs,
             s.deallocs
         );
@@ -133,4 +113,267 @@ fn main() -> anyhow::Result<()> {
         println!("trace written to {path} (open in ui.perfetto.dev)");
     }
     Ok(())
+}
+
+fn mib(b: u64) -> String {
+    format!("{:.2} MiB", b as f64 / (1 << 20) as f64)
+}
+
+fn ckpt_path(width: BitWidth) -> PathBuf {
+    let dir = std::env::temp_dir().join("beacon_ptq_serve");
+    std::fs::create_dir_all(&dir).expect("create checkpoint dir");
+    dir.join(format!("serve_{}bit.bpk", width.storage_bits()))
+}
+
+/// Quantize the synthetic model with native Beacon and write the packed
+/// checkpoint. Everything built here (weights, activations, codes) goes
+/// out of scope on return — serving sees only the file.
+fn build_checkpoint(width: BitWidth, path: &Path) -> anyhow::Result<()> {
+    let span = obs::span_args("serve", || {
+        (format!("serve.quantize[{}]", width.label()), Vec::new())
+    });
+    let qc = QuantConfig { bits: width.0, loops: 2, ..QuantConfig::default() };
+    let quantizer = Method::Beacon.quantizer(width, &qc);
+    let mut g = Gen { rng: SplitMix64::new(0x5E12F + width.storage_bits() as u64) };
+    let mut layers = Vec::with_capacity(LAYERS);
+    for li in 0..LAYERS {
+        let x = Matrix::from_vec(
+            CALIB_ROWS,
+            N,
+            g.vec_normal(CALIB_ROWS * N, 1.0),
+        );
+        let w = Matrix::from_vec(N, NP, g.vec_normal(N * NP, 0.3));
+        let lq = quantizer.quantize_layer(&LayerCtx::plain(&x, &w, 1))?;
+        let name = format!("layer.{li}.w");
+        let packed =
+            PackedLayer::pack(&name, &lq.codes, &lq.scales, &lq.offsets, width)
+                .ok_or_else(|| {
+                    anyhow::anyhow!("{name}: beacon codes fell off the grid")
+                })?;
+        layers.push(packed);
+    }
+    let store = PackedStore { layers };
+    store.save(path)?;
+    span.finish();
+    println!(
+        "{}: packed checkpoint written to {path:?} ({})",
+        width.label(),
+        mib(store.resident_bytes())
+    );
+    Ok(())
+}
+
+/// `dot` with an f32 weight vector — the dense-deployment twin of the
+/// fused kernel's LUT expansion (same 4-lane accumulation order, so both
+/// serving paths produce bit-identical outputs).
+fn dot_wf32(w: &[f32], x: &[f64]) -> f64 {
+    debug_assert_eq!(w.len(), x.len());
+    let n = w.len();
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
+    for c in 0..chunks {
+        let i = c * 4;
+        s0 += f64::from(w[i]) * x[i];
+        s1 += f64::from(w[i + 1]) * x[i + 1];
+        s2 += f64::from(w[i + 2]) * x[i + 2];
+        s3 += f64::from(w[i + 3]) * x[i + 3];
+    }
+    let mut s = s0 + s1 + s2 + s3;
+    for i in chunks * 4..n {
+        s += f64::from(w[i]) * x[i];
+    }
+    s
+}
+
+/// Deterministic request stream: `requests` batches of `BATCH`×`N`.
+fn request_batch(r: usize) -> Matrix {
+    let mut g = Gen { rng: SplitMix64::new(0x5EED_0000 ^ r as u64) };
+    Matrix::from_vec(BATCH, N, g.vec_normal(BATCH * N, 1.0))
+}
+
+fn run_width(
+    width: BitWidth,
+    cap: f64,
+    requests: usize,
+) -> anyhow::Result<WidthResult> {
+    println!("=== {} packed serving ===", width.label());
+    let path = ckpt_path(width);
+    build_checkpoint(width, &path)?;
+
+    // ---- dense f32 deployment: unpack every channel to f32 at load ----
+    let live0 = obs::memory::reset_peak();
+    let f32_layers: Vec<Vec<Vec<f32>>> = {
+        let store = PackedStore::load(&path)?;
+        store
+            .layers
+            .iter()
+            .map(|l| {
+                l.channels
+                    .iter()
+                    .map(|c| unpack_channel(c, l.width))
+                    .collect()
+            })
+            .collect()
+        // `store` (the packed form) drops here: the dense deployment
+        // keeps only f32 weights resident
+    };
+    let f32_resident: u64 = f32_layers
+        .iter()
+        .flatten()
+        .map(|c| (c.len() * 4 + std::mem::size_of::<Vec<f32>>()) as u64)
+        .sum();
+    obs::memory::set_resident("serve.f32_store", f32_resident);
+
+    let mut f32_out_probe = Vec::new();
+    for r in 0..requests {
+        let x = request_batch(r);
+        let mut out = Matrix::zeros(BATCH, NP);
+        for layer in &f32_layers {
+            for b in 0..BATCH {
+                for (j, ch) in layer.iter().enumerate() {
+                    out[(b, j)] += dot_wf32(ch, x.row(b));
+                }
+            }
+        }
+        if r == 0 {
+            f32_out_probe = out.data.clone();
+        }
+    }
+    let f32_peak = obs::memory::peak_bytes().saturating_sub(live0);
+    drop(f32_layers);
+
+    // ---- packed deployment: fused kernel off the bit streams ----
+    let live0 = obs::memory::reset_peak();
+    let store = PackedStore::load(&path)?;
+    let luts: Vec<Vec<Vec<f32>>> =
+        store.layers.iter().map(PackedLayer::luts).collect();
+    let lut_bytes: u64 = luts
+        .iter()
+        .flatten()
+        .map(|l| (l.len() * 4 + std::mem::size_of::<Vec<f32>>()) as u64)
+        .sum();
+    let packed_resident = store.resident_bytes() + lut_bytes;
+    obs::memory::set_resident("serve.packed_store", packed_resident);
+
+    let threads = beacon_ptq::util::pool::resolve_threads(0);
+    let mut latencies = Vec::with_capacity(requests);
+    let mut request_ns = Hist::default();
+    let mut packed_out_probe = Vec::new();
+    let t_all = Instant::now();
+    for r in 0..requests {
+        let x = request_batch(r);
+        let span = obs::span_args("serve", || {
+            (
+                format!("serve.request[{r}]"),
+                vec![("batch", BATCH.to_string())],
+            )
+        });
+        let t = Instant::now();
+        let mut out = Matrix::zeros(BATCH, NP);
+        for (l, layer) in store.layers.iter().enumerate() {
+            let cols = layer.kernel_cols(&luts[l]);
+            let y = packed_gemm(&cols, &x, threads);
+            for (o, v) in out.data.iter_mut().zip(&y.data) {
+                *o += v;
+            }
+        }
+        let secs = span.finish();
+        request_ns.record((secs * 1e9) as u64);
+        latencies.push(t.elapsed().as_secs_f64() * 1e3);
+        if r == 0 {
+            packed_out_probe = out.data.clone();
+        }
+    }
+    let wall = t_all.elapsed().as_secs_f64();
+    let packed_peak = obs::memory::peak_bytes().saturating_sub(live0);
+    obs::merge_hist("serve.request_ns", request_ns);
+
+    // both serving paths share the 4-lane dot order: bit-identical
+    assert_eq!(f32_out_probe.len(), packed_out_probe.len());
+    for (a, b) in f32_out_probe.iter().zip(&packed_out_probe) {
+        assert_eq!(a.to_bits(), b.to_bits(), "f32 vs fused serving diverged");
+    }
+
+    // fused packed_matvec ≡ unpack-then-matvec, bit for bit, at 1 and 4
+    // threads (the ISSUE's kernel-correctness contract)
+    let mut g = Gen { rng: SplitMix64::new(0xB17) };
+    let xv = g.vec_normal(N, 1.0);
+    for layer in &store.layers {
+        let luts = layer.luts();
+        let cols = layer.kernel_cols(&luts);
+        // reference: unpacked channels as matrix rows → matvec
+        let rows: Vec<Vec<f64>> = layer
+            .channels
+            .iter()
+            .map(|c| {
+                unpack_channel(c, layer.width)
+                    .into_iter()
+                    .map(f64::from)
+                    .collect()
+            })
+            .collect();
+        let row_refs: Vec<&[f64]> = rows.iter().map(Vec::as_slice).collect();
+        let wt = Matrix::from_rows(&row_refs);
+        let want = wt.matvec(&xv);
+        let fused1 = packed_matvec(&cols, &xv);
+        let fused4 = packed_matvec_threads(&cols, &xv, 4);
+        for j in 0..NP {
+            assert_eq!(
+                want[j].to_bits(),
+                fused1[j].to_bits(),
+                "{}: fused t=1 diverged at channel {j}",
+                layer.name
+            );
+            assert_eq!(
+                want[j].to_bits(),
+                fused4[j].to_bits(),
+                "{}: fused t=4 diverged at channel {j}",
+                layer.name
+            );
+        }
+    }
+    println!("{}: fused ≡ unpack-then-matvec at t=1 and t=4", width.label());
+
+    // the storage-ratio caps the ISSUE acceptance criteria pin
+    assert!(
+        (packed_resident as f64) <= cap * f32_resident as f64,
+        "{}: packed resident {} vs f32 {} exceeds cap {cap}",
+        width.label(),
+        packed_resident,
+        f32_resident
+    );
+    assert!(
+        (packed_peak as f64) <= cap * f32_peak as f64,
+        "{}: packed peak {} vs f32 {} exceeds cap {cap}",
+        width.label(),
+        packed_peak,
+        f32_peak
+    );
+
+    latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let p50 = latencies[latencies.len() / 2];
+    let p95 = latencies[(latencies.len() * 95 / 100).min(latencies.len() - 1)];
+    println!(
+        "{}: {} requests ({} rows) in {:.2}s — p50 {:.2} ms, p95 {:.2} ms, \
+         packed/f32 resident {:.2}×, peak {:.2}×\n",
+        width.label(),
+        requests,
+        requests * BATCH,
+        wall,
+        p50,
+        p95,
+        packed_resident as f64 / f32_resident as f64,
+        packed_peak as f64 / f32_peak as f64
+    );
+
+    Ok(WidthResult {
+        label: width.label(),
+        f32_resident,
+        f32_peak,
+        packed_resident,
+        packed_peak,
+        cap,
+        p50_ms: p50,
+        p95_ms: p95,
+    })
 }

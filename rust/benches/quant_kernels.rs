@@ -277,6 +277,77 @@ fn main() {
         });
     }
 
+    // --- fused packed GEMM vs the dense GEMM it replaces (serving path) --
+    // Channels arrive as 2/4-bit streams + dequant LUTs; the fused kernel
+    // expands through the LUT per channel and never materializes the
+    // weight matrix. The dense row times Matrix::matmul over the same
+    // shape — the before-this-PR serving cost.
+    println!("\n== packed GEMM vs dense GEMM (batch 64, 512x256) ==");
+    {
+        use beacon_ptq::linalg::{packed_gemm, PackedCol};
+        use beacon_ptq::quant::packing::{
+            dequant_lut, try_pack_channel, PackedChannel,
+        };
+        let (gb, gn, gnp) = (64usize, 512usize, 256usize);
+        let mut g = Gen { rng: SplitMix64::new(88) };
+        let gx = Matrix::from_vec(gb, gn, g.vec_normal(gb * gn, 1.0));
+        for &bits in &[BitWidth::B2, BitWidth::B4] {
+            let a = alphabet(bits);
+            let packed: Vec<PackedChannel> = (0..gnp)
+                .map(|_| {
+                    let codes: Vec<f64> =
+                        (0..gn).map(|_| *g.pick(&a)).collect();
+                    try_pack_channel(&codes, 0.1, 0.0, bits).unwrap()
+                })
+                .collect();
+            let luts: Vec<Vec<f32>> =
+                packed.iter().map(|p| dequant_lut(p, bits)).collect();
+            let cols: Vec<PackedCol> = packed
+                .iter()
+                .zip(&luts)
+                .map(|(p, lut)| PackedCol {
+                    bits: p.bits,
+                    len: p.len,
+                    words: &p.words,
+                    lut,
+                })
+                .collect();
+            for &threads in &[1usize, 4] {
+                let r = bench(
+                    &format!(
+                        "packed_gemm {gb}x{gn}x{gnp} {} t={threads}",
+                        bits.label()
+                    ),
+                    1,
+                    5,
+                    || {
+                        black_box(packed_gemm(&cols, &gx, threads));
+                    },
+                );
+                recs.push(Rec {
+                    method: "packed-gemm",
+                    bits: bits.label(),
+                    threads,
+                    median_ns: r.median_ns,
+                    ns_per_channel: r.median_ns as f64 / gnp as f64,
+                    chan: None,
+                });
+            }
+        }
+        let wm = Matrix::from_vec(gn, gnp, g.vec_normal(gn * gnp, 0.3));
+        let r = bench(&format!("dense matmul {gb}x{gn}x{gnp} t=1"), 1, 5, || {
+            black_box(gx.matmul(&wm));
+        });
+        recs.push(Rec {
+            method: "dense-gemm",
+            bits: "fp".to_string(),
+            threads: 1,
+            median_ns: r.median_ns,
+            ns_per_channel: r.median_ns as f64 / gnp as f64,
+            chan: None,
+        });
+    }
+
     // --- peak-heap rows: BENCH_memory.json --------------------------------
     // One layer quantize per (method, bits) with the high-water mark
     // re-armed at the section's live level, so each row reports the

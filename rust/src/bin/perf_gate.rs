@@ -26,10 +26,15 @@
 //! The gate also pins the *grid*: a current row absent from the baseline
 //! (`new`) or a baseline row absent from the current record (`missing`)
 //! fails the gate — silent grid drift would otherwise let rows drop out
-//! of enforcement unnoticed. When a bench grid legitimately changes,
-//! rebaseline in the same PR (`--write-baseline` refreshes both
-//! baselines and stamps `host_threads` with the recording machine's
-//! core count).
+//! of enforcement unnoticed. One carve-out: a current row whose *method*
+//! name appears nowhere in the baseline is a freshly landed benchmark
+//! (`new method`) and is treated as an uncalibrated pin instead of a
+//! failure — a PR that adds a kernel should not have to fabricate its
+//! own numbers to keep CI green. New `(bits, threads)` combinations of a
+//! method the baseline already knows still fail. When a bench grid
+//! legitimately changes, rebaseline in the same PR (`--write-baseline`
+//! refreshes both baselines and stamps `host_threads` with the
+//! recording machine's core count).
 
 use std::process::ExitCode;
 
@@ -60,6 +65,9 @@ enum Verdict {
     Faster,
     Regression,
     New,
+    /// The whole *method* is absent from the baseline: a benchmark that
+    /// landed in this PR. Passes the gate as an uncalibrated pin.
+    NewMethod,
     Uncalibrated,
 }
 
@@ -70,6 +78,7 @@ impl Verdict {
             Verdict::Faster => "faster",
             Verdict::Regression => "REGRESSION",
             Verdict::New => "new",
+            Verdict::NewMethod => "new method",
             Verdict::Uncalibrated => "uncalibrated",
         }
     }
@@ -97,12 +106,20 @@ fn compare(
     for cur in current {
         let base = baseline.iter().find(|b| b.key() == cur.key());
         let cmp = match base {
-            None => Comparison {
-                current: cur.clone(),
-                baseline: None,
-                delta_pct: None,
-                verdict: Verdict::New,
-            },
+            None => {
+                let method_known =
+                    baseline.iter().any(|b| b.method == cur.method);
+                Comparison {
+                    current: cur.clone(),
+                    baseline: None,
+                    delta_pct: None,
+                    verdict: if method_known {
+                        Verdict::New
+                    } else {
+                        Verdict::NewMethod
+                    },
+                }
+            }
             Some(b) if b.value <= 0.0 => Comparison {
                 current: cur.clone(),
                 baseline: Some(b.value),
@@ -239,7 +256,8 @@ fn gate_section(
     let count = |v: Verdict| cmps.iter().filter(|c| c.verdict == v).count();
     let regressions = count(Verdict::Regression);
     let new_rows = count(Verdict::New);
-    let uncalibrated = count(Verdict::Uncalibrated);
+    let new_methods = count(Verdict::NewMethod);
+    let uncalibrated = count(Verdict::Uncalibrated) + new_methods;
     let enforced = cmps.len() - new_rows - uncalibrated;
     println!(
         "{label} calibration: {enforced} enforced row(s), {uncalibrated} \
@@ -252,6 +270,13 @@ fn gate_section(
         println!(
             "FAIL: {new_rows} {label} bench row(s) missing from the baseline grid — \
              rebaseline with: cargo run --bin perf_gate -- --write-baseline"
+        );
+    }
+    if new_methods > 0 {
+        println!(
+            "note: {new_methods} {label} row(s) from method(s) the baseline has \
+             never seen — passing as uncalibrated; add placeholder rows or \
+             rebaseline to pin them"
         );
     }
     if !missing.is_empty() {
@@ -365,7 +390,8 @@ fn run() -> Result<bool> {
 
 /// The gate decision: no regressions and no grid drift in either
 /// direction (every current row is pinned by the baseline, every
-/// baseline row is still measured).
+/// baseline row is still measured). Rows from methods the baseline has
+/// never seen (`NewMethod`) are uncalibrated pins, not drift.
 fn gate_passes(cmps: &[Comparison], missing: &[PerfRow]) -> bool {
     missing.is_empty()
         && !cmps
@@ -420,13 +446,42 @@ mod tests {
         let cur = vec![
             row("beacon", "2-bit", 1, 60.0),
             row("rtn", "2-bit", 1, 40.0),
-            row("mixed-plan", "2+4", 2, 9.0),
+            // known method, unseen (bits, threads) combo: hard failure
+            row("beacon", "2+4", 2, 9.0),
         ];
         let (cmps, missing) = compare(&base, &cur, 25.0);
         assert_eq!(cmps[0].verdict, Verdict::Faster);
         assert_eq!(cmps[1].verdict, Verdict::Uncalibrated);
         assert_eq!(cmps[2].verdict, Verdict::New);
         assert_eq!(missing, vec![row("gptq", "2-bit", 1, 50.0)]);
+    }
+
+    #[test]
+    fn unseen_method_is_uncalibrated_pin_not_drift() {
+        let base = vec![row("beacon", "2-bit", 1, 100.0)];
+        let cur = vec![
+            row("beacon", "2-bit", 1, 101.0),
+            // a benchmark that landed in this PR: no baseline row carries
+            // its method name anywhere, so it passes as an uncalibrated pin
+            row("packed-gemm", "4-bit", 1, 12.0),
+            row("packed-gemm", "4-bit", 4, 4.0),
+        ];
+        let (cmps, missing) = compare(&base, &cur, 25.0);
+        assert_eq!(cmps[1].verdict, Verdict::NewMethod);
+        assert_eq!(cmps[2].verdict, Verdict::NewMethod);
+        assert!(missing.is_empty());
+        assert!(gate_passes(&cmps, &missing));
+        // but once the baseline knows the method, any unseen combo of it
+        // is grid drift again
+        let base = vec![row("packed-gemm", "4-bit", 1, 0.0)];
+        let cur = vec![
+            row("packed-gemm", "4-bit", 1, 12.0),
+            row("packed-gemm", "2-bit", 1, 8.0),
+        ];
+        let (cmps, missing) = compare(&base, &cur, 25.0);
+        assert_eq!(cmps[0].verdict, Verdict::Uncalibrated);
+        assert_eq!(cmps[1].verdict, Verdict::New);
+        assert!(!gate_passes(&cmps, &missing));
     }
 
     #[test]
@@ -446,9 +501,11 @@ mod tests {
         let cur = vec![row("beacon", "2-bit", 1, 101.0), row("rtn", "2-bit", 1, 55.0)];
         let (cmps, missing) = compare(&base, &cur, 25.0);
         assert!(gate_passes(&cmps, &missing));
-        // current grew a row the baseline does not pin -> fail
+        // current grew a combo of a known method the baseline does not
+        // pin -> fail (an entirely unknown method would pass; see
+        // unseen_method_is_uncalibrated_pin_not_drift)
         let mut grown = cur.clone();
-        grown.push(row("comq", "2-bit", 1, 70.0));
+        grown.push(row("beacon", "4-bit", 1, 70.0));
         let (cmps, missing) = compare(&base, &grown, 25.0);
         assert!(!gate_passes(&cmps, &missing));
         // current dropped a baseline row -> fail

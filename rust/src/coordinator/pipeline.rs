@@ -32,7 +32,7 @@ use crate::config::{Method, QuantConfig, QuantPlan, RecapturePolicy, SearchSpace
 use crate::data::Dataset;
 use crate::linalg::{qr_factor, Matrix};
 use crate::model::spec::param_spec;
-use crate::model::WeightStore;
+use crate::model::{PackedLayer, PackedStore, WeightStore};
 use crate::quant::alphabet::{alphabet, BitWidth};
 use crate::quant::beacon::BeaconOpts;
 use crate::quant::engine::{self, LayerCtx, LayerQuant, Quantizer};
@@ -519,6 +519,27 @@ impl Pipeline {
         &mut self,
         plan: &QuantPlan,
     ) -> Result<(QuantReport, WeightStore)> {
+        let (report, work, _) = self.quantize_full(plan, false)?;
+        Ok((report, work))
+    }
+
+    /// [`Pipeline::quantize_with_weights`] that additionally captures the
+    /// per-layer codes as a [`PackedStore`] — the deployable low-bit
+    /// checkpoint (`--save-packed`). `None` when any layer's codes fall
+    /// off the storage grid (an experimental method emitting raw values):
+    /// packing degrades gracefully rather than shipping a partial store.
+    pub fn quantize_packed(
+        &mut self,
+        plan: &QuantPlan,
+    ) -> Result<(QuantReport, WeightStore, Option<PackedStore>)> {
+        self.quantize_full(plan, true)
+    }
+
+    fn quantize_full(
+        &mut self,
+        plan: &QuantPlan,
+        want_packed: bool,
+    ) -> Result<(QuantReport, WeightStore, Option<PackedStore>)> {
         let quantizable = self.artifacts.manifest.quantizable.clone();
         anyhow::ensure!(
             plan.assignments.len() == quantizable.len(),
@@ -569,6 +590,25 @@ impl Pipeline {
         // packed-footprint accounting is traced-runs-only: it walks
         // every code, so the untraced hot path skips it entirely
         let mut packed_acc = crate::obs::enabled().then(PackedAccum::default);
+        // deployable packed checkpoint: one PackedLayer per quantized
+        // layer; any off-grid channel voids the whole store
+        let mut packed_layers: Option<Vec<PackedLayer>> =
+            want_packed.then(Vec::new);
+        fn pack_into(
+            packed: &mut Option<Vec<PackedLayer>>,
+            lname: &str,
+            lq: &LayerQuant,
+            bits: BitWidth,
+        ) {
+            if let Some(layers) = packed {
+                match PackedLayer::pack(
+                    lname, &lq.codes, &lq.scales, &lq.offsets, bits,
+                ) {
+                    Some(l) => layers.push(l),
+                    None => *packed = None,
+                }
+            }
+        }
 
         if sched.layer_threads > 1 {
             // independent layers: every layer quantizes the FP weights
@@ -599,6 +639,12 @@ impl Pipeline {
                 if let Some(acc) = packed_acc.as_mut() {
                     acc.add_layer(&lq, plan.assignments[li].bits);
                 }
+                pack_into(
+                    &mut packed_layers,
+                    lname,
+                    &lq,
+                    plan.assignments[li].bits,
+                );
                 work.set_matrix(lname, &lq.dequant);
             }
         } else {
@@ -637,10 +683,23 @@ impl Pipeline {
                 if let Some(acc) = packed_acc.as_mut() {
                     acc.add_layer(&lq, plan.assignments[li].bits);
                 }
+                pack_into(
+                    &mut packed_layers,
+                    lname,
+                    &lq,
+                    plan.assignments[li].bits,
+                );
                 work.set_matrix(lname, &lq.dequant);
             }
         }
         drop(quantizers);
+        let packed_store = packed_layers.map(|layers| PackedStore { layers });
+        if let Some(ps) = &packed_store {
+            crate::obs::memory::set_resident(
+                "quant.packed_store",
+                ps.resident_bytes(),
+            );
+        }
         let packed = packed_acc.and_then(PackedAccum::finish);
         if let Some(pf) = &packed {
             crate::obs::memory::set_resident(
@@ -713,6 +772,7 @@ impl Pipeline {
                 memory,
             },
             work,
+            packed_store,
         ))
     }
 }

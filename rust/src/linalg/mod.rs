@@ -4,7 +4,12 @@
 //! stay in Rust and stay profileable.
 
 pub mod matrix;
+pub mod packed_gemm;
 pub mod qr;
 
 pub use matrix::Matrix;
+pub use packed_gemm::{
+    expand_channel, packed_dot, packed_gemm, packed_matvec,
+    packed_matvec_threads, PackedCol,
+};
 pub use qr::{cholesky_lower, qr_factor, QrFactors};

@@ -1,0 +1,385 @@
+//! Fused unpack–dequant–GEMM over bit-packed weight channels: the
+//! serving-time compute path that never materializes an f32 (or f64)
+//! weight matrix.
+//!
+//! A packed channel arrives as a little-endian bit stream of
+//! `bits`-bit indices plus a per-channel dequant LUT
+//! (`lut[k] = scale·v(k) + offset`, built by
+//! `quant::packing::dequant_lut` — the LUT entries are the *exact* f32
+//! values `unpack_channel` would produce). The kernel walks the stream
+//! one 64-bit word at a time through a [`BitCursor`], expands each
+//! index through the LUT, and FMAs straight into the output
+//! accumulators.
+//!
+//! Determinism contract, matching the rest of the crate:
+//!
+//! * [`packed_dot`] replicates [`super::matrix::dot`]'s 4-lane
+//!   accumulation order exactly, so a fused dot is **bit-identical** to
+//!   `dot(&expanded, x)` where `expanded[i] = f64::from(lut[idx_i])` —
+//!   i.e. to unpack-then-matvec on the LUT values.
+//! * All channel fan-out goes through
+//!   [`crate::util::pool::par_map_labeled`] with index-order gather, so
+//!   results are bit-identical at any thread count.
+//!
+//! Memory contract: [`packed_gemm`] is blocked channel-at-a-time — each
+//! channel's codes are expanded once into a per-call scratch of `n`
+//! f64s (amortized over every batch row) and the scratch is the *only*
+//! transient the kernel allocates. Peak extra heap is one channel, not
+//! one weight matrix.
+
+use super::matrix::{dot, Matrix};
+use crate::util::pool;
+
+/// One packed weight channel as the kernel consumes it: a borrowed view
+/// of the bit-stream words plus the channel's dequant LUT
+/// (`lut.len() == 1 << bits`, so any index the stream can encode is in
+/// range).
+#[derive(Debug, Clone, Copy)]
+pub struct PackedCol<'a> {
+    /// storage bits per element (2/3/4 for the supported grids)
+    pub bits: u32,
+    /// number of packed elements
+    pub len: usize,
+    /// little-endian bit stream, `bits` bits per element
+    pub words: &'a [u64],
+    /// `lut[k]` = dequantized f32 value of index `k`
+    pub lut: &'a [f32],
+}
+
+impl PackedCol<'_> {
+    fn validate(&self) {
+        debug_assert!(self.bits >= 1 && self.bits <= 16, "bits {}", self.bits);
+        debug_assert_eq!(self.lut.len(), 1usize << self.bits, "LUT size");
+        debug_assert!(
+            self.words.len() * 64 >= self.len * self.bits as usize,
+            "bit stream too short: {} words for {}x{} bits",
+            self.words.len(),
+            self.len,
+            self.bits
+        );
+    }
+}
+
+/// Sequential reader over a packed index stream: pulls one 64-bit word
+/// at a time and hands out `bits`-bit indices, merging across word
+/// boundaries (3-bit elements straddle words every 64/gcd(3,64)
+/// elements).
+struct BitCursor<'a> {
+    words: &'a [u64],
+    bits: usize,
+    mask: u64,
+    /// bottom `have` bits are the next unconsumed stream bits
+    acc: u64,
+    have: usize,
+    /// next word to pull
+    wi: usize,
+}
+
+impl<'a> BitCursor<'a> {
+    fn new(col: &PackedCol<'a>) -> BitCursor<'a> {
+        let bits = col.bits as usize;
+        BitCursor {
+            words: col.words,
+            bits,
+            mask: (1u64 << bits) - 1,
+            acc: 0,
+            have: 0,
+            wi: 0,
+        }
+    }
+
+    /// The next index in the stream. Caller must not read past the
+    /// element count the stream was packed with.
+    #[inline]
+    fn next_idx(&mut self) -> usize {
+        if self.have < self.bits {
+            // merge the tail of `acc` with the head of the next word
+            let next = self.words[self.wi];
+            self.wi += 1;
+            let idx = (self.acc | (next << self.have)) & self.mask;
+            let used = self.bits - self.have;
+            self.acc = next >> used;
+            self.have = 64 - used;
+            idx as usize
+        } else {
+            let idx = self.acc & self.mask;
+            self.acc >>= self.bits;
+            self.have -= self.bits;
+            idx as usize
+        }
+    }
+}
+
+/// Expand a packed channel into dequantized f64 values
+/// (`out[i] = f64::from(lut[idx_i])`). `out.len()` must equal
+/// `col.len`. This is the scalar reference twin of the fused paths —
+/// and the block primitive [`packed_gemm`] amortizes over batch rows.
+pub fn expand_channel(col: &PackedCol, out: &mut [f64]) {
+    col.validate();
+    assert_eq!(out.len(), col.len, "expand_channel length mismatch");
+    let mut cur = BitCursor::new(col);
+    for o in out.iter_mut() {
+        *o = f64::from(col.lut[cur.next_idx()]);
+    }
+}
+
+/// Fused dot product of `x` with a packed channel: walks the bit
+/// stream, expands through the LUT, and accumulates with exactly
+/// [`dot`]'s 4-lane order — bit-identical to
+/// `dot(&expanded, x)` without materializing `expanded`.
+pub fn packed_dot(col: &PackedCol, x: &[f64]) -> f64 {
+    col.validate();
+    assert_eq!(x.len(), col.len, "packed_dot length mismatch");
+    let n = col.len;
+    let mut cur = BitCursor::new(col);
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
+    for c in 0..chunks {
+        let i = c * 4;
+        s0 += f64::from(col.lut[cur.next_idx()]) * x[i];
+        s1 += f64::from(col.lut[cur.next_idx()]) * x[i + 1];
+        s2 += f64::from(col.lut[cur.next_idx()]) * x[i + 2];
+        s3 += f64::from(col.lut[cur.next_idx()]) * x[i + 3];
+    }
+    let mut s = s0 + s1 + s2 + s3;
+    for i in chunks * 4..n {
+        s += f64::from(col.lut[cur.next_idx()]) * x[i];
+    }
+    s
+}
+
+/// `y = Wᵀx` over packed channels (`y[j] = ⟨channel j, x⟩`), fully
+/// fused — no weight values are ever materialized. Serial on the
+/// channel axis; see [`packed_matvec_threads`] for the fanned form.
+pub fn packed_matvec(cols: &[PackedCol], x: &[f64]) -> Vec<f64> {
+    cols.iter().map(|c| packed_dot(c, x)).collect()
+}
+
+/// [`packed_matvec`] with the channel axis fanned over `threads`
+/// workers; index-order gather keeps the output bit-identical to the
+/// serial path at any thread count.
+pub fn packed_matvec_threads(
+    cols: &[PackedCol],
+    x: &[f64],
+    threads: usize,
+) -> Vec<f64> {
+    if threads <= 1 {
+        return packed_matvec(cols, x);
+    }
+    pool::par_map_labeled("linalg.packed_matvec", cols.len(), threads, |j| {
+        packed_dot(&cols[j], x)
+    })
+}
+
+/// Batched fused GEMM: `out = X · W` where `X` is m×n (rows are
+/// requests) and `W`'s n-element columns arrive packed. Blocked
+/// channel-at-a-time: each channel is expanded once into a scratch of
+/// `n` f64s and reused across all m rows, so the unpack cost is
+/// amortized over the batch and the only transient allocation is one
+/// channel — never a weight matrix. Row dots use [`dot`], so every
+/// output element is bit-identical to unpack-then-`matmul`-by-dots;
+/// the channel fan gathers in index order (thread-count invariant).
+pub fn packed_gemm(cols: &[PackedCol], x: &Matrix, threads: usize) -> Matrix {
+    let (m, n) = (x.rows, x.cols);
+    let np = cols.len();
+    for c in cols {
+        assert_eq!(c.len, n, "packed_gemm: channel len != x.cols");
+    }
+    let columns: Vec<Vec<f64>> =
+        pool::par_map_labeled("linalg.packed_gemm", np, threads.max(1), |j| {
+            let mut scratch = vec![0.0f64; n];
+            expand_channel(&cols[j], &mut scratch);
+            (0..m).map(|r| dot(x.row(r), &scratch)).collect()
+        });
+    let mut out = Matrix::zeros(m, np);
+    for (j, col) in columns.iter().enumerate() {
+        for r in 0..m {
+            out[(r, j)] = col[r];
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::rng::SplitMix64;
+    use crate::quant::alphabet::{alphabet, BitWidth};
+    use crate::quant::packing::{dequant_lut, try_pack_channel, PackedChannel};
+    use crate::util::prop::Gen;
+
+    /// Pack a pseudo-random channel of `n` alphabet values at `width`.
+    fn packed_case(
+        seed: u64,
+        n: usize,
+        width: BitWidth,
+    ) -> (PackedChannel, Vec<f32>) {
+        let alph = alphabet(width);
+        let mut g = Gen { rng: SplitMix64::new(seed) };
+        let codes: Vec<f64> = (0..n).map(|_| *g.pick(&alph)).collect();
+        let scale = g.f64_in(0.05, 1.5);
+        let offset = g.f64_in(-0.3, 0.3);
+        let p = try_pack_channel(&codes, scale, offset, width).unwrap();
+        let lut = dequant_lut(&p, width);
+        (p, lut)
+    }
+
+    fn col<'a>(p: &'a PackedChannel, lut: &'a [f32]) -> PackedCol<'a> {
+        PackedCol { bits: p.bits, len: p.len, words: &p.words, lut }
+    }
+
+    #[test]
+    fn expand_matches_unpack_channel_bitwise() {
+        for (width, n) in [
+            (BitWidth::B2, 70usize),
+            (BitWidth::B3, 70),
+            (BitWidth::B4, 70),
+            (BitWidth::B258, 33),
+            (BitWidth::B158, 5),
+        ] {
+            let (p, lut) = packed_case(11, n, width);
+            let mut out = vec![0.0f64; n];
+            expand_channel(&col(&p, &lut), &mut out);
+            let reference =
+                crate::quant::packing::unpack_channel(&p, width);
+            for (i, (a, b)) in out.iter().zip(&reference).enumerate() {
+                assert_eq!(
+                    a.to_bits(),
+                    f64::from(*b).to_bits(),
+                    "{width:?} elem {i}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn packed_dot_bit_identical_to_dot_of_expansion() {
+        for (width, n) in [
+            (BitWidth::B2, 257usize), // ragged tail + odd length
+            (BitWidth::B3, 129),
+            (BitWidth::B4, 64),
+        ] {
+            let (p, lut) = packed_case(23, n, width);
+            let pc = col(&p, &lut);
+            let mut expanded = vec![0.0f64; n];
+            expand_channel(&pc, &mut expanded);
+            let mut g = Gen { rng: SplitMix64::new(5) };
+            let x = g.vec_normal(n, 1.0);
+            let fused = packed_dot(&pc, &x);
+            let reference = dot(&expanded, &x);
+            assert_eq!(
+                fused.to_bits(),
+                reference.to_bits(),
+                "{width:?} n={n}"
+            );
+        }
+    }
+
+    #[test]
+    fn matvec_thread_invariant_and_matches_reference() {
+        let width = BitWidth::B2;
+        let n = 96;
+        let np = 17;
+        let packed: Vec<(PackedChannel, Vec<f32>)> =
+            (0..np).map(|j| packed_case(100 + j as u64, n, width)).collect();
+        let cols: Vec<PackedCol> =
+            packed.iter().map(|(p, lut)| col(p, lut)).collect();
+        let mut g = Gen { rng: SplitMix64::new(9) };
+        let x = g.vec_normal(n, 1.0);
+
+        // reference: unpack every channel, dot per channel
+        let want: Vec<f64> = cols
+            .iter()
+            .map(|c| {
+                let mut e = vec![0.0f64; n];
+                expand_channel(c, &mut e);
+                dot(&e, &x)
+            })
+            .collect();
+
+        let serial = packed_matvec(&cols, &x);
+        let fanned = packed_matvec_threads(&cols, &x, 4);
+        for j in 0..np {
+            assert_eq!(serial[j].to_bits(), want[j].to_bits(), "serial {j}");
+            assert_eq!(fanned[j].to_bits(), want[j].to_bits(), "t=4 {j}");
+        }
+    }
+
+    #[test]
+    fn gemm_matches_matmul_of_unpacked_weights() {
+        let width = BitWidth::B4;
+        let (m, n, np) = (7usize, 48usize, 13usize);
+        let packed: Vec<(PackedChannel, Vec<f32>)> =
+            (0..np).map(|j| packed_case(300 + j as u64, n, width)).collect();
+        let cols: Vec<PackedCol> =
+            packed.iter().map(|(p, lut)| col(p, lut)).collect();
+        let mut g = Gen { rng: SplitMix64::new(77) };
+        let x = Matrix::from_vec(m, n, g.vec_normal(m * n, 1.0));
+
+        // reference: materialize W (n×np) and multiply
+        let mut w = Matrix::zeros(n, np);
+        for (j, c) in cols.iter().enumerate() {
+            let mut e = vec![0.0f64; n];
+            expand_channel(c, &mut e);
+            for i in 0..n {
+                w[(i, j)] = e[i];
+            }
+        }
+        let want = x.matmul(&w);
+
+        for threads in [1usize, 4] {
+            let got = packed_gemm(&cols, &x, threads);
+            assert_eq!((got.rows, got.cols), (m, np));
+            for i in 0..m {
+                for j in 0..np {
+                    let (a, b) = (got[(i, j)], want[(i, j)]);
+                    assert!(
+                        (a - b).abs() <= 1e-12 * b.abs().max(1.0),
+                        "t={threads} ({i},{j}): {a} vs {b}"
+                    );
+                }
+            }
+        }
+        // and the two thread counts are bit-identical to each other
+        let t1 = packed_gemm(&cols, &x, 1);
+        let t4 = packed_gemm(&cols, &x, 4);
+        for (a, b) in t1.data.iter().zip(&t4.data) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn gemm_single_row_equals_matvec() {
+        let width = BitWidth::B3;
+        let n = 70;
+        let np = 5;
+        let packed: Vec<(PackedChannel, Vec<f32>)> =
+            (0..np).map(|j| packed_case(500 + j as u64, n, width)).collect();
+        let cols: Vec<PackedCol> =
+            packed.iter().map(|(p, lut)| col(p, lut)).collect();
+        let mut g = Gen { rng: SplitMix64::new(3) };
+        let xv = g.vec_normal(n, 1.0);
+        let x = Matrix::from_vec(1, n, xv.clone());
+        let gemm = packed_gemm(&cols, &x, 1);
+        let mv = packed_matvec(&cols, &xv);
+        for j in 0..np {
+            assert_eq!(gemm[(0, j)].to_bits(), mv[j].to_bits(), "{j}");
+        }
+    }
+
+    #[test]
+    fn cursor_handles_word_straddles() {
+        // 3-bit stream: element 21 straddles words 0/1 (bits 63..66)
+        let width = BitWidth::B3;
+        let alph = alphabet(width);
+        let want: Vec<usize> = (0..130).map(|i| (i * 5 + 2) % 8).collect();
+        let codes: Vec<f64> = want.iter().map(|&k| alph[k]).collect();
+        let p = try_pack_channel(&codes, 1.0, 0.0, width).unwrap();
+        let lut = dequant_lut(&p, width);
+        let pc = col(&p, &lut);
+        let mut cur = BitCursor::new(&pc);
+        for (i, &k) in want.iter().enumerate() {
+            assert_eq!(cur.next_idx(), k, "elem {i}");
+        }
+    }
+}

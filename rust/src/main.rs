@@ -161,8 +161,26 @@ fn dispatch(args: &Args) -> Result<()> {
         }
         "eval" => {
             let mut pipe = pipeline(&args)?;
-            let top1 = pipe.fp_top1()?;
-            println!("FP top-1: {}%", pct(top1));
+            let fp = pipe.fp_top1()?;
+            println!("FP top-1: {}%", pct(fp));
+            if let Some(path) = args.get("load-packed") {
+                let ps = beacon_ptq::model::PackedStore::load(
+                    std::path::Path::new(&path),
+                )?;
+                let mut store = pipe.weights_fp.clone();
+                for l in &ps.layers {
+                    store.set_matrix(&l.name, &l.unpack_matrix());
+                }
+                println!(
+                    "packed checkpoint {path}: {} layers, {} resident bytes",
+                    ps.layers.len(),
+                    ps.resident_bytes()
+                );
+                let top1 =
+                    beacon_ptq::coordinator::eval::top1(&pipe, &store, 0)?;
+                println!("packed top-1: {}%", pct(top1));
+                println!("accuracy drop: {:.2}%", (fp - top1) * 100.0);
+            }
             Ok(())
         }
         "quantize" => {
@@ -196,7 +214,13 @@ fn dispatch(args: &Args) -> Result<()> {
                 std::fs::write(out, plan.to_manifest())?;
                 println!("saved resolved plan manifest to {out}");
             }
-            let (mut report, store) = pipe.quantize_with_weights(&plan)?;
+            let want_packed = args.get("save-packed").is_some();
+            let (mut report, store, packed) = if want_packed {
+                pipe.quantize_packed(&plan)?
+            } else {
+                let (r, s) = pipe.quantize_with_weights(&plan)?;
+                (r, s, None)
+            };
             report.planner = searched;
             println!("FP top-1      : {}%", pct(report.fp_top1));
             println!("quant top-1   : {}%", pct(report.top1));
@@ -222,6 +246,29 @@ fn dispatch(args: &Args) -> Result<()> {
             if let Some(out) = args.get("save") {
                 store.save(std::path::Path::new(out))?;
                 println!("saved quantized weights to {out}");
+            }
+            if let Some(out) = args.get("save-packed") {
+                match packed {
+                    Some(ps) => {
+                        ps.save(std::path::Path::new(&out))?;
+                        let f32_bytes: u64 = ps
+                            .layers
+                            .iter()
+                            .map(|l| (l.rows * l.cols() * 4) as u64)
+                            .sum();
+                        println!(
+                            "saved packed checkpoint to {out} \
+                             ({} resident bytes vs {} as f32, {:.2}×)",
+                            ps.resident_bytes(),
+                            f32_bytes,
+                            ps.resident_bytes() as f64 / f32_bytes as f64
+                        );
+                    }
+                    None => bail!(
+                        "--save-packed: a layer's codes fell off the storage \
+                         grid, no packed checkpoint written"
+                    ),
+                }
             }
             Ok(())
         }
@@ -340,6 +387,8 @@ usage: beacon <info|eval|quantize|plan|budget-sweep|table1|table2|convergence|ab
 flags: --artifacts DIR --model NAME --backend pjrt|native --config FILE
        --method beacon|gptq|rtn|comq --bits B --loops K --ec --centering
        --ln_tune --threads N --save OUT.bin --save-plan PLAN.cfg --verbose
+       --save-packed OUT.bpk  write the low-bit BPK1 packed checkpoint
+       eval --load-packed F.bpk  evaluate a packed checkpoint end-to-end
        --trace [FILE]  write a Chrome trace (Perfetto / chrome://tracing)
                        of the run, with a heap counter track; BEACON_TRACE=FILE
                        does the same. --verbose adds metrics + memory tables

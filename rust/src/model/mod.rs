@@ -2,8 +2,10 @@
 //! `python/compile/common.py` (the parameter-ordering ABI with the AOT
 //! artifacts) and the WTS1 tensor-bundle store.
 
+pub mod packed_store;
 pub mod spec;
 pub mod store;
 
+pub use packed_store::{PackedLayer, PackedStore};
 pub use spec::{ln_param_names, param_spec, quantizable_layers, ParamSpec, ViTConfig};
 pub use store::{TensorBundle, WeightStore};

@@ -1,0 +1,529 @@
+//! BPK1 packed-checkpoint reader/writer: the on-disk and in-memory
+//! format for quantized weights after PR 8 — per-channel bit streams
+//! plus dequant metadata, never f32 matrices. See
+//! `docs/PACKED_FORMAT.md` for the byte-level layout; the short form:
+//!
+//! ```text
+//! magic "BPK1" | version u32 | layer_count u32
+//! per layer:
+//!   name_len u32 | name bytes | rows u32 | cols u32
+//!   width_hundredths u32 | channel_count u32 (== cols)
+//! per channel:
+//!   bits u8 | convention u8 | len u32 | scale f32 | offset f32
+//!   nwords u32 (== ceil(len·bits/64)) | words u64[nwords]
+//! ```
+//!
+//! All integers and floats little-endian. `save` → `load` → `save` is
+//! byte-identical: packing zero-initializes the bit-stream words, so
+//! even the dead bits of a ragged final word round-trip exactly.
+
+use std::fs::File;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::linalg::{Matrix, PackedCol};
+use crate::quant::alphabet::BitWidth;
+use crate::quant::packing::{
+    dequant_lut, try_pack_channel, unpack_channel, CodeConvention,
+    PackedChannel,
+};
+
+pub const PACKED_MAGIC: &[u8; 4] = b"BPK1";
+pub const PACKED_VERSION: u32 = 1;
+
+/// One quantized layer: the weight matrix's columns as packed channels.
+/// `rows` is the channel length (W is rows×cols, quantized per column).
+#[derive(Debug, Clone)]
+pub struct PackedLayer {
+    pub name: String,
+    pub rows: usize,
+    pub width: BitWidth,
+    pub channels: Vec<PackedChannel>,
+}
+
+impl PackedLayer {
+    /// Pack a layer from quantizer output: column-major `codes` (one
+    /// inner vec per channel, either convention) with per-channel
+    /// scale/offset. `None` when any channel has off-grid codes.
+    pub fn pack(
+        name: &str,
+        codes: &[Vec<f64>],
+        scales: &[f64],
+        offsets: &[f64],
+        width: BitWidth,
+    ) -> Option<PackedLayer> {
+        assert_eq!(codes.len(), scales.len(), "{name}: scales per channel");
+        assert_eq!(codes.len(), offsets.len(), "{name}: offsets per channel");
+        let rows = codes.first().map_or(0, Vec::len);
+        let channels = codes
+            .iter()
+            .zip(scales)
+            .zip(offsets)
+            .map(|((ch, &s), &o)| try_pack_channel(ch, s, o, width))
+            .collect::<Option<Vec<_>>>()?;
+        Some(PackedLayer {
+            name: name.to_string(),
+            rows,
+            width,
+            channels,
+        })
+    }
+
+    pub fn cols(&self) -> usize {
+        self.channels.len()
+    }
+
+    /// Per-channel dequant LUTs — the tables the fused kernel expands
+    /// through. Build once per layer, reuse across requests.
+    pub fn luts(&self) -> Vec<Vec<f32>> {
+        self.channels.iter().map(|c| dequant_lut(c, self.width)).collect()
+    }
+
+    /// Borrow the channels as fused-kernel views over pre-built LUTs
+    /// (from [`PackedLayer::luts`]; must be same length/order).
+    pub fn kernel_cols<'a>(&'a self, luts: &'a [Vec<f32>]) -> Vec<PackedCol<'a>> {
+        assert_eq!(luts.len(), self.channels.len(), "{}: LUT count", self.name);
+        self.channels
+            .iter()
+            .zip(luts)
+            .map(|(c, lut)| PackedCol {
+                bits: c.bits,
+                len: c.len,
+                words: &c.words,
+                lut,
+            })
+            .collect()
+    }
+
+    /// Materialize the dequantized weight matrix (rows×cols). This is
+    /// the *reference/fallback* path — serving uses the fused kernel on
+    /// [`PackedLayer::kernel_cols`] and never calls this.
+    pub fn unpack_matrix(&self) -> Matrix {
+        let (rows, cols) = (self.rows, self.cols());
+        let mut m = Matrix::zeros(rows, cols);
+        for (j, ch) in self.channels.iter().enumerate() {
+            let vals = unpack_channel(ch, self.width);
+            for (i, v) in vals.iter().enumerate() {
+                m[(i, j)] = f64::from(*v);
+            }
+        }
+        m
+    }
+
+    /// Heap footprint (bit-stream words + per-channel struct + name),
+    /// for the resident-bytes registry.
+    pub fn resident_bytes(&self) -> u64 {
+        let chans: usize =
+            self.channels.iter().map(PackedChannel::resident_bytes).sum();
+        (chans + self.name.len()) as u64
+    }
+}
+
+/// Ordered set of packed layers: the quantized checkpoint as shipped.
+#[derive(Debug, Clone, Default)]
+pub struct PackedStore {
+    pub layers: Vec<PackedLayer>,
+}
+
+impl PackedStore {
+    pub fn get(&self, name: &str) -> Option<&PackedLayer> {
+        self.layers.iter().find(|l| l.name == name)
+    }
+
+    /// Summed heap footprint of all layers — compare against
+    /// `WeightStore::resident_bytes` for the storage-ratio assertion.
+    pub fn resident_bytes(&self) -> u64 {
+        self.layers.iter().map(PackedLayer::resident_bytes).sum()
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut w = BufWriter::new(
+            File::create(path).with_context(|| format!("create {path:?}"))?,
+        );
+        w.write_all(PACKED_MAGIC)?;
+        w.write_all(&PACKED_VERSION.to_le_bytes())?;
+        w.write_all(&(self.layers.len() as u32).to_le_bytes())?;
+        for l in &self.layers {
+            w.write_all(&(l.name.len() as u32).to_le_bytes())?;
+            w.write_all(l.name.as_bytes())?;
+            w.write_all(&(l.rows as u32).to_le_bytes())?;
+            w.write_all(&(l.cols() as u32).to_le_bytes())?;
+            w.write_all(&width_hundredths(l.width).to_le_bytes())?;
+            w.write_all(&(l.channels.len() as u32).to_le_bytes())?;
+            for c in &l.channels {
+                w.write_all(&[c.bits as u8, convention_byte(c.convention)])?;
+                w.write_all(&(c.len as u32).to_le_bytes())?;
+                w.write_all(&c.scale.to_le_bytes())?;
+                w.write_all(&c.offset.to_le_bytes())?;
+                w.write_all(&(c.words.len() as u32).to_le_bytes())?;
+                for word in &c.words {
+                    w.write_all(&word.to_le_bytes())?;
+                }
+            }
+        }
+        w.flush()?;
+        if let Ok(md) = std::fs::metadata(path) {
+            crate::obs::counter("io.write_bytes", md.len());
+        }
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<PackedStore> {
+        let mut r = BufReader::new(
+            File::open(path).with_context(|| format!("open {path:?}"))?,
+        );
+        let mut magic = [0u8; 4];
+        r.read_exact(&mut magic)
+            .with_context(|| format!("truncated BPK1 header in {path:?}"))?;
+        if &magic != PACKED_MAGIC {
+            bail!("bad BPK1 magic in {path:?}: {magic:02x?}");
+        }
+        let version = read_u32(&mut r, path, "version")?;
+        if version > PACKED_VERSION {
+            bail!(
+                "unsupported BPK1 version {version} in {path:?} \
+                 (this build reads up to {PACKED_VERSION})"
+            );
+        }
+        let nlayers = read_u32(&mut r, path, "layer count")? as usize;
+        let mut layers = Vec::with_capacity(nlayers);
+        for li in 0..nlayers {
+            let name_len = read_u32(&mut r, path, "name length")? as usize;
+            let mut name = vec![0u8; name_len];
+            r.read_exact(&mut name).with_context(|| {
+                format!("truncated layer {li} name in {path:?}")
+            })?;
+            let name = String::from_utf8(name)
+                .with_context(|| format!("layer {li} name not UTF-8"))?;
+            let rows = read_u32(&mut r, path, "rows")? as usize;
+            let cols = read_u32(&mut r, path, "cols")? as usize;
+            let hundredths = read_u32(&mut r, path, "bit width")?;
+            let width = width_from_hundredths(hundredths).ok_or_else(|| {
+                anyhow::anyhow!(
+                    "layer '{name}': unknown bit width {}.{:02} in {path:?}",
+                    hundredths / 100,
+                    hundredths % 100
+                )
+            })?;
+            let nchan = read_u32(&mut r, path, "channel count")? as usize;
+            if nchan != cols {
+                bail!(
+                    "layer '{name}': channel count {nchan} != cols {cols} \
+                     in {path:?}"
+                );
+            }
+            let mut channels = Vec::with_capacity(nchan);
+            for ci in 0..nchan {
+                let mut head = [0u8; 2];
+                r.read_exact(&mut head).with_context(|| {
+                    format!("truncated channel {ci} of '{name}' in {path:?}")
+                })?;
+                let bits = u32::from(head[0]);
+                if bits == 0 || bits > 16 {
+                    bail!(
+                        "layer '{name}' channel {ci}: bad bit count {bits} \
+                         in {path:?}"
+                    );
+                }
+                let convention = convention_from_byte(head[1]).ok_or_else(
+                    || {
+                        anyhow::anyhow!(
+                            "layer '{name}' channel {ci}: bad convention \
+                             byte {} in {path:?}",
+                            head[1]
+                        )
+                    },
+                )?;
+                let len = read_u32(&mut r, path, "channel length")? as usize;
+                let mut f = [0u8; 4];
+                r.read_exact(&mut f).with_context(|| {
+                    format!("truncated scale of '{name}' in {path:?}")
+                })?;
+                let scale = f32::from_le_bytes(f);
+                r.read_exact(&mut f).with_context(|| {
+                    format!("truncated offset of '{name}' in {path:?}")
+                })?;
+                let offset = f32::from_le_bytes(f);
+                let nwords = read_u32(&mut r, path, "word count")? as usize;
+                let expect = (len * bits as usize + 63) / 64;
+                if nwords != expect {
+                    bail!(
+                        "layer '{name}' channel {ci}: {nwords} words for \
+                         {len}×{bits}-bit stream (want {expect}) in {path:?}"
+                    );
+                }
+                let mut words = vec![0u64; nwords];
+                for (wi, word) in words.iter_mut().enumerate() {
+                    let mut b = [0u8; 8];
+                    r.read_exact(&mut b).with_context(|| {
+                        format!(
+                            "truncated payload at word {wi} of '{name}' \
+                             channel {ci} in {path:?}"
+                        )
+                    })?;
+                    *word = u64::from_le_bytes(b);
+                }
+                if len != rows {
+                    bail!(
+                        "layer '{name}' channel {ci}: length {len} != rows \
+                         {rows} in {path:?}"
+                    );
+                }
+                channels.push(PackedChannel {
+                    bits,
+                    len,
+                    scale,
+                    offset,
+                    convention,
+                    words,
+                });
+            }
+            layers.push(PackedLayer { name, rows, width, channels });
+        }
+        if let Ok(md) = std::fs::metadata(path) {
+            crate::obs::counter("io.read_bytes", md.len());
+        }
+        Ok(PackedStore { layers })
+    }
+}
+
+fn width_hundredths(w: BitWidth) -> u32 {
+    (w.0 * 100.0).round() as u32
+}
+
+fn width_from_hundredths(h: u32) -> Option<BitWidth> {
+    BitWidth::parse(&format!("{}.{:02}", h / 100, h % 100))
+}
+
+fn convention_byte(c: CodeConvention) -> u8 {
+    match c {
+        CodeConvention::Alphabet => 0,
+        CodeConvention::Levels => 1,
+    }
+}
+
+fn convention_from_byte(b: u8) -> Option<CodeConvention> {
+    match b {
+        0 => Some(CodeConvention::Alphabet),
+        1 => Some(CodeConvention::Levels),
+        _ => None,
+    }
+}
+
+fn read_u32<R: Read>(r: &mut R, path: &Path, what: &str) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)
+        .with_context(|| format!("truncated {what} in {path:?}"))?;
+    Ok(u32::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::alphabet::alphabet;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("beacon_ptq_packed_store_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    fn sample_store() -> PackedStore {
+        let mut layers = Vec::new();
+        for (li, (width, rows, cols)) in [
+            (BitWidth::B2, 70usize, 3usize), // ragged tail
+            (BitWidth::B3, 64, 2),           // word straddles
+            (BitWidth::B4, 32, 4),           // exact word fill
+        ]
+        .into_iter()
+        .enumerate()
+        {
+            let alph = alphabet(width);
+            let codes: Vec<Vec<f64>> = (0..cols)
+                .map(|j| {
+                    (0..rows)
+                        .map(|i| alph[(i * 5 + j) % alph.len()])
+                        .collect()
+                })
+                .collect();
+            let scales: Vec<f64> = (0..cols).map(|j| 0.1 + j as f64 * 0.05).collect();
+            let offsets: Vec<f64> = (0..cols).map(|j| j as f64 * 0.01).collect();
+            let layer = PackedLayer::pack(
+                &format!("layer.{li}"),
+                &codes,
+                &scales,
+                &offsets,
+                width,
+            )
+            .unwrap();
+            layers.push(layer);
+        }
+        // one integer-level channel layer (min-max convention)
+        let codes: Vec<Vec<f64>> =
+            vec![(0..48).map(|i| f64::from(i % 8)).collect()];
+        layers.push(
+            PackedLayer::pack("layer.lv", &codes, &[0.5], &[0.25], BitWidth::B3)
+                .unwrap(),
+        );
+        PackedStore { layers }
+    }
+
+    #[test]
+    fn save_load_save_byte_identical() {
+        let store = sample_store();
+        let p1 = tmp("rt1.bpk");
+        let p2 = tmp("rt2.bpk");
+        store.save(&p1).unwrap();
+        let back = PackedStore::load(&p1).unwrap();
+        back.save(&p2).unwrap();
+        let b1 = std::fs::read(&p1).unwrap();
+        let b2 = std::fs::read(&p2).unwrap();
+        assert_eq!(b1, b2, "save→load→save must be byte-identical");
+    }
+
+    #[test]
+    fn roundtrip_preserves_channels_bit_identically() {
+        let store = sample_store();
+        let p = tmp("rt3.bpk");
+        store.save(&p).unwrap();
+        let back = PackedStore::load(&p).unwrap();
+        assert_eq!(back.layers.len(), store.layers.len());
+        for (a, b) in store.layers.iter().zip(&back.layers) {
+            assert_eq!(a.name, b.name);
+            assert_eq!(a.rows, b.rows);
+            assert_eq!(width_hundredths(a.width), width_hundredths(b.width));
+            for (ca, cb) in a.channels.iter().zip(&b.channels) {
+                assert_eq!(ca.bits, cb.bits);
+                assert_eq!(ca.len, cb.len);
+                assert_eq!(ca.convention, cb.convention);
+                assert_eq!(ca.scale.to_bits(), cb.scale.to_bits());
+                assert_eq!(ca.offset.to_bits(), cb.offset.to_bits());
+                assert_eq!(ca.words, cb.words);
+                // dequantized values are bit-identical too
+                let va = unpack_channel(ca, a.width);
+                let vb = unpack_channel(cb, b.width);
+                for (x, y) in va.iter().zip(&vb) {
+                    assert_eq!(x.to_bits(), y.to_bits());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn corrupt_magic_is_structured_error() {
+        let store = sample_store();
+        let p = tmp("bad_magic.bpk");
+        store.save(&p).unwrap();
+        let mut bytes = std::fs::read(&p).unwrap();
+        bytes[0] = b'X';
+        std::fs::write(&p, &bytes).unwrap();
+        let err = PackedStore::load(&p).unwrap_err();
+        assert!(format!("{err:#}").contains("magic"), "{err:#}");
+    }
+
+    #[test]
+    fn future_version_is_structured_error() {
+        let store = sample_store();
+        let p = tmp("future.bpk");
+        store.save(&p).unwrap();
+        let mut bytes = std::fs::read(&p).unwrap();
+        bytes[4..8].copy_from_slice(&99u32.to_le_bytes());
+        std::fs::write(&p, &bytes).unwrap();
+        let err = PackedStore::load(&p).unwrap_err();
+        assert!(
+            format!("{err:#}").contains("unsupported BPK1 version 99"),
+            "{err:#}"
+        );
+    }
+
+    #[test]
+    fn truncated_payload_is_structured_error() {
+        let store = sample_store();
+        let p = tmp("trunc.bpk");
+        store.save(&p).unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+        // chop at several depths: inside header, inside a layer table,
+        // inside a channel's words
+        for cut in [2, 9, 40, bytes.len() - 3] {
+            std::fs::write(&p, &bytes[..cut]).unwrap();
+            let err = PackedStore::load(&p).unwrap_err();
+            assert!(
+                format!("{err:#}").contains("truncated"),
+                "cut {cut}: {err:#}"
+            );
+        }
+    }
+
+    #[test]
+    fn channel_count_mismatch_is_structured_error() {
+        let store = sample_store();
+        let p = tmp("chmm.bpk");
+        store.save(&p).unwrap();
+        let mut bytes = std::fs::read(&p).unwrap();
+        // first layer record starts at offset 12; its fields:
+        // name_len(4) + name(7:"layer.0") + rows(4) + cols(4) +
+        // width(4) → channel_count at 12+4+7+4+4+4 = 35
+        let name_len =
+            u32::from_le_bytes(bytes[12..16].try_into().unwrap()) as usize;
+        let chan_off = 12 + 4 + name_len + 4 + 4 + 4;
+        bytes[chan_off..chan_off + 4].copy_from_slice(&7u32.to_le_bytes());
+        std::fs::write(&p, &bytes).unwrap();
+        let err = PackedStore::load(&p).unwrap_err();
+        assert!(
+            format!("{err:#}").contains("channel count 7"),
+            "{err:#}"
+        );
+    }
+
+    #[test]
+    fn unpack_matrix_matches_channels() {
+        let store = sample_store();
+        let l = &store.layers[0];
+        let m = l.unpack_matrix();
+        assert_eq!((m.rows, m.cols), (l.rows, l.cols()));
+        for (j, ch) in l.channels.iter().enumerate() {
+            let vals = unpack_channel(ch, l.width);
+            for (i, v) in vals.iter().enumerate() {
+                assert_eq!(m[(i, j)], f64::from(*v));
+            }
+        }
+    }
+
+    #[test]
+    fn kernel_cols_expose_streams_and_luts() {
+        let store = sample_store();
+        let l = &store.layers[1];
+        let luts = l.luts();
+        let cols = l.kernel_cols(&luts);
+        assert_eq!(cols.len(), l.cols());
+        for (pc, ch) in cols.iter().zip(&l.channels) {
+            assert_eq!(pc.bits, ch.bits);
+            assert_eq!(pc.len, ch.len);
+            assert_eq!(pc.lut.len(), 1 << ch.bits);
+        }
+    }
+
+    #[test]
+    fn packed_resident_beats_f32() {
+        let store = sample_store();
+        for l in &store.layers {
+            let f32_bytes = (l.rows * l.cols() * 4) as u64;
+            assert!(
+                l.resident_bytes() < f32_bytes,
+                "{}: {} vs {}",
+                l.name,
+                l.resident_bytes(),
+                f32_bytes
+            );
+        }
+    }
+
+    #[test]
+    fn pack_rejects_off_grid_layers() {
+        let codes = vec![vec![0.25f64; 8]];
+        assert!(PackedLayer::pack("x", &codes, &[1.0], &[0.0], BitWidth::B2)
+            .is_none());
+    }
+}

@@ -5,12 +5,29 @@
 
 use super::alphabet::{alphabet, BitWidth};
 
+/// Which value the packed indices decode through. The repo carries two
+/// code conventions: Beacon emits alphabet *values* (±0.5, ±1.5, …)
+/// whose index decodes through the alphabet, while the min-max methods
+/// (RTN/GPTQ/COMQ) emit integer level indices `k ∈ [0, levels)` whose
+/// dequant is `scale·k + offset` directly. A packed channel records
+/// which convention produced it so unpacking is never ambiguous —
+/// previously `unpack_channel` assumed the alphabet convention and
+/// silently decoded integer-level channels to the wrong values.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CodeConvention {
+    /// index decodes to `alphabet[idx]`
+    Alphabet,
+    /// index decodes to `idx` itself (min-max level index)
+    Levels,
+}
+
 #[derive(Debug, Clone)]
 pub struct PackedChannel {
     pub bits: u32,
     pub len: usize,
     pub scale: f32,
     pub offset: f32,
+    pub convention: CodeConvention,
     /// little-endian bit stream, `bits` bits per element
     pub words: Vec<u64>,
 }
@@ -23,12 +40,14 @@ impl PackedChannel {
     }
 }
 
-/// Pack pre-resolved alphabet indices into the bit stream.
+/// Pack pre-resolved indices into the bit stream under the given
+/// decode convention.
 pub fn pack_indices(
     idxs: &[usize],
     scale: f64,
     offset: f64,
     width: BitWidth,
+    convention: CodeConvention,
 ) -> PackedChannel {
     let bits = width.storage_bits();
     let mut words = vec![0u64; (idxs.len() * bits as usize + 63) / 64];
@@ -46,6 +65,7 @@ pub fn pack_indices(
         len: idxs.len(),
         scale: scale as f32,
         offset: offset as f32,
+        convention,
         words,
     }
 }
@@ -67,30 +87,48 @@ pub fn pack_channel(
                 .unwrap_or_else(|| panic!("code {v} not on {width:?} alphabet"))
         })
         .collect();
-    pack_indices(&idxs, scale, offset, width)
+    pack_indices(&idxs, scale, offset, width, CodeConvention::Alphabet)
 }
 
-/// Resolve one code value to an alphabet index, accepting both code
-/// conventions in the repo: Beacon emits alphabet *values* (±0.5,
-/// ±1.5, …) while the min-max methods (RTN/GPTQ/COMQ) emit integer
-/// level indices `k ∈ [0, levels)`. Alphabet match wins when a value
-/// satisfies both (only possible on the integer-valued 1.58-bit grid,
-/// where either reading yields an in-range index).
-fn code_index(v: f64, alph: &[f64], levels: usize) -> Option<usize> {
-    if let Some(i) = alph.iter().position(|a| (a - v).abs() < 1e-9) {
-        return Some(i);
+/// Resolve a whole channel's codes to indices plus the convention that
+/// matched. The decision is per *channel*, not per element: a channel of
+/// integer level indices like `[0, 1, 2]` contains values that also sit
+/// on some alphabets (the ternary grid holds 0 and 1), so element-wise
+/// detection could mix conventions inside one channel and decode
+/// garbage. The alphabet reading wins when every code satisfies both
+/// (only possible on the integer-valued 1.58-bit grid, where either
+/// reading is self-consistent).
+fn detect_convention(
+    codes: &[f64],
+    alph: &[f64],
+    levels: usize,
+) -> Option<(CodeConvention, Vec<usize>)> {
+    let alphabet_idxs: Option<Vec<usize>> = codes
+        .iter()
+        .map(|v| alph.iter().position(|a| (a - v).abs() < 1e-9))
+        .collect();
+    if let Some(idxs) = alphabet_idxs {
+        return Some((CodeConvention::Alphabet, idxs));
     }
-    let k = v.round();
-    if (k - v).abs() < 1e-9 && k >= 0.0 && k < levels as f64 {
-        Some(k as usize)
-    } else {
-        None
-    }
+    let level_idxs: Option<Vec<usize>> = codes
+        .iter()
+        .map(|v| {
+            let k = v.round();
+            if (k - v).abs() < 1e-9 && k >= 0.0 && k < levels as f64 {
+                Some(k as usize)
+            } else {
+                None
+            }
+        })
+        .collect();
+    level_idxs.map(|idxs| (CodeConvention::Levels, idxs))
 }
 
 /// Pack a channel whose codes follow either convention (alphabet values
 /// or integer level indices); `None` when any code is off-grid — the
-/// footprint accounting degrades gracefully instead of panicking.
+/// footprint accounting degrades gracefully instead of panicking. The
+/// matched convention is recorded on the channel so
+/// [`unpack_channel`] decodes through the right mapping.
 pub fn try_pack_channel(
     codes: &[f64],
     scale: f64,
@@ -99,11 +137,8 @@ pub fn try_pack_channel(
 ) -> Option<PackedChannel> {
     let alph = alphabet(width);
     let levels = alph.len();
-    let idxs: Vec<usize> = codes
-        .iter()
-        .map(|v| code_index(*v, &alph, levels))
-        .collect::<Option<Vec<usize>>>()?;
-    Some(pack_indices(&idxs, scale, offset, width))
+    let (convention, idxs) = detect_convention(codes, &alph, levels)?;
+    Some(pack_indices(&idxs, scale, offset, width, convention))
 }
 
 /// Packed storage for a whole layer's codes without materializing the
@@ -119,9 +154,7 @@ pub fn layer_packed_bytes(
     let bits = width.storage_bits() as u64;
     let mut payload = 0u64;
     for ch in codes {
-        if !ch.iter().all(|v| code_index(*v, &alph, levels).is_some()) {
-            return None;
-        }
+        detect_convention(ch, &alph, levels)?;
         payload += (ch.len() as u64 * bits + 7) / 8;
     }
     Some((payload, codes.len() as u64 * 8))
@@ -144,13 +177,37 @@ pub fn unpack_indices(p: &PackedChannel) -> Vec<usize> {
         .collect()
 }
 
-/// Unpack to dequantized f32 values (c·q + offset).
-pub fn unpack_channel(p: &PackedChannel, width: BitWidth) -> Vec<f32> {
+/// The per-index dequantized values for this channel, covering the full
+/// `2^bits` index space of the stored width: `lut[k] = scale·v(k) +
+/// offset` in f32, where `v(k)` is `alphabet[k]` or `k` per the
+/// channel's [`CodeConvention`]. Indices past the grid's level count
+/// (possible only in a corrupt bit stream) repeat the last grid value
+/// for the alphabet convention, so LUT-driven decode paths never index
+/// out of bounds. This is the exact table the fused
+/// [`crate::linalg::packed_gemm`] kernel expands codes through —
+/// `unpack_channel` is defined as a lookup into it, which is what makes
+/// the fused path bit-identical to unpack-then-compute.
+pub fn dequant_lut(p: &PackedChannel, width: BitWidth) -> Vec<f32> {
     let alph = alphabet(width);
-    unpack_indices(p)
-        .into_iter()
-        .map(|idx| p.scale * alph[idx] as f32 + p.offset)
+    let space = 1usize << p.bits;
+    (0..space)
+        .map(|k| {
+            let base = match p.convention {
+                CodeConvention::Alphabet => {
+                    alph[k.min(alph.len() - 1)] as f32
+                }
+                CodeConvention::Levels => k as f32,
+            };
+            p.scale * base + p.offset
+        })
         .collect()
+}
+
+/// Unpack to dequantized f32 values (`scale·v(idx) + offset`, with
+/// `v(idx)` picked by the channel's [`CodeConvention`]).
+pub fn unpack_channel(p: &PackedChannel, width: BitWidth) -> Vec<f32> {
+    let lut = dequant_lut(p, width);
+    unpack_indices(p).into_iter().map(|idx| lut[idx]).collect()
 }
 
 /// Effective storage bytes for the packed channel (codes + metadata).
@@ -277,6 +334,105 @@ mod tests {
         let codes: Vec<f64> = want.iter().map(|&k| k as f64).collect();
         let p = try_pack_channel(&codes, 1.0, 0.0, width).unwrap();
         assert_eq!(unpack_indices(&p), want);
+    }
+
+    #[test]
+    fn both_conventions_roundtrip_bit_identical_f32() {
+        // The convention-asymmetry regression test: for BOTH code
+        // conventions try_pack_channel accepts, pack → unpack must
+        // reproduce the dequantized f32 values bit-for-bit — including
+        // ragged tails that straddle and partially fill u64 words at
+        // every storage width.
+        for (width, n) in [
+            (BitWidth::B2, 70usize), // 140 bits: ragged tail in word 3
+            (BitWidth::B3, 70),      // 210 bits: straddles + ragged tail
+            (BitWidth::B4, 70),      // 280 bits: ragged tail
+            (BitWidth::B2, 1),
+            (BitWidth::B3, 64), // exact element multiple, ragged bits
+            (BitWidth::B4, 32), // exact word multiple
+        ] {
+            let alph = alphabet(width);
+            let lv = alph.len();
+            let (scale, offset) = (0.37f64, -0.05f64);
+            let want_idx: Vec<usize> =
+                (0..n).map(|i| (i * 7 + 3) % lv).collect();
+
+            // alphabet-value convention (Beacon)
+            let codes_a: Vec<f64> =
+                want_idx.iter().map(|&k| alph[k]).collect();
+            let p = try_pack_channel(&codes_a, scale, offset, width).unwrap();
+            assert_eq!(p.convention, CodeConvention::Alphabet, "{width:?}");
+            let back = unpack_channel(&p, width);
+            for (i, (&k, b)) in want_idx.iter().zip(&back).enumerate() {
+                let expect =
+                    scale as f32 * alph[k] as f32 + offset as f32;
+                assert_eq!(
+                    expect.to_bits(),
+                    b.to_bits(),
+                    "{width:?} alphabet n={n} elem {i}"
+                );
+            }
+
+            // integer-level convention (RTN/GPTQ/COMQ)
+            let codes_l: Vec<f64> =
+                want_idx.iter().map(|&k| k as f64).collect();
+            let p = try_pack_channel(&codes_l, scale, offset, width).unwrap();
+            assert_eq!(unpack_indices(&p), want_idx, "{width:?} levels n={n}");
+            let back = unpack_channel(&p, width);
+            for (i, (&k, b)) in want_idx.iter().zip(&back).enumerate() {
+                let expect = scale as f32 * k as f32 + offset as f32;
+                assert_eq!(
+                    expect.to_bits(),
+                    b.to_bits(),
+                    "{width:?} levels n={n} elem {i}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn level_channels_decode_as_levels_not_alphabet() {
+        // the bug the convention field fixes: a min-max channel packed
+        // as level indices used to decode through the alphabet
+        let width = BitWidth::B3;
+        let codes: Vec<f64> = (0..8).map(|k| k as f64).collect();
+        let p = try_pack_channel(&codes, 0.5, 0.25, width).unwrap();
+        assert_eq!(p.convention, CodeConvention::Levels);
+        let back = unpack_channel(&p, width);
+        for (k, b) in back.iter().enumerate() {
+            let expect = 0.5f32 * k as f32 + 0.25f32;
+            assert_eq!(expect.to_bits(), b.to_bits(), "level {k}");
+        }
+    }
+
+    #[test]
+    fn convention_is_per_channel_not_per_element() {
+        // [0, 1, 2] on the ternary grid: 0 and 1 sit on the alphabet
+        // but 2 does not, so the whole channel must resolve as Levels
+        let width = BitWidth::B158;
+        let p = try_pack_channel(&[0.0, 1.0, 2.0], 1.0, 0.0, width).unwrap();
+        assert_eq!(p.convention, CodeConvention::Levels);
+        assert_eq!(unpack_indices(&p), vec![0, 1, 2]);
+        // all-on-alphabet stays Alphabet (alphabet wins the ambiguity)
+        let p = try_pack_channel(&[0.0, 1.0, -1.0], 1.0, 0.0, width).unwrap();
+        assert_eq!(p.convention, CodeConvention::Alphabet);
+    }
+
+    #[test]
+    fn dequant_lut_covers_full_index_space() {
+        let width = BitWidth::B258; // 6 levels in a 3-bit index space
+        let alph = alphabet(width);
+        let codes: Vec<f64> = (0..10).map(|i| alph[i % 6]).collect();
+        let p = try_pack_channel(&codes, 0.2, 0.1, width).unwrap();
+        let lut = dequant_lut(&p, width);
+        assert_eq!(lut.len(), 8);
+        for k in 0..6 {
+            let expect = 0.2f32 * alph[k] as f32 + 0.1f32;
+            assert_eq!(expect.to_bits(), lut[k].to_bits());
+        }
+        // out-of-grid indices clamp to the last grid value
+        assert_eq!(lut[6].to_bits(), lut[5].to_bits());
+        assert_eq!(lut[7].to_bits(), lut[5].to_bits());
     }
 
     #[test]
