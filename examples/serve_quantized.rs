@@ -1,22 +1,23 @@
-//! Packed-weight serving: quantize a small model, ship it as a BPK1
-//! [`PackedStore`], and serve batched requests straight off the packed
-//! bit streams through the fused unpack-dequant-GEMM kernel — the
-//! deployment half of the paper's memory claim, measured rather than
-//! asserted.
+//! Packed-weight serving through the serve subsystem: quantize a small
+//! model, ship it as a BPK1 [`PackedStore`], and serve batched requests
+//! straight off the packed bit streams via [`Server`] — the deployment
+//! half of the paper's memory claim, measured rather than asserted.
 //!
 //! For each bit width (4-bit, then 2-bit) the run:
 //!
 //! 1. quantizes a deterministic synthetic model with native Beacon and
 //!    writes the packed checkpoint to disk (sources are dropped);
 //! 2. serves the request stream twice from that same file — once as a
-//!    dense f32 deployment (channels unpacked to f32 at load), once
-//!    fully packed (fused kernel, no weight matrix ever materialized) —
-//!    measuring weight resident bytes and the phase's peak-heap delta
-//!    with the tracking allocator;
-//! 3. asserts the packed path stays under the storage-ratio cap
-//!    (≤ 0.5× f32 at 4-bit, ≤ 0.3× at 2-bit) on both measures, and that
-//!    the fused `packed_matvec` is bit-identical to unpack-then-matvec
-//!    at 1 and 4 threads.
+//!    dense f32 deployment (channels unpacked to f32 at load, layers
+//!    chained with the same 4-lane dot the fused kernel uses), once
+//!    through the batching server on a resident [`PackedModel`] (fused
+//!    kernel, no weight matrix ever materialized) — measuring weight
+//!    resident bytes and each phase's peak-heap delta with the tracking
+//!    allocator;
+//! 3. asserts every batched response is bit-identical to the dense f32
+//!    twin, that the sequential packed path is thread-count invariant,
+//!    and that the packed path stays under the storage-ratio cap
+//!    (≤ 0.5× f32 at 4-bit, ≤ 0.3× at 2-bit) on resident and peak.
 //!
 //! ```bash
 //! cargo run --release --example serve_quantized [-- <num_requests>]
@@ -24,29 +25,29 @@
 //! ```
 
 use std::path::{Path, PathBuf};
-use std::time::Instant;
+use std::sync::Arc;
 
 use beacon_ptq::config::{Method, QuantConfig};
-use beacon_ptq::coordinator::report::Table;
+use beacon_ptq::coordinator::report::{serve_table, Table};
 use beacon_ptq::data::rng::SplitMix64;
-use beacon_ptq::linalg::{
-    packed_gemm, packed_matvec, packed_matvec_threads, Matrix,
-};
+use beacon_ptq::linalg::Matrix;
 use beacon_ptq::model::{PackedLayer, PackedStore};
-use beacon_ptq::obs::{self, Hist, TrackingAlloc};
+use beacon_ptq::obs::{self, TrackingAlloc};
 use beacon_ptq::quant::alphabet::BitWidth;
 use beacon_ptq::quant::engine::{LayerCtx, Quantizer as _};
 use beacon_ptq::quant::packing::unpack_channel;
+use beacon_ptq::serve::{PackedModel, Response, ServeConfig, Server};
 use beacon_ptq::util::prop::Gen;
 
 #[global_allocator]
 static ALLOC: TrackingAlloc = TrackingAlloc;
 
-/// Synthetic model geometry: weight-dominant layers so the weight store
-/// (not activations) decides both paths' footprints.
+/// Synthetic model geometry: square weight-dominant layers (so the chain
+/// is well-formed and the weight store, not activations, decides both
+/// paths' footprints).
 const LAYERS: usize = 6;
 const N: usize = 256; // channel length (weight rows)
-const NP: usize = 256; // channels per layer (weight cols)
+const NP: usize = 256; // channels per layer (weight cols) — square: chains
 const CALIB_ROWS: usize = 320; // ≥ N so the QR prefactor is well-posed
 const BATCH: usize = 8;
 
@@ -185,10 +186,21 @@ fn dot_wf32(w: &[f32], x: &[f64]) -> f64 {
     s
 }
 
-/// Deterministic request stream: `requests` batches of `BATCH`×`N`.
-fn request_batch(r: usize) -> Matrix {
+/// Chain the dense f32 layers over one request — channel by channel with
+/// [`dot_wf32`], exactly the lane order `packed_matvec`/`packed_gemm`
+/// use, so the result is bit-identical to the served packed path.
+fn dense_forward(layers: &[Vec<Vec<f32>>], x: &[f64]) -> Vec<f64> {
+    let mut act = x.to_vec();
+    for layer in layers {
+        act = layer.iter().map(|ch| dot_wf32(ch, &act)).collect();
+    }
+    act
+}
+
+/// Deterministic request stream: one `N`-dim vector per request.
+fn request(r: usize) -> Vec<f64> {
     let mut g = Gen { rng: SplitMix64::new(0x5EED_0000 ^ r as u64) };
-    Matrix::from_vec(BATCH, N, g.vec_normal(BATCH * N, 1.0))
+    g.vec_normal(N, 1.0)
 }
 
 fn run_width(
@@ -199,8 +211,9 @@ fn run_width(
     println!("=== {} packed serving ===", width.label());
     let path = ckpt_path(width);
     build_checkpoint(width, &path)?;
+    let xs: Vec<Vec<f64>> = (0..requests).map(request).collect();
 
-    // ---- dense f32 deployment: unpack every channel to f32 at load ----
+    // ---- dense f32 deployment twin: unpack every channel at load ----
     let live0 = obs::memory::reset_peak();
     let f32_layers: Vec<Vec<Vec<f32>>> = {
         let store = PackedStore::load(&path)?;
@@ -223,116 +236,61 @@ fn run_width(
         .map(|c| (c.len() * 4 + std::mem::size_of::<Vec<f32>>()) as u64)
         .sum();
     obs::memory::set_resident("serve.f32_store", f32_resident);
-
-    let mut f32_out_probe = Vec::new();
-    for r in 0..requests {
-        let x = request_batch(r);
-        let mut out = Matrix::zeros(BATCH, NP);
-        for layer in &f32_layers {
-            for b in 0..BATCH {
-                for (j, ch) in layer.iter().enumerate() {
-                    out[(b, j)] += dot_wf32(ch, x.row(b));
-                }
-            }
-        }
-        if r == 0 {
-            f32_out_probe = out.data.clone();
-        }
-    }
+    let dense_out: Vec<Vec<f64>> =
+        xs.iter().map(|x| dense_forward(&f32_layers, x)).collect();
     let f32_peak = obs::memory::peak_bytes().saturating_sub(live0);
     drop(f32_layers);
 
-    // ---- packed deployment: fused kernel off the bit streams ----
+    // ---- packed deployment: batching server on the resident model ----
     let live0 = obs::memory::reset_peak();
-    let store = PackedStore::load(&path)?;
-    let luts: Vec<Vec<Vec<f32>>> =
-        store.layers.iter().map(PackedLayer::luts).collect();
-    let lut_bytes: u64 = luts
-        .iter()
-        .flatten()
-        .map(|l| (l.len() * 4 + std::mem::size_of::<Vec<f32>>()) as u64)
-        .sum();
-    let packed_resident = store.resident_bytes() + lut_bytes;
-    obs::memory::set_resident("serve.packed_store", packed_resident);
-
-    let threads = beacon_ptq::util::pool::resolve_threads(0);
-    let mut latencies = Vec::with_capacity(requests);
-    let mut request_ns = Hist::default();
-    let mut packed_out_probe = Vec::new();
-    let t_all = Instant::now();
-    for r in 0..requests {
-        let x = request_batch(r);
-        let span = obs::span_args("serve", || {
-            (
-                format!("serve.request[{r}]"),
-                vec![("batch", BATCH.to_string())],
-            )
-        });
-        let t = Instant::now();
-        let mut out = Matrix::zeros(BATCH, NP);
-        for (l, layer) in store.layers.iter().enumerate() {
-            let cols = layer.kernel_cols(&luts[l]);
-            let y = packed_gemm(&cols, &x, threads);
-            for (o, v) in out.data.iter_mut().zip(&y.data) {
-                *o += v;
-            }
-        }
-        let secs = span.finish();
-        request_ns.record((secs * 1e9) as u64);
-        latencies.push(t.elapsed().as_secs_f64() * 1e3);
-        if r == 0 {
-            packed_out_probe = out.data.clone();
-        }
-    }
-    let wall = t_all.elapsed().as_secs_f64();
+    let model = Arc::new(PackedModel::load(&path)?);
+    let packed_resident = model.resident_bytes();
+    let (server, client) = Server::start(
+        Arc::clone(&model),
+        ServeConfig {
+            label: format!("packed {}", width.label()),
+            max_batch: BATCH,
+            ..ServeConfig::default()
+        },
+    );
+    let handles: Vec<_> = xs.iter().map(|x| client.submit(x.clone())).collect();
+    drop(client);
+    let responses: Vec<Response> =
+        handles.into_iter().map(|h| h.wait()).collect();
+    let report = server.shutdown();
     let packed_peak = obs::memory::peak_bytes().saturating_sub(live0);
-    obs::merge_hist("serve.request_ns", request_ns);
+    print!("{}", serve_table(&report).render());
 
-    // both serving paths share the 4-lane dot order: bit-identical
-    assert_eq!(f32_out_probe.len(), packed_out_probe.len());
-    for (a, b) in f32_out_probe.iter().zip(&packed_out_probe) {
-        assert_eq!(a.to_bits(), b.to_bits(), "f32 vs fused serving diverged");
-    }
-
-    // fused packed_matvec ≡ unpack-then-matvec, bit for bit, at 1 and 4
-    // threads (the ISSUE's kernel-correctness contract)
-    let mut g = Gen { rng: SplitMix64::new(0xB17) };
-    let xv = g.vec_normal(N, 1.0);
-    for layer in &store.layers {
-        let luts = layer.luts();
-        let cols = layer.kernel_cols(&luts);
-        // reference: unpacked channels as matrix rows → matvec
-        let rows: Vec<Vec<f64>> = layer
-            .channels
-            .iter()
-            .map(|c| {
-                unpack_channel(c, layer.width)
-                    .into_iter()
-                    .map(f64::from)
-                    .collect()
-            })
-            .collect();
-        let row_refs: Vec<&[f64]> = rows.iter().map(Vec::as_slice).collect();
-        let wt = Matrix::from_rows(&row_refs);
-        let want = wt.matvec(&xv);
-        let fused1 = packed_matvec(&cols, &xv);
-        let fused4 = packed_matvec_threads(&cols, &xv, 4);
-        for j in 0..NP {
+    // every batched response ≡ the dense f32 twin, bit for bit: the
+    // fused-vs-dense contract, now checked through the server
+    for (r, resp) in responses.iter().enumerate() {
+        let want = &dense_out[r];
+        assert_eq!(resp.output.len(), want.len());
+        for (j, (a, b)) in resp.output.iter().zip(want).enumerate() {
             assert_eq!(
-                want[j].to_bits(),
-                fused1[j].to_bits(),
-                "{}: fused t=1 diverged at channel {j}",
-                layer.name
-            );
-            assert_eq!(
-                want[j].to_bits(),
-                fused4[j].to_bits(),
-                "{}: fused t=4 diverged at channel {j}",
-                layer.name
+                a.to_bits(),
+                b.to_bits(),
+                "{}: request {r} channel {j}: fused serving diverged \
+                 from the dense f32 path",
+                width.label()
             );
         }
     }
-    println!("{}: fused ≡ unpack-then-matvec at t=1 and t=4", width.label());
+    println!(
+        "{}: {} batched responses bit-identical to the dense f32 twin",
+        width.label(),
+        responses.len()
+    );
+
+    // the sequential packed reference is thread-count invariant
+    for x in xs.iter().take(4) {
+        let t1 = model.forward_one(x, 1);
+        let t4 = model.forward_one(x, 4);
+        for (a, b) in t1.iter().zip(&t4) {
+            assert_eq!(a.to_bits(), b.to_bits(), "forward_one t=1 vs t=4");
+        }
+    }
+    println!("{}: forward_one invariant at t=1 and t=4", width.label());
 
     // the storage-ratio caps the ISSUE acceptance criteria pin
     assert!(
@@ -350,22 +308,6 @@ fn run_width(
         f32_peak
     );
 
-    latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let p50 = latencies[latencies.len() / 2];
-    let p95 = latencies[(latencies.len() * 95 / 100).min(latencies.len() - 1)];
-    println!(
-        "{}: {} requests ({} rows) in {:.2}s — p50 {:.2} ms, p95 {:.2} ms, \
-         packed/f32 resident {:.2}×, peak {:.2}×\n",
-        width.label(),
-        requests,
-        requests * BATCH,
-        wall,
-        p50,
-        p95,
-        packed_resident as f64 / f32_resident as f64,
-        packed_peak as f64 / f32_peak as f64
-    );
-
     Ok(WidthResult {
         label: width.label(),
         f32_resident,
@@ -373,7 +315,7 @@ fn run_width(
         packed_resident,
         packed_peak,
         cap,
-        p50_ms: p50,
-        p95_ms: p95,
+        p50_ms: report.latency_ns.p50 as f64 / 1e6,
+        p95_ms: report.latency_ns.p95 as f64 / 1e6,
     })
 }

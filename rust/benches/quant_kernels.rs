@@ -348,6 +348,45 @@ fn main() {
         });
     }
 
+    // --- serve-path batched forward: the per-batch cost the batching
+    // server pays per flush. Chains packed_gemm across all layers of a
+    // synthetic packed checkpoint, exactly what serve::worker_loop runs
+    // on a full batch. ns/channel normalizes by the total expanded
+    // channels across the chain (layers × dim).
+    println!("\n== serve-path batched forward (batch 8, 3×256×256) ==");
+    {
+        use beacon_ptq::serve::{synthetic_store, PackedModel};
+        let (sb, sl, sd) = (8usize, 3usize, 256usize);
+        for &bits in &[BitWidth::B2, BitWidth::B4] {
+            let model =
+                PackedModel::from_store(synthetic_store(sl, sd, bits, 0xBA7C))
+                    .expect("synthetic store chains by construction");
+            let mut g = Gen { rng: SplitMix64::new(90) };
+            let sx = Matrix::from_vec(sb, sd, g.vec_normal(sb * sd, 1.0));
+            for &threads in &[1usize, 4] {
+                let r = bench(
+                    &format!(
+                        "serve-batch {sb}x{sl}x{sd} {} t={threads}",
+                        bits.label()
+                    ),
+                    1,
+                    5,
+                    || {
+                        black_box(model.forward_batch(&sx, threads));
+                    },
+                );
+                recs.push(Rec {
+                    method: "serve-batch",
+                    bits: bits.label(),
+                    threads,
+                    median_ns: r.median_ns,
+                    ns_per_channel: r.median_ns as f64 / (sl * sd) as f64,
+                    chan: None,
+                });
+            }
+        }
+    }
+
     // --- peak-heap rows: BENCH_memory.json --------------------------------
     // One layer quantize per (method, bits) with the high-water mark
     // re-armed at the section's live level, so each row reports the

@@ -1,0 +1,313 @@
+//! `load_gen` — deterministic load generator for the serve subsystem,
+//! and the producer of the machine-readable serving perf record.
+//!
+//! Drives the batching server over a synthetic packed checkpoint (no
+//! artifacts needed) in two arrival patterns:
+//!
+//! * **closed loop** — `--clients N` threads, each submitting its next
+//!   request only after the previous response arrives. Measures the
+//!   server's throughput ceiling under self-throttling clients.
+//! * **open loop** — one dispatcher submitting on a seeded-exponential
+//!   arrival clock (`--rate` req/s, `SplitMix64` inter-arrival gaps),
+//!   the pattern real traffic follows. Submission blocks when the
+//!   bounded queue is full (backpressure), so a saturated server shows
+//!   up as queue-wait latency rather than unbounded memory.
+//!
+//! Every response is verified **bit-identical** to the sequential
+//! single-request packed path (`PackedModel::forward_one`) — the run
+//! aborts on the first mismatch, making this binary double as the
+//! end-to-end determinism check for batched serving.
+//!
+//! Writes `BENCH_serve.json` (`--out`): one row per
+//! `mode.metric × bits × workers` with p50/p95/p99 latency (ms) and
+//! requests/s; throughput rows carry `"higher_is_better": true` so the
+//! perf gate flips their regression direction. Diffed against
+//! `BENCH_serve_baseline.json` by `perf_gate`'s serve section.
+//!
+//! The defaults (2 workers, 4-bit + 2-bit, both modes) produce exactly
+//! the committed baseline grid; CI runs them as a release smoke.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use beacon_ptq::coordinator::report::serve_table;
+use beacon_ptq::data::rng::SplitMix64;
+use beacon_ptq::obs::{self, TrackingAlloc};
+use beacon_ptq::quant::alphabet::BitWidth;
+use beacon_ptq::serve::{
+    synthetic_store, PackedModel, Response, ServeConfig, ServeReport, Server,
+};
+use beacon_ptq::util::cli::Args;
+use beacon_ptq::util::prop::Gen;
+
+#[global_allocator]
+static ALLOC: TrackingAlloc = TrackingAlloc;
+
+struct RunCfg {
+    requests: usize,
+    clients: usize,
+    rate: f64,
+    serve: ServeConfig,
+}
+
+/// One bench row: `method` folds mode and metric (`closed.p50_ms`,
+/// `open.rps`, ...) so the perf gate's `(method, bits, threads)` key
+/// works unchanged.
+struct Row {
+    method: String,
+    bits: String,
+    threads: usize,
+    value: f64,
+    higher_is_better: bool,
+}
+
+fn verify(model: &PackedModel, input: &[f64], resp: &Response) -> Result<()> {
+    let want = model.forward_one(input, 1);
+    if resp.output.len() != want.len() {
+        bail!("request {}: output length {} != {}", resp.id, resp.output.len(), want.len());
+    }
+    for (j, (a, b)) in resp.output.iter().zip(&want).enumerate() {
+        if a.to_bits() != b.to_bits() {
+            bail!(
+                "request {}: output[{j}] = {a:e} differs from sequential \
+                 packed path {b:e} — batched serving broke determinism",
+                resp.id
+            );
+        }
+    }
+    Ok(())
+}
+
+/// Pre-generate the workload: deterministic request vectors, one per
+/// request, seeded per width so closed and open loops replay the same
+/// traffic.
+fn inputs(n: usize, dim: usize, width: BitWidth, seed: u64) -> Vec<Vec<f64>> {
+    let mut g = Gen {
+        rng: SplitMix64::new(seed ^ (u64::from(width.storage_bits()) << 32)),
+    };
+    (0..n).map(|_| g.vec_normal(dim, 1.0)).collect()
+}
+
+fn run_closed(
+    model: &Arc<PackedModel>,
+    cfg: &RunCfg,
+    width: BitWidth,
+) -> Result<ServeReport> {
+    let xs = Arc::new(inputs(
+        cfg.requests,
+        model.input_dim(),
+        width,
+        0x10AD_C105,
+    ));
+    obs::memory::reset_peak();
+    let mut sc = cfg.serve.clone();
+    sc.label = format!("closed {}", width.label());
+    let (server, client) = Server::start(Arc::clone(model), sc);
+    let clients = cfg.clients.max(1);
+    let joins: Vec<_> = (0..clients)
+        .map(|c| {
+            let client = client.clone();
+            let xs = Arc::clone(&xs);
+            std::thread::spawn(move || {
+                let mut got = Vec::new();
+                // client c owns requests c, c+clients, c+2·clients, ...
+                let mut r = c;
+                while r < xs.len() {
+                    let sp = obs::span_args("serve", || {
+                        (format!("request[{r}]"), Vec::new())
+                    });
+                    let resp = client.submit(xs[r].clone()).wait();
+                    sp.finish();
+                    got.push((r, resp));
+                    r += clients;
+                }
+                got
+            })
+        })
+        .collect();
+    drop(client);
+    let mut responses = Vec::with_capacity(cfg.requests);
+    for j in joins {
+        responses.extend(j.join().expect("load_gen: client thread panicked"));
+    }
+    let report = server.shutdown();
+    for (r, resp) in &responses {
+        verify(model, &xs[*r], resp)?;
+    }
+    println!(
+        "closed {}: verified {} responses bit-identical to the \
+         sequential packed path",
+        width.label(),
+        responses.len()
+    );
+    Ok(report)
+}
+
+fn run_open(
+    model: &Arc<PackedModel>,
+    cfg: &RunCfg,
+    width: BitWidth,
+) -> Result<ServeReport> {
+    let xs = inputs(cfg.requests, model.input_dim(), width, 0x10AD_0BE4);
+    obs::memory::reset_peak();
+    let mut sc = cfg.serve.clone();
+    sc.label = format!("open {}", width.label());
+    let (server, client) = Server::start(Arc::clone(model), sc);
+    // seeded exponential inter-arrival gaps: a Poisson arrival process
+    // replayed identically on every run
+    let mut arrivals = SplitMix64::new(0xA441_7A1 ^ u64::from(width.storage_bits()));
+    let mut handles = Vec::with_capacity(cfg.requests);
+    for x in &xs {
+        let u = arrivals.next_f64().max(1e-12);
+        let gap_secs = -u.ln() / cfg.rate.max(1.0);
+        std::thread::sleep(std::time::Duration::from_secs_f64(gap_secs));
+        // blocking submit: when the queue is full the arrival clock
+        // stalls (backpressure) — see docs/SERVE.md on reading open-loop
+        // latency under saturation
+        handles.push(client.submit(x.clone()));
+    }
+    drop(client);
+    let responses: Vec<Response> =
+        handles.into_iter().map(|h| h.wait()).collect();
+    let report = server.shutdown();
+    for (x, resp) in xs.iter().zip(&responses) {
+        verify(model, x, resp)?;
+    }
+    println!(
+        "open {}: verified {} responses bit-identical to the \
+         sequential packed path",
+        width.label(),
+        responses.len()
+    );
+    Ok(report)
+}
+
+fn rows_from(report: &ServeReport, mode: &str, bits: &str, out: &mut Vec<Row>) {
+    let ms = |ns: u64| ns as f64 / 1e6;
+    let mut push = |metric: &str, value: f64, hib: bool| {
+        out.push(Row {
+            method: format!("{mode}.{metric}"),
+            bits: bits.to_string(),
+            threads: report.workers,
+            value,
+            higher_is_better: hib,
+        });
+    };
+    push("p50_ms", ms(report.latency_ns.p50), false);
+    push("p95_ms", ms(report.latency_ns.p95), false);
+    push("p99_ms", ms(report.latency_ns.p99), false);
+    push("rps", report.requests_per_sec(), true);
+}
+
+fn write_record(path: &str, rows: &[Row], cfg: &RunCfg) -> Result<()> {
+    let host = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let mut s = String::new();
+    s.push_str("{\n  \"bench\": \"load_gen\",\n");
+    s.push_str(&format!(
+        "  \"workload\": {{\"requests\": {}, \"clients\": {}, \"rate\": {}, \
+         \"max_batch\": {}, \"deadline_ms\": {}, \"queue_capacity\": {}}},\n",
+        cfg.requests,
+        cfg.clients,
+        cfg.rate,
+        cfg.serve.max_batch,
+        cfg.serve.deadline.as_secs_f64() * 1e3,
+        cfg.serve.queue_capacity,
+    ));
+    s.push_str(&format!("  \"host_threads\": {host},\n"));
+    s.push_str("  \"results\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"method\": \"{}\", \"bits\": \"{}\", \"threads\": {}, \
+             \"value\": {:.4}",
+            r.method, r.bits, r.threads, r.value
+        ));
+        if r.higher_is_better {
+            s.push_str(", \"higher_is_better\": true");
+        }
+        s.push_str(if i + 1 == rows.len() { "}\n" } else { "},\n" });
+    }
+    s.push_str("  ]\n}\n");
+    std::fs::write(path, &s)?;
+    println!("wrote {path} ({} rows, host_threads={host})", rows.len());
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let trace_to = args
+        .get("trace")
+        .map(String::from)
+        .or_else(|| args.switch("trace").then(|| "load_gen_trace.json".to_string()))
+        .or_else(obs::trace_env);
+    if trace_to.is_some() {
+        obs::enable();
+    }
+
+    let layers = args.usize("layers", 4);
+    let dim = args.usize("dim", 192);
+    let cfg = RunCfg {
+        requests: args.usize("requests", 256),
+        clients: args.usize("clients", 4),
+        rate: args.f64("rate", 2000.0),
+        serve: ServeConfig {
+            label: String::new(),
+            max_batch: args.usize("batch", 8),
+            deadline: std::time::Duration::from_secs_f64(
+                args.f64("deadline-ms", 2.0) / 1e3,
+            ),
+            workers: args.usize("workers", 2),
+            threads: args.usize("threads", 0),
+            queue_capacity: args.usize("queue-cap", 64),
+        },
+    };
+    let mode = args.str("mode", "both");
+    if !matches!(mode.as_str(), "both" | "closed" | "open") {
+        bail!("--mode must be closed, open, or both (got '{mode}')");
+    }
+    let widths: Vec<BitWidth> = {
+        let csv = args.csv("bits");
+        let specs = if csv.is_empty() {
+            vec!["4".to_string(), "2".to_string()]
+        } else {
+            csv
+        };
+        specs
+            .iter()
+            .map(|s| {
+                BitWidth::parse(s)
+                    .ok_or_else(|| anyhow::anyhow!("bad bit width '{s}'"))
+            })
+            .collect::<Result<_>>()?
+    };
+    let out = args.str("out", "BENCH_serve.json");
+
+    let mut rows = Vec::new();
+    for width in widths {
+        let store = synthetic_store(layers, dim, width, 0x5EED_BEAC);
+        let model = Arc::new(PackedModel::from_store(store)?);
+        println!(
+            "model: {} layers × {dim}×{dim} at {} ({} packed resident bytes)",
+            model.layer_count(),
+            width.label(),
+            model.resident_bytes()
+        );
+        if mode == "both" || mode == "closed" {
+            let report = run_closed(&model, &cfg, width)?;
+            print!("{}", serve_table(&report).render());
+            rows_from(&report, "closed", &width.label(), &mut rows);
+        }
+        if mode == "both" || mode == "open" {
+            let report = run_open(&model, &cfg, width)?;
+            print!("{}", serve_table(&report).render());
+            rows_from(&report, "open", &width.label(), &mut rows);
+        }
+    }
+    write_record(&out, &rows, &cfg)?;
+
+    if let Some(path) = trace_to {
+        obs::write_chrome_trace(std::path::Path::new(&path))?;
+        println!("trace written to {path}");
+    }
+    Ok(())
+}

@@ -11,6 +11,14 @@
 //! one-table summary per section either way. The memory section is
 //! skipped (with a note) when `BENCH_memory.json` is absent.
 //!
+//! A third section gates serving: `cargo run --release --bin load_gen`
+//! writes `BENCH_serve.json` (closed/open-loop p50/p95/p99 latency ms
+//! and requests/s per bit width), diffed against
+//! `BENCH_serve_baseline.json` the same way. Throughput rows carry
+//! `"higher_is_better": true`, flipping the regression direction: a
+//! >tolerance *drop* in requests/s fails. Skipped (with a note) when
+//! `BENCH_serve.json` is absent.
+//!
 //! Baseline rows with a value `<= 0` are *uncalibrated* placeholders:
 //! they pin the expected row set without enforcing a number (CI hardware
 //! differs from dev machines, so a baseline must be recorded on the
@@ -49,8 +57,12 @@ struct PerfRow {
     method: String,
     bits: String,
     threads: usize,
-    /// the gated measurement: ns/channel or peak bytes, per section
+    /// the gated measurement: ns/channel, peak bytes, latency ms or
+    /// requests/s, per section
     value: f64,
+    /// throughput-style row (requests/s): a *drop* is the regression.
+    /// Read from the optional `higher_is_better` record field.
+    higher_is_better: bool,
 }
 
 impl PerfRow {
@@ -128,9 +140,12 @@ fn compare(
             },
             Some(b) => {
                 let delta = 100.0 * (cur.value - b.value) / b.value;
-                let verdict = if delta > tolerance_pct {
+                // for higher-is-better rows (throughput) a drop is the
+                // regression: flip the sign before judging, display raw
+                let judged = if cur.higher_is_better { -delta } else { delta };
+                let verdict = if judged > tolerance_pct {
                     Verdict::Regression
-                } else if delta < -tolerance_pct {
+                } else if judged < -tolerance_pct {
                     Verdict::Faster
                 } else {
                     Verdict::Ok
@@ -185,20 +200,18 @@ fn parse_rows(text: &str, value_key: &str) -> Result<Vec<PerfRow>> {
             value: field(value_key)?
                 .as_f64()
                 .ok_or_else(|| anyhow!("results[{i}].{value_key} not a number"))?,
+            higher_is_better: r
+                .get("higher_is_better")
+                .and_then(Value::as_bool)
+                .unwrap_or(false),
         });
     }
     Ok(rows)
 }
 
-fn fmt_value(v: Option<f64>, bytes: bool) -> String {
+fn fmt_value(v: Option<f64>, decimals: usize) -> String {
     match v {
-        Some(x) if x > 0.0 => {
-            if bytes {
-                format!("{x:.0}")
-            } else {
-                format!("{x:.1}")
-            }
-        }
+        Some(x) if x > 0.0 => format!("{x:.decimals$}"),
         _ => "—".to_string(),
     }
 }
@@ -219,13 +232,13 @@ fn gate_section(
     baseline_path: &str,
     current_path: &str,
     tolerance: f64,
-    bytes: bool,
+    unit: &str,
+    decimals: usize,
 ) -> Result<SectionOutcome> {
     let baseline = load_rows(baseline_path, value_key)?;
     let current = load_rows(current_path, value_key)?;
     let (cmps, missing) = compare(&baseline, &current, tolerance);
 
-    let unit = if bytes { "bytes" } else { "ns/ch" };
     let bh = format!("baseline {unit}");
     let ch = format!("current {unit}");
     let mut t = Table::new(
@@ -239,8 +252,8 @@ fn gate_section(
             c.current.method.clone(),
             c.current.bits.clone(),
             c.current.threads.to_string(),
-            fmt_value(c.baseline, bytes),
-            fmt_value(Some(c.current.value), bytes),
+            fmt_value(c.baseline, decimals),
+            fmt_value(Some(c.current.value), decimals),
             c.delta_pct.map(|d| format!("{d:+.1}")).unwrap_or_else(|| "—".to_string()),
             c.verdict.label().to_string(),
         ]);
@@ -319,6 +332,9 @@ fn run() -> Result<bool> {
     let mem_baseline_path =
         args.str("memory-baseline", "BENCH_memory_baseline.json");
     let mem_current_path = args.str("memory-current", "BENCH_memory.json");
+    let serve_baseline_path =
+        args.str("serve-baseline", "BENCH_serve_baseline.json");
+    let serve_current_path = args.str("serve-current", "BENCH_serve.json");
     if args.switch("write-baseline") {
         write_baseline(&current_path, &baseline_path)?;
         if std::path::Path::new(&mem_current_path).exists() {
@@ -327,6 +343,14 @@ fn run() -> Result<bool> {
             println!(
                 "memory baseline not written: {mem_current_path} not found \
                  (run cargo bench --bench quant_kernels first)"
+            );
+        }
+        if std::path::Path::new(&serve_current_path).exists() {
+            write_baseline(&serve_current_path, &serve_baseline_path)?;
+        } else {
+            println!(
+                "serve baseline not written: {serve_current_path} not found \
+                 (run cargo run --release --bin load_gen first)"
             );
         }
         return Ok(true);
@@ -343,7 +367,8 @@ fn run() -> Result<bool> {
         &baseline_path,
         &current_path,
         tolerance,
-        false,
+        "ns/ch",
+        1,
     )?;
     let memory = if std::path::Path::new(&mem_current_path).exists() {
         Some(gate_section(
@@ -352,7 +377,8 @@ fn run() -> Result<bool> {
             &mem_baseline_path,
             &mem_current_path,
             tolerance,
-            true,
+            "bytes",
+            0,
         )?)
     } else {
         println!(
@@ -361,12 +387,33 @@ fn run() -> Result<bool> {
         );
         None
     };
+    let serve = if std::path::Path::new(&serve_current_path).exists() {
+        Some(gate_section(
+            "serve",
+            "value",
+            &serve_baseline_path,
+            &serve_current_path,
+            tolerance,
+            "value",
+            3,
+        )?)
+    } else {
+        println!(
+            "serve gate skipped: {serve_current_path} not found \
+             (cargo run --release --bin load_gen writes it)"
+        );
+        None
+    };
 
     let mem_uncal = match &memory {
         Some(m) => m.uncalibrated,
         None => 0,
     };
-    let uncalibrated = latency.uncalibrated + mem_uncal;
+    let serve_uncal = match &serve {
+        Some(s) => s.uncalibrated,
+        None => 0,
+    };
+    let uncalibrated = latency.uncalibrated + mem_uncal + serve_uncal;
     println!("total uncalibrated placeholder row(s): {uncalibrated}");
     if uncalibrated > 0 {
         println!(
@@ -385,7 +432,11 @@ fn run() -> Result<bool> {
         Some(m) => m.pass,
         None => true,
     };
-    Ok(latency.pass && mem_pass)
+    let serve_pass = match &serve {
+        Some(s) => s.pass,
+        None => true,
+    };
+    Ok(latency.pass && mem_pass && serve_pass)
 }
 
 /// The gate decision: no regressions and no grid drift in either
@@ -420,7 +471,12 @@ mod tests {
             bits: bits.to_string(),
             threads,
             value,
+            higher_is_better: false,
         }
+    }
+
+    fn rps_row(method: &str, bits: &str, threads: usize, value: f64) -> PerfRow {
+        PerfRow { higher_is_better: true, ..row(method, bits, threads, value) }
     }
 
     #[test]
@@ -482,6 +538,41 @@ mod tests {
         assert_eq!(cmps[0].verdict, Verdict::Uncalibrated);
         assert_eq!(cmps[1].verdict, Verdict::New);
         assert!(!gate_passes(&cmps, &missing));
+    }
+
+    #[test]
+    fn higher_is_better_flips_regression_direction() {
+        let base = vec![rps_row("closed.rps", "4-bit", 2, 1000.0)];
+        // throughput dropped 40% -> regression
+        let cur = vec![rps_row("closed.rps", "4-bit", 2, 600.0)];
+        let (cmps, _) = compare(&base, &cur, 25.0);
+        assert_eq!(cmps[0].verdict, Verdict::Regression);
+        // raw delta is still reported as the signed change
+        assert!((cmps[0].delta_pct.unwrap() + 40.0).abs() < 1e-9);
+        // throughput up 40% -> faster, not a failure
+        let cur = vec![rps_row("closed.rps", "4-bit", 2, 1400.0)];
+        let (cmps, missing) = compare(&base, &cur, 25.0);
+        assert_eq!(cmps[0].verdict, Verdict::Faster);
+        assert!(gate_passes(&cmps, &missing));
+        // within tolerance either way -> ok
+        let cur = vec![rps_row("closed.rps", "4-bit", 2, 900.0)];
+        let (cmps, _) = compare(&base, &cur, 25.0);
+        assert_eq!(cmps[0].verdict, Verdict::Ok);
+        // a latency-style row with the same numbers regresses on the
+        // *increase* instead
+        let base = vec![row("closed.p99_ms", "4-bit", 2, 1000.0)];
+        let cur = vec![row("closed.p99_ms", "4-bit", 2, 1400.0)];
+        let (cmps, _) = compare(&base, &cur, 25.0);
+        assert_eq!(cmps[0].verdict, Verdict::Regression);
+    }
+
+    #[test]
+    fn uncalibrated_placeholder_pins_throughput_rows_too() {
+        let base = vec![rps_row("open.rps", "2-bit", 2, 0.0)];
+        let cur = vec![rps_row("open.rps", "2-bit", 2, 12345.6)];
+        let (cmps, missing) = compare(&base, &cur, 25.0);
+        assert_eq!(cmps[0].verdict, Verdict::Uncalibrated);
+        assert!(gate_passes(&cmps, &missing));
     }
 
     #[test]
@@ -559,10 +650,28 @@ mod tests {
 
     #[test]
     fn value_formatting_per_section() {
-        assert_eq!(fmt_value(Some(964.53), false), "964.5");
-        assert_eq!(fmt_value(Some(1048576.0), true), "1048576");
+        assert_eq!(fmt_value(Some(964.53), 1), "964.5");
+        assert_eq!(fmt_value(Some(1048576.0), 0), "1048576");
+        assert_eq!(fmt_value(Some(0.4321), 3), "0.432");
         // placeholders and absent baselines render as em dash
-        assert_eq!(fmt_value(Some(0.0), true), "—");
-        assert_eq!(fmt_value(None, false), "—");
+        assert_eq!(fmt_value(Some(0.0), 0), "—");
+        assert_eq!(fmt_value(None, 1), "—");
+    }
+
+    #[test]
+    fn parses_serve_record_shape() {
+        let text = r#"{
+  "bench": "load_gen",
+  "host_threads": 8,
+  "results": [
+    {"method": "closed.p50_ms", "bits": "4-bit", "threads": 2, "value": 0.42},
+    {"method": "closed.rps", "bits": "4-bit", "threads": 2, "value": 9800.5, "higher_is_better": true}
+  ]
+}"#;
+        let rows = parse_rows(text, "value").unwrap();
+        assert_eq!(rows.len(), 2);
+        assert!(!rows[0].higher_is_better);
+        assert!(rows[1].higher_is_better);
+        assert!((rows[1].value - 9800.5).abs() < 1e-9);
     }
 }

@@ -241,6 +241,71 @@ pub fn memory_table(m: &crate::obs::MemoryReport) -> Table {
     t
 }
 
+fn fmt_ms(ns: u64) -> String {
+    format!("{:.3} ms", ns as f64 / 1e6)
+}
+
+/// Render a [`ServeReport`](crate::serve::ServeReport) — the serving
+/// scoreboard: latency/queue-wait/service quantiles, throughput, batch
+/// shape, and peak heap — styled like the other report tables.
+pub fn serve_table(r: &crate::serve::ServeReport) -> Table {
+    let mut t = Table::new(
+        &format!(
+            "{} — {} requests in {} batches, {:.1} req/s",
+            r.label,
+            r.requests,
+            r.batches,
+            r.requests_per_sec()
+        ),
+        &["metric", "value"],
+    );
+    t.row(vec![
+        "workers × gemm threads".to_string(),
+        format!("{} × {}", r.workers, r.gemm_threads),
+    ]);
+    t.row(vec![
+        "batcher".to_string(),
+        format!(
+            "max {} / {:.1} ms deadline / queue cap {}",
+            r.max_batch, r.deadline_ms, r.queue_capacity
+        ),
+    ]);
+    for (name, h) in [
+        ("latency", &r.latency_ns),
+        ("queue wait", &r.queue_wait_ns),
+        ("service", &r.service_ns),
+    ] {
+        t.row(vec![
+            format!("{name} (n={})", h.count),
+            format!(
+                "min {} / p50 {} / p95 {} / p99 {} / max {}",
+                fmt_ms(h.min),
+                fmt_ms(h.p50),
+                fmt_ms(h.p95),
+                fmt_ms(h.p99),
+                fmt_ms(h.max)
+            ),
+        ]);
+    }
+    let dist = r
+        .batch_sizes
+        .iter()
+        .map(|(size, count)| format!("{size}×{count}"))
+        .collect::<Vec<_>>()
+        .join(" ");
+    t.row(vec![
+        format!("batch sizes (mean {:.2})", r.mean_batch()),
+        if dist.is_empty() { "-".to_string() } else { dist },
+    ]);
+    if r.peak_heap_bytes > 0 {
+        t.row(vec![
+            "peak heap".to_string(),
+            fmt_bytes(r.peak_heap_bytes),
+        ]);
+    }
+    t
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -426,6 +491,47 @@ mod tests {
         // resident footprints don't need the allocator
         assert!(s.contains("model.weight_store resident"), "{s}");
         assert!(s.contains("4.0 KiB"), "{s}");
+    }
+
+    #[test]
+    fn serve_table_renders_scoreboard() {
+        use crate::obs::HistSummary;
+        use crate::serve::ServeReport;
+        let h = |p50: u64| HistSummary {
+            count: 64,
+            p50,
+            p95: p50 * 2,
+            p99: p50 * 3,
+            mean: p50,
+            min: p50 / 2,
+            max: p50 * 4,
+        };
+        let r = ServeReport {
+            label: "closed 4-bit".into(),
+            requests: 64,
+            batches: 16,
+            wall_secs: 2.0,
+            workers: 2,
+            gemm_threads: 4,
+            max_batch: 8,
+            deadline_ms: 2.0,
+            queue_capacity: 64,
+            latency_ns: h(2_000_000),
+            queue_wait_ns: h(500_000),
+            service_ns: h(1_000_000),
+            batch_sizes: vec![(2, 8), (8, 8)],
+            peak_heap_bytes: 3 << 20,
+        };
+        let s = serve_table(&r).render();
+        assert!(s.contains("closed 4-bit — 64 requests in 16 batches"), "{s}");
+        assert!(s.contains("32.0 req/s"), "{s}");
+        assert!(s.contains("2 × 4"), "{s}");
+        assert!(s.contains("max 8 / 2.0 ms deadline / queue cap 64"), "{s}");
+        assert!(s.contains("latency (n=64)"), "{s}");
+        assert!(s.contains("p50 2.000 ms"), "{s}");
+        assert!(s.contains("batch sizes (mean 4.00)"), "{s}");
+        assert!(s.contains("2×8 8×8"), "{s}");
+        assert!(s.contains("3.0 MiB"), "{s}");
     }
 
     #[test]

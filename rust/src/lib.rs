@@ -48,6 +48,7 @@ pub mod model;
 pub mod obs;
 pub mod quant;
 pub mod runtime;
+pub mod serve;
 pub mod util;
 
 pub use config::{LayerAssignment, Method, PlanBuilder, QuantConfig, QuantPlan, SearchSpace};

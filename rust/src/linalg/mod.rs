@@ -9,7 +9,7 @@ pub mod qr;
 
 pub use matrix::Matrix;
 pub use packed_gemm::{
-    expand_channel, packed_dot, packed_gemm, packed_matvec,
-    packed_matvec_threads, PackedCol,
+    expand_channel, expand_channel_f32, packed_dot, packed_gemm,
+    packed_matvec, packed_matvec_threads, PackedCol,
 };
 pub use qr::{cholesky_lower, qr_factor, QrFactors};

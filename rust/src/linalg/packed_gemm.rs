@@ -123,6 +123,20 @@ pub fn expand_channel(col: &PackedCol, out: &mut [f64]) {
     }
 }
 
+/// [`expand_channel`] staying in f32 (`out[i] = lut[idx_i]`): the LUT
+/// entries are exactly the f32 values `unpack_channel` produces, so
+/// this materializes a channel of an f32 weight tensor straight from
+/// the bit stream — the `eval --load-packed` path uses it to build
+/// PJRT weight literals without an intermediate f64 matrix.
+pub fn expand_channel_f32(col: &PackedCol, out: &mut [f32]) {
+    col.validate();
+    assert_eq!(out.len(), col.len, "expand_channel_f32 length mismatch");
+    let mut cur = BitCursor::new(col);
+    for o in out.iter_mut() {
+        *o = col.lut[cur.next_idx()];
+    }
+}
+
 /// Fused dot product of `x` with a packed channel: walks the bit
 /// stream, expands through the LUT, and accumulates with exactly
 /// [`dot`]'s 4-lane order — bit-identical to
@@ -248,6 +262,24 @@ mod tests {
                     f64::from(*b).to_bits(),
                     "{width:?} elem {i}"
                 );
+            }
+        }
+    }
+
+    #[test]
+    fn expand_f32_matches_unpack_channel_bitwise() {
+        for (width, n) in [
+            (BitWidth::B2, 70usize),
+            (BitWidth::B3, 129),
+            (BitWidth::B4, 64),
+        ] {
+            let (p, lut) = packed_case(17, n, width);
+            let mut out = vec![0.0f32; n];
+            expand_channel_f32(&col(&p, &lut), &mut out);
+            let reference =
+                crate::quant::packing::unpack_channel(&p, width);
+            for (i, (a, b)) in out.iter().zip(&reference).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "{width:?} elem {i}");
             }
         }
     }

@@ -169,7 +169,12 @@ fn dispatch(args: &Args) -> Result<()> {
                 )?;
                 let mut store = pipe.weights_fp.clone();
                 for l in &ps.layers {
-                    store.set_matrix(&l.name, &l.unpack_matrix());
+                    // PJRT needs dense f32 weight literals, so full
+                    // expansion is unavoidable here — but it goes
+                    // through the fused kernel's LUT expansion straight
+                    // to row-major f32 (one f32 channel of scratch),
+                    // never via an intermediate f64 matrix.
+                    store.set_data(&l.name, l.dequant_f32());
                 }
                 println!(
                     "packed checkpoint {path}: {} layers, {} resident bytes",

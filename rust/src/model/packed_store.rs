@@ -23,7 +23,7 @@ use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
-use crate::linalg::{Matrix, PackedCol};
+use crate::linalg::{expand_channel_f32, Matrix, PackedCol};
 use crate::quant::alphabet::BitWidth;
 use crate::quant::packing::{
     dequant_lut, try_pack_channel, unpack_channel, CodeConvention,
@@ -110,6 +110,27 @@ impl PackedLayer {
             }
         }
         m
+    }
+
+    /// Dequantize straight to row-major f32 tensor data (the
+    /// `WeightStore::set_data` layout) through the fused kernel's
+    /// LUT-expansion — one channel of f32 scratch is the only
+    /// intermediate, never an f64 matrix. Values are bit-identical to
+    /// [`PackedLayer::unpack_matrix`] narrowed to f32 (the LUT entries
+    /// *are* `unpack_channel`'s f32 outputs).
+    pub fn dequant_f32(&self) -> Vec<f32> {
+        let (rows, cols) = (self.rows, self.cols());
+        let luts = self.luts();
+        let kcols = self.kernel_cols(&luts);
+        let mut data = vec![0.0f32; rows * cols];
+        let mut scratch = vec![0.0f32; rows];
+        for (j, col) in kcols.iter().enumerate() {
+            expand_channel_f32(col, &mut scratch);
+            for (i, v) in scratch.iter().enumerate() {
+                data[i * cols + j] = *v;
+            }
+        }
+        data
     }
 
     /// Heap footprint (bit-stream words + per-channel struct + name),
@@ -487,6 +508,26 @@ mod tests {
             let vals = unpack_channel(ch, l.width);
             for (i, v) in vals.iter().enumerate() {
                 assert_eq!(m[(i, j)], f64::from(*v));
+            }
+        }
+    }
+
+    #[test]
+    fn dequant_f32_matches_unpack_matrix_bitwise() {
+        let store = sample_store();
+        for l in &store.layers {
+            let data = l.dequant_f32();
+            assert_eq!(data.len(), l.rows * l.cols());
+            let m = l.unpack_matrix();
+            for i in 0..l.rows {
+                for j in 0..l.cols() {
+                    assert_eq!(
+                        data[i * l.cols() + j].to_bits(),
+                        (m[(i, j)] as f32).to_bits(),
+                        "{} ({i},{j})",
+                        l.name
+                    );
+                }
             }
         }
     }

@@ -1,0 +1,56 @@
+//! The serving subsystem: an async batching inference server over
+//! resident packed weights — ROADMAP item 2, the "millions of users"
+//! half of the north star.
+//!
+//! Architecture (design note in `docs/SERVE.md`):
+//!
+//! ```text
+//! clients ──submit──▶ bounded request queue ──▶ dynamic batcher
+//!                     (sync_channel, blocks        (flush at max_batch
+//!                      when full = backpressure)    OR deadline)
+//!                                                      │ batches
+//!                                            worker threads × N
+//!                                            (fused packed GEMM on the
+//!                                             Arc-shared PackedModel)
+//!                                                      │ per-request
+//!                                            response channels
+//! ```
+//!
+//! * **Bounded queue.** [`ServeClient::submit`] blocks when the queue is
+//!   at capacity — closed-loop clients self-throttle and open-loop
+//!   generators feel backpressure instead of ballooning memory.
+//! * **Dynamic batcher.** One thread collects requests into a batch and
+//!   flushes when the batch reaches `max_batch` requests **or** the
+//!   deadline since the batch's first request elapses, whichever comes
+//!   first.
+//! * **Workers.** Sized with the engine scheduler's thread-budget idiom
+//!   ([`crate::quant::engine::plan`]): one total thread budget splits
+//!   into `workers × gemm_threads`, exactly like the quantizer's
+//!   layer/channel split.
+//! * **Determinism.** [`crate::linalg::packed_gemm`] computes every
+//!   batch row as an independent [`crate::linalg::matrix::dot`] against
+//!   the expanded channel, so each response is **bit-identical** to the
+//!   sequential single-request path ([`PackedModel::forward_one`])
+//!   regardless of batch composition, worker count, or deadline.
+//! * **No weight matrices.** The [`PackedModel`] holds only BPK1 bit
+//!   streams plus per-channel dequant LUTs; all compute goes through the
+//!   fused unpack-dequant kernel.
+//!
+//! Shutdown contract: drop every [`ServeClient`] clone, then call
+//! [`Server::shutdown`]. The batcher drains the queue (flushing the
+//! final partial batch), workers finish every dispatched batch, and the
+//! returned [`ServeReport`] accounts for exactly the submitted requests
+//! — nothing dropped, nothing duplicated.
+
+pub mod model;
+pub mod report;
+pub mod server;
+pub mod synth;
+
+pub use model::PackedModel;
+pub use report::ServeReport;
+pub use server::{
+    Response, ResponseHandle, ServeClient, ServeConfig, Server,
+    TrySubmitError,
+};
+pub use synth::synthetic_store;

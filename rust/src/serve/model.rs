@@ -1,0 +1,177 @@
+//! The resident serving model: a [`PackedStore`] plus pre-built dequant
+//! LUTs, shared across worker threads via `Arc`. All compute routes
+//! through the fused unpack-dequant kernel — no f32/f64 weight matrix is
+//! ever materialized.
+
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+use crate::linalg::{packed_gemm, packed_matvec_threads, Matrix};
+use crate::model::{PackedLayer, PackedStore};
+
+/// A packed checkpoint prepared for serving: layers are chained
+/// (`layer[l].cols == layer[l+1].rows`, validated at construction) and
+/// each layer's per-channel dequant LUTs are built once and reused for
+/// every request.
+#[derive(Debug)]
+pub struct PackedModel {
+    store: PackedStore,
+    /// `luts[l][j]` = dequant LUT of layer `l`, channel `j`
+    luts: Vec<Vec<Vec<f32>>>,
+}
+
+impl PackedModel {
+    /// Wrap a loaded store for serving. Fails when the store is empty or
+    /// the layer dimensions do not chain.
+    pub fn from_store(store: PackedStore) -> Result<PackedModel> {
+        if store.layers.is_empty() {
+            bail!("packed model has no layers");
+        }
+        for win in store.layers.windows(2) {
+            if win[0].cols() != win[1].rows {
+                bail!(
+                    "packed model layers do not chain: '{}' emits {} \
+                     features but '{}' expects {}",
+                    win[0].name,
+                    win[0].cols(),
+                    win[1].name,
+                    win[1].rows
+                );
+            }
+        }
+        let luts: Vec<Vec<Vec<f32>>> =
+            store.layers.iter().map(PackedLayer::luts).collect();
+        Ok(PackedModel { store, luts })
+    }
+
+    /// Load a BPK1 checkpoint and prepare it for serving.
+    pub fn load(path: &Path) -> Result<PackedModel> {
+        PackedModel::from_store(PackedStore::load(path)?)
+    }
+
+    /// Feature count a request vector must carry.
+    pub fn input_dim(&self) -> usize {
+        self.store.layers[0].rows
+    }
+
+    /// Feature count of a response vector.
+    pub fn output_dim(&self) -> usize {
+        self.store.layers.last().map_or(0, PackedLayer::cols)
+    }
+
+    pub fn layer_count(&self) -> usize {
+        self.store.layers.len()
+    }
+
+    pub fn store(&self) -> &PackedStore {
+        &self.store
+    }
+
+    /// Heap footprint of the resident model: packed bit streams plus the
+    /// pre-built LUTs (for the resident-bytes registry).
+    pub fn resident_bytes(&self) -> u64 {
+        let lut_bytes: u64 = self
+            .luts
+            .iter()
+            .flatten()
+            .map(|l| (l.len() * 4 + std::mem::size_of::<Vec<f32>>()) as u64)
+            .sum();
+        self.store.resident_bytes() + lut_bytes
+    }
+
+    /// Forward a batch: rows of `x` are independent requests. Each layer
+    /// runs the fused [`packed_gemm`], so every output row is
+    /// bit-identical to [`PackedModel::forward_one`] on that row alone —
+    /// batching never changes a response.
+    pub fn forward_batch(&self, x: &Matrix, threads: usize) -> Matrix {
+        assert_eq!(x.cols, self.input_dim(), "request feature count");
+        let mut act: Option<Matrix> = None;
+        for (l, layer) in self.store.layers.iter().enumerate() {
+            let cols = layer.kernel_cols(&self.luts[l]);
+            let input = act.as_ref().unwrap_or(x);
+            act = Some(packed_gemm(&cols, input, threads));
+        }
+        act.expect("from_store rejects empty models")
+    }
+
+    /// The sequential single-request reference path: one fused matvec
+    /// per layer. Thread-count invariant (index-order gather), so this
+    /// is the determinism oracle the batched path is checked against.
+    pub fn forward_one(&self, x: &[f64], threads: usize) -> Vec<f64> {
+        assert_eq!(x.len(), self.input_dim(), "request feature count");
+        let mut act: Option<Vec<f64>> = None;
+        for (l, layer) in self.store.layers.iter().enumerate() {
+            let cols = layer.kernel_cols(&self.luts[l]);
+            let input = act.as_deref().unwrap_or(x);
+            act = Some(packed_matvec_threads(&cols, input, threads));
+        }
+        act.expect("from_store rejects empty models")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::rng::SplitMix64;
+    use crate::quant::alphabet::BitWidth;
+    use crate::serve::synthetic_store;
+    use crate::util::prop::Gen;
+
+    fn model() -> PackedModel {
+        PackedModel::from_store(synthetic_store(3, 32, BitWidth::B4, 0xA11))
+            .unwrap()
+    }
+
+    #[test]
+    fn rejects_empty_and_unchained_stores() {
+        assert!(PackedModel::from_store(PackedStore::default()).is_err());
+        let a = synthetic_store(1, 16, BitWidth::B2, 1).layers.remove(0);
+        let b = synthetic_store(1, 24, BitWidth::B2, 2).layers.remove(0);
+        let err = PackedModel::from_store(PackedStore { layers: vec![a, b] })
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("chain"), "{err:#}");
+    }
+
+    #[test]
+    fn batch_rows_bit_identical_to_forward_one() {
+        let m = model();
+        let mut g = Gen { rng: SplitMix64::new(7) };
+        let (b, n) = (5usize, m.input_dim());
+        let x = Matrix::from_vec(b, n, g.vec_normal(b * n, 1.0));
+        for threads in [1usize, 4] {
+            let batched = m.forward_batch(&x, threads);
+            for r in 0..b {
+                let single = m.forward_one(x.row(r), 1);
+                for (j, want) in single.iter().enumerate() {
+                    assert_eq!(
+                        batched[(r, j)].to_bits(),
+                        want.to_bits(),
+                        "t={threads} row {r} ch {j}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn forward_one_thread_invariant() {
+        let m = model();
+        let mut g = Gen { rng: SplitMix64::new(9) };
+        let x = g.vec_normal(m.input_dim(), 1.0);
+        let t1 = m.forward_one(&x, 1);
+        let t4 = m.forward_one(&x, 4);
+        for (a, b) in t1.iter().zip(&t4) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn resident_counts_streams_and_luts() {
+        let m = model();
+        assert!(m.resident_bytes() > m.store().resident_bytes());
+        assert_eq!(m.input_dim(), 32);
+        assert_eq!(m.output_dim(), 32);
+        assert_eq!(m.layer_count(), 3);
+    }
+}

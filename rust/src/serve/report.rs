@@ -1,0 +1,120 @@
+//! The serving scoreboard: latency/throughput/batch-shape summary
+//! emitted by [`crate::serve::Server::shutdown`] and rendered as a
+//! table by `coordinator::report::serve_table`, exactly like
+//! `QuantReport` sections.
+
+use crate::obs::HistSummary;
+
+/// End-of-run serving statistics. Latency quantiles come from the
+/// obs `Hist` log-bucket histograms (±50% bucket midpoints, exact
+/// min/max); the batch-size distribution is exact.
+#[derive(Debug, Clone)]
+pub struct ServeReport {
+    /// Caller-chosen label (e.g. "closed 4-bit").
+    pub label: String,
+    pub requests: u64,
+    pub batches: u64,
+    /// Wall-clock seconds from server start to shutdown.
+    pub wall_secs: f64,
+    /// Worker threads actually spawned (after the engine-plan split).
+    pub workers: usize,
+    /// GEMM threads each worker hands to the fused kernel.
+    pub gemm_threads: usize,
+    pub max_batch: usize,
+    pub deadline_ms: f64,
+    pub queue_capacity: usize,
+    /// End-to-end per-request latency (submit → response), ns.
+    pub latency_ns: HistSummary,
+    /// Time a request waited before its batch was dispatched, ns.
+    pub queue_wait_ns: HistSummary,
+    /// Per-batch forward time, ns.
+    pub service_ns: HistSummary,
+    /// Exact batch-size → count distribution, ascending by size.
+    pub batch_sizes: Vec<(usize, u64)>,
+    /// Absolute tracked-allocator peak at shutdown (0 when the tracking
+    /// allocator is not installed). Callers scope it to a phase with
+    /// `obs::memory::reset_peak()` before starting the server.
+    pub peak_heap_bytes: u64,
+}
+
+impl ServeReport {
+    pub fn requests_per_sec(&self) -> f64 {
+        if self.wall_secs > 0.0 {
+            self.requests as f64 / self.wall_secs
+        } else {
+            0.0
+        }
+    }
+
+    /// Mean requests per dispatched batch.
+    pub fn mean_batch(&self) -> f64 {
+        if self.batches > 0 {
+            self.requests as f64 / self.batches as f64
+        } else {
+            0.0
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> ServeReport {
+        ServeReport {
+            label: "test".into(),
+            requests: 30,
+            batches: 10,
+            wall_secs: 2.0,
+            workers: 2,
+            gemm_threads: 1,
+            max_batch: 8,
+            deadline_ms: 2.0,
+            queue_capacity: 64,
+            latency_ns: HistSummary {
+                count: 30,
+                p50: 100,
+                p95: 200,
+                p99: 300,
+                mean: 120,
+                min: 50,
+                max: 400,
+            },
+            queue_wait_ns: HistSummary {
+                count: 30,
+                p50: 10,
+                p95: 20,
+                p99: 30,
+                mean: 12,
+                min: 5,
+                max: 40,
+            },
+            service_ns: HistSummary {
+                count: 10,
+                p50: 80,
+                p95: 90,
+                p99: 95,
+                mean: 82,
+                min: 70,
+                max: 99,
+            },
+            batch_sizes: vec![(2, 5), (4, 5)],
+            peak_heap_bytes: 0,
+        }
+    }
+
+    #[test]
+    fn derived_rates() {
+        let r = sample();
+        assert_eq!(r.requests_per_sec(), 15.0);
+        assert_eq!(r.mean_batch(), 3.0);
+        let empty = ServeReport {
+            requests: 0,
+            batches: 0,
+            wall_secs: 0.0,
+            ..sample()
+        };
+        assert_eq!(empty.requests_per_sec(), 0.0);
+        assert_eq!(empty.mean_batch(), 0.0);
+    }
+}

@@ -1,0 +1,501 @@
+//! The request queue, dynamic batcher, and worker pool. See the module
+//! doc in [`crate::serve`] for the architecture picture and
+//! `docs/SERVE.md` for the design note.
+//!
+//! Determinism contract: a response is a pure function of the request
+//! vector and the packed model. Batching, worker count, GEMM thread
+//! count, and deadline only change *when* a request runs, never what it
+//! returns — every output is bit-identical to
+//! [`PackedModel::forward_one`] on that request alone.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{self, Receiver, SyncSender, TrySendError};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::obs;
+use crate::obs::Hist;
+use crate::quant::engine;
+use crate::serve::{PackedModel, ServeReport};
+use crate::util::pool::resolve_threads;
+
+/// Server tuning knobs. `Default` matches the CLI/load_gen defaults.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Label stamped on the emitted [`ServeReport`].
+    pub label: String,
+    /// Flush a batch once it holds this many requests.
+    pub max_batch: usize,
+    /// ... or once this long has passed since the batch's first
+    /// request arrived, whichever comes first.
+    pub deadline: Duration,
+    /// Worker threads; 0 = derive from the thread budget.
+    pub workers: usize,
+    /// Total thread budget; 0 = auto (`BEACON_THREADS` / cores). Split
+    /// into `workers × gemm_threads` by [`engine::plan`], the same
+    /// idiom the quantize engine uses for its layer/channel split.
+    pub threads: usize,
+    /// Bound of the request queue — submits block (or `try_submit`
+    /// returns `Full`) beyond this many queued requests.
+    pub queue_capacity: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> ServeConfig {
+        ServeConfig {
+            label: "serve".to_string(),
+            max_batch: 8,
+            deadline: Duration::from_millis(2),
+            workers: 0,
+            threads: 0,
+            queue_capacity: 64,
+        }
+    }
+}
+
+/// One completed inference.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub id: u64,
+    pub output: Vec<f64>,
+    /// Requests in the batch this one rode in.
+    pub batch_size: usize,
+    /// Submit → batch pickup by a worker.
+    pub queue_wait: Duration,
+    /// The batch's fused-forward time.
+    pub service: Duration,
+}
+
+/// Why [`ServeClient::try_submit`] could not enqueue; both variants
+/// hand the input vector back so the caller can retry.
+#[derive(Debug, PartialEq)]
+pub enum TrySubmitError {
+    /// Queue at capacity — backpressure.
+    Full(Vec<f64>),
+    /// Server threads are gone.
+    Closed(Vec<f64>),
+}
+
+struct Request {
+    id: u64,
+    input: Vec<f64>,
+    enqueued: Instant,
+    resp: mpsc::Sender<Response>,
+}
+
+/// Ticket for one in-flight request; [`ResponseHandle::wait`] blocks
+/// until the worker delivers.
+#[derive(Debug)]
+pub struct ResponseHandle {
+    pub id: u64,
+    rx: mpsc::Receiver<Response>,
+}
+
+impl ResponseHandle {
+    pub fn wait(self) -> Response {
+        self.rx.recv().expect("serve: server dropped an in-flight request")
+    }
+}
+
+/// Cloneable submission endpoint. Dropping every clone is the shutdown
+/// signal: the batcher drains what is queued and exits.
+#[derive(Clone)]
+pub struct ServeClient {
+    tx: SyncSender<Request>,
+    next_id: Arc<AtomicU64>,
+    input_dim: usize,
+}
+
+impl ServeClient {
+    pub fn input_dim(&self) -> usize {
+        self.input_dim
+    }
+
+    fn request(&self, input: Vec<f64>) -> (Request, ResponseHandle) {
+        assert_eq!(input.len(), self.input_dim, "request feature count");
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let (tx, rx) = mpsc::channel();
+        let req =
+            Request { id, input, enqueued: Instant::now(), resp: tx };
+        (req, ResponseHandle { id, rx })
+    }
+
+    /// Enqueue, blocking while the queue is at capacity (closed-loop
+    /// clients self-throttle through this).
+    pub fn submit(&self, input: Vec<f64>) -> ResponseHandle {
+        let (req, handle) = self.request(input);
+        self.tx.send(req).expect("serve: server is gone");
+        handle
+    }
+
+    /// Non-blocking enqueue; open-loop generators use this to observe
+    /// backpressure instead of stalling their arrival clock.
+    pub fn try_submit(
+        &self,
+        input: Vec<f64>,
+    ) -> Result<ResponseHandle, TrySubmitError> {
+        let (req, handle) = self.request(input);
+        match self.tx.try_send(req) {
+            Ok(()) => Ok(handle),
+            Err(TrySendError::Full(r)) => Err(TrySubmitError::Full(r.input)),
+            Err(TrySendError::Disconnected(r)) => {
+                Err(TrySubmitError::Closed(r.input))
+            }
+        }
+    }
+}
+
+#[derive(Default)]
+struct ServeStats {
+    latency: Hist,
+    queue_wait: Hist,
+    service: Hist,
+    batch_sizes: BTreeMap<usize, u64>,
+    batches: u64,
+    requests: u64,
+}
+
+/// The running server: batcher + workers over an `Arc`-shared
+/// [`PackedModel`]. Obtain one from [`Server::start`]; finish with
+/// [`Server::shutdown`] *after* dropping every [`ServeClient`] clone.
+pub struct Server {
+    batcher: JoinHandle<()>,
+    workers: Vec<JoinHandle<()>>,
+    stats: Arc<Mutex<ServeStats>>,
+    started: Instant,
+    cfg: ServeConfig,
+    nworkers: usize,
+    gemm_threads: usize,
+}
+
+impl Server {
+    /// Spawn the batcher and workers. Thread sizing reuses the engine
+    /// scheduler: the total budget (`cfg.threads`, 0 = auto) splits
+    /// into `workers × gemm_threads` via [`engine::plan`] with the
+    /// requested worker count as the outer ("layer") axis.
+    pub fn start(
+        model: Arc<PackedModel>,
+        cfg: ServeConfig,
+    ) -> (Server, ServeClient) {
+        let total = resolve_threads(cfg.threads);
+        let workers_req =
+            if cfg.workers == 0 { total } else { cfg.workers };
+        let sched = engine::plan(total, workers_req, true);
+        let nworkers = sched.layer_threads;
+        let gemm_threads = sched.channel_threads;
+
+        obs::memory::set_resident(
+            "serve.packed_model",
+            model.resident_bytes(),
+        );
+
+        let (req_tx, req_rx) =
+            mpsc::sync_channel::<Request>(cfg.queue_capacity.max(1));
+        let (batch_tx, batch_rx) =
+            mpsc::sync_channel::<Vec<Request>>(nworkers);
+        let batch_rx = Arc::new(Mutex::new(batch_rx));
+
+        let client = ServeClient {
+            tx: req_tx,
+            next_id: Arc::new(AtomicU64::new(0)),
+            input_dim: model.input_dim(),
+        };
+
+        let batcher = {
+            let (max_batch, deadline) = (cfg.max_batch.max(1), cfg.deadline);
+            std::thread::Builder::new()
+                .name("serve.batcher".to_string())
+                .spawn(move || batcher_loop(req_rx, batch_tx, max_batch, deadline))
+                .expect("serve: spawn batcher")
+        };
+
+        let stats = Arc::new(Mutex::new(ServeStats::default()));
+        let workers = (0..nworkers)
+            .map(|wi| {
+                let model = Arc::clone(&model);
+                let batch_rx = Arc::clone(&batch_rx);
+                let stats = Arc::clone(&stats);
+                std::thread::Builder::new()
+                    .name(format!("serve.worker.{wi}"))
+                    .spawn(move || {
+                        worker_loop(&model, &batch_rx, &stats, gemm_threads)
+                    })
+                    .expect("serve: spawn worker")
+            })
+            .collect();
+
+        let server = Server {
+            batcher,
+            workers,
+            stats,
+            started: Instant::now(),
+            cfg,
+            nworkers,
+            gemm_threads,
+        };
+        (server, client)
+    }
+
+    pub fn workers(&self) -> usize {
+        self.nworkers
+    }
+
+    pub fn gemm_threads(&self) -> usize {
+        self.gemm_threads
+    }
+
+    /// Join everything and summarize. Graceful-drain contract: blocks
+    /// until the batcher has flushed every queued request (including a
+    /// final partial batch) and the workers have answered all of them —
+    /// callers must drop their [`ServeClient`] clones first or this
+    /// waits forever.
+    pub fn shutdown(self) -> ServeReport {
+        self.batcher.join().expect("serve: batcher panicked");
+        for w in self.workers {
+            w.join().expect("serve: worker panicked");
+        }
+        let wall_secs = self.started.elapsed().as_secs_f64();
+        let stats = self.stats.lock().unwrap();
+        ServeReport {
+            label: self.cfg.label.clone(),
+            requests: stats.requests,
+            batches: stats.batches,
+            wall_secs,
+            workers: self.nworkers,
+            gemm_threads: self.gemm_threads,
+            max_batch: self.cfg.max_batch,
+            deadline_ms: self.cfg.deadline.as_secs_f64() * 1e3,
+            queue_capacity: self.cfg.queue_capacity,
+            latency_ns: stats.latency.summary(),
+            queue_wait_ns: stats.queue_wait.summary(),
+            service_ns: stats.service.summary(),
+            batch_sizes: stats
+                .batch_sizes
+                .iter()
+                .map(|(&size, &count)| (size, count))
+                .collect(),
+            peak_heap_bytes: obs::memory::peak_bytes(),
+        }
+    }
+}
+
+/// Collect requests into batches: block for the first request, then
+/// keep accepting until the batch holds `max_batch` requests or
+/// `deadline` has passed since the first one arrived. Exits when every
+/// client sender is gone and the queue is drained.
+fn batcher_loop(
+    req_rx: Receiver<Request>,
+    batch_tx: SyncSender<Vec<Request>>,
+    max_batch: usize,
+    deadline: Duration,
+) {
+    while let Ok(first) = req_rx.recv() {
+        let flush_at = Instant::now() + deadline;
+        let mut batch = vec![first];
+        while batch.len() < max_batch {
+            let left = flush_at.saturating_duration_since(Instant::now());
+            if left.is_zero() {
+                break;
+            }
+            match req_rx.recv_timeout(left) {
+                Ok(req) => batch.push(req),
+                // Timeout = deadline hit; Disconnected = clients gone —
+                // either way this batch is as full as it gets.
+                Err(_) => break,
+            }
+        }
+        if batch_tx.send(batch).is_err() {
+            return; // workers gone — nothing left to answer to
+        }
+    }
+}
+
+/// Pull batches, run the fused forward, deliver per-request responses,
+/// and fold the batch's timings into the shared stats. Exits when the
+/// batcher hangs up.
+fn worker_loop(
+    model: &PackedModel,
+    batch_rx: &Mutex<Receiver<Vec<Request>>>,
+    stats: &Mutex<ServeStats>,
+    gemm_threads: usize,
+) {
+    loop {
+        // The temporary guard drops before processing, so other workers
+        // can pull the next batch while this one computes.
+        let batch = match batch_rx.lock().unwrap().recv() {
+            Ok(b) => b,
+            Err(_) => return,
+        };
+        let picked = Instant::now();
+        let n = batch.len();
+        let dim = model.input_dim();
+        let mut flat = Vec::with_capacity(n * dim);
+        for req in &batch {
+            flat.extend_from_slice(&req.input);
+        }
+        let x = crate::linalg::Matrix::from_vec(n, dim, flat);
+
+        let sp = obs::span_args("serve", || {
+            ("batch".to_string(), vec![("size", n.to_string())])
+        });
+        let out = model.forward_batch(&x, gemm_threads);
+        let service = Duration::from_secs_f64(sp.finish());
+
+        let mut local = ServeStats {
+            batches: 1,
+            requests: n as u64,
+            ..ServeStats::default()
+        };
+        *local.batch_sizes.entry(n).or_insert(0) += 1;
+        local.service.record(service.as_nanos() as u64);
+        for (r, req) in batch.into_iter().enumerate() {
+            let queue_wait = picked.duration_since(req.enqueued);
+            local.queue_wait.record(queue_wait.as_nanos() as u64);
+            local.latency.record(req.enqueued.elapsed().as_nanos() as u64);
+            // a client that dropped its handle just doesn't get a reply
+            let _ = req.resp.send(Response {
+                id: req.id,
+                output: out.row(r).to_vec(),
+                batch_size: n,
+                queue_wait,
+                service,
+            });
+        }
+        obs::merge_hist("serve.queue_wait_ns", local.queue_wait.clone());
+        obs::merge_hist("serve.service_ns", local.service.clone());
+        obs::counter("serve.requests", n as u64);
+
+        let mut s = stats.lock().unwrap();
+        s.latency.merge(&local.latency);
+        s.queue_wait.merge(&local.queue_wait);
+        s.service.merge(&local.service);
+        for (&size, &count) in &local.batch_sizes {
+            *s.batch_sizes.entry(size).or_insert(0) += count;
+        }
+        s.batches += local.batches;
+        s.requests += local.requests;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::rng::SplitMix64;
+    use crate::quant::alphabet::BitWidth;
+    use crate::serve::synthetic_store;
+    use crate::util::prop::Gen;
+
+    fn model() -> Arc<PackedModel> {
+        Arc::new(
+            PackedModel::from_store(synthetic_store(
+                2,
+                24,
+                BitWidth::B4,
+                0x5E,
+            ))
+            .unwrap(),
+        )
+    }
+
+    #[test]
+    fn responses_match_forward_one_bitwise() {
+        let m = model();
+        let (server, client) = Server::start(
+            Arc::clone(&m),
+            ServeConfig { workers: 2, threads: 2, ..Default::default() },
+        );
+        let mut g = Gen { rng: SplitMix64::new(3) };
+        let inputs: Vec<Vec<f64>> =
+            (0..12).map(|_| g.vec_normal(m.input_dim(), 1.0)).collect();
+        let handles: Vec<ResponseHandle> =
+            inputs.iter().map(|x| client.submit(x.clone())).collect();
+        drop(client);
+        for (x, h) in inputs.iter().zip(handles) {
+            let id = h.id;
+            let got = h.wait();
+            assert_eq!(got.id, id);
+            let want = m.forward_one(x, 1);
+            assert_eq!(got.output.len(), want.len());
+            for (a, b) in got.output.iter().zip(&want) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+            assert!(got.batch_size >= 1);
+        }
+        let report = server.shutdown();
+        assert_eq!(report.requests, 12);
+        assert!(report.batches >= 1);
+        let counted: u64 =
+            report.batch_sizes.iter().map(|&(s, c)| s as u64 * c).sum();
+        assert_eq!(counted, 12);
+    }
+
+    #[test]
+    fn engine_plan_sizes_the_worker_split() {
+        let m = model();
+        let (server, client) = Server::start(
+            Arc::clone(&m),
+            ServeConfig { workers: 2, threads: 8, ..Default::default() },
+        );
+        assert_eq!(server.workers(), 2);
+        assert_eq!(server.gemm_threads(), 4);
+        drop(client);
+        server.shutdown();
+
+        let (server, client) = Server::start(
+            m,
+            ServeConfig { workers: 1, threads: 4, ..Default::default() },
+        );
+        assert_eq!(server.workers(), 1);
+        assert_eq!(server.gemm_threads(), 4);
+        drop(client);
+        server.shutdown();
+    }
+
+    #[test]
+    fn try_submit_reports_full_and_closed_with_input_back() {
+        // A hand-built client over a rendezvous channel nobody reads:
+        // deterministic Full. Dropping the receiver: deterministic
+        // Closed.
+        let (tx, rx) = mpsc::sync_channel::<Request>(1);
+        let client = ServeClient {
+            tx,
+            next_id: Arc::new(AtomicU64::new(0)),
+            input_dim: 2,
+        };
+        assert!(client.try_submit(vec![1.0, 2.0]).is_ok()); // fills slot
+        match client.try_submit(vec![3.0, 4.0]) {
+            Err(TrySubmitError::Full(v)) => assert_eq!(v, vec![3.0, 4.0]),
+            other => panic!("want Full, got {other:?}"),
+        }
+        drop(rx);
+        match client.try_submit(vec![5.0, 6.0]) {
+            Err(TrySubmitError::Closed(v)) => assert_eq!(v, vec![5.0, 6.0]),
+            other => panic!("want Closed, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn report_carries_config_and_split() {
+        let (server, client) = Server::start(
+            model(),
+            ServeConfig {
+                label: "unit".to_string(),
+                max_batch: 4,
+                deadline: Duration::from_millis(1),
+                workers: 1,
+                threads: 1,
+                queue_capacity: 16,
+            },
+        );
+        drop(client);
+        let r = server.shutdown();
+        assert_eq!(r.label, "unit");
+        assert_eq!(r.max_batch, 4);
+        assert_eq!(r.deadline_ms, 1.0);
+        assert_eq!(r.queue_capacity, 16);
+        assert_eq!(r.workers, 1);
+        assert_eq!(r.requests, 0);
+    }
+}

@@ -1,0 +1,77 @@
+//! Synthetic packed checkpoints for load generation and tests: random
+//! on-grid codes packed directly via [`PackedLayer::pack`] — no
+//! quantization pass, so a serving fixture costs milliseconds to build
+//! while exercising exactly the BPK1 + fused-kernel path real
+//! checkpoints use.
+
+use crate::data::rng::SplitMix64;
+use crate::model::{PackedLayer, PackedStore};
+use crate::quant::alphabet::{alphabet, BitWidth};
+use crate::util::prop::Gen;
+
+/// Build a chained `layers × (dim×dim)` packed store at `width`. Codes
+/// are drawn uniformly from the width's alphabet; per-channel scales
+/// are ~1/√dim so chained activations stay near unit scale (no
+/// overflow/underflow drift across layers). Deterministic in `seed`.
+pub fn synthetic_store(
+    layers: usize,
+    dim: usize,
+    width: BitWidth,
+    seed: u64,
+) -> PackedStore {
+    let alph = alphabet(width);
+    let mut g = Gen { rng: SplitMix64::new(seed) };
+    let store_layers = (0..layers)
+        .map(|li| {
+            let codes: Vec<Vec<f64>> = (0..dim)
+                .map(|_| (0..dim).map(|_| *g.pick(&alph)).collect())
+                .collect();
+            let scales: Vec<f64> = (0..dim)
+                .map(|_| g.f64_in(0.5, 1.5) / (dim as f64).sqrt())
+                .collect();
+            let offsets = vec![0.0f64; dim];
+            PackedLayer::pack(
+                &format!("serve.layer.{li}.w"),
+                &codes,
+                &scales,
+                &offsets,
+                width,
+            )
+            .expect("alphabet codes are on-grid by construction")
+        })
+        .collect();
+    PackedStore { layers: store_layers }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_in_seed() {
+        let a = synthetic_store(2, 24, BitWidth::B2, 42);
+        let b = synthetic_store(2, 24, BitWidth::B2, 42);
+        assert_eq!(a.layers.len(), 2);
+        for (la, lb) in a.layers.iter().zip(&b.layers) {
+            assert_eq!(la.name, lb.name);
+            for (ca, cb) in la.channels.iter().zip(&lb.channels) {
+                assert_eq!(ca.words, cb.words);
+                assert_eq!(ca.scale.to_bits(), cb.scale.to_bits());
+            }
+        }
+        let c = synthetic_store(2, 24, BitWidth::B2, 43);
+        assert_ne!(
+            a.layers[0].channels[0].words,
+            c.layers[0].channels[0].words
+        );
+    }
+
+    #[test]
+    fn layers_chain_square() {
+        let s = synthetic_store(3, 16, BitWidth::B4, 7);
+        for l in &s.layers {
+            assert_eq!(l.rows, 16);
+            assert_eq!(l.cols(), 16);
+        }
+    }
+}

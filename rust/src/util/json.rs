@@ -70,6 +70,13 @@ impl Value {
         }
     }
 
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Value::Num(n) => Some(*n),
@@ -349,6 +356,16 @@ mod tests {
             Value::parse("\"a\\nb\"").unwrap(),
             Value::Str("a\nb".into())
         );
+    }
+
+    #[test]
+    fn as_bool_accessor() {
+        assert_eq!(Value::Bool(true).as_bool(), Some(true));
+        assert_eq!(Value::Bool(false).as_bool(), Some(false));
+        assert_eq!(Value::Num(1.0).as_bool(), None);
+        assert_eq!(Value::Null.as_bool(), None);
+        let v = Value::parse(r#"{"higher_is_better": true}"#).unwrap();
+        assert_eq!(v.at(&["higher_is_better"]).as_bool(), Some(true));
     }
 
     #[test]

@@ -1,0 +1,209 @@
+//! Integration tests for the batching server's scheduling behavior —
+//! the properties the unit tests can't pin without real threads and
+//! real clocks:
+//!
+//! 1. size-trigger flush: with an effectively infinite deadline every
+//!    batch fills to exactly `max_batch`;
+//! 2. deadline-trigger flush: with an effectively infinite `max_batch`
+//!    and live clients, responses still arrive, in batches smaller than
+//!    the size trigger — only the deadline can have flushed them;
+//! 3. determinism: batched responses are bit-identical to the
+//!    sequential single-request packed path at worker counts {1, 4};
+//! 4. graceful drain: concurrent producers pushing through a
+//!    near-capacity bounded queue lose nothing — every request id is
+//!    answered exactly once and every output verifies.
+
+use std::collections::BTreeSet;
+use std::sync::Arc;
+use std::time::Duration;
+
+use beacon_ptq::data::rng::SplitMix64;
+use beacon_ptq::quant::alphabet::BitWidth;
+use beacon_ptq::serve::{
+    synthetic_store, PackedModel, Response, ResponseHandle, ServeConfig,
+    Server,
+};
+use beacon_ptq::util::prop::Gen;
+
+fn model() -> Arc<PackedModel> {
+    Arc::new(
+        PackedModel::from_store(synthetic_store(2, 32, BitWidth::B4, 0xD14))
+            .unwrap(),
+    )
+}
+
+fn input(seed: u64, dim: usize) -> Vec<f64> {
+    let mut g = Gen { rng: SplitMix64::new(seed) };
+    g.vec_normal(dim, 1.0)
+}
+
+fn assert_bitwise(model: &PackedModel, x: &[f64], resp: &Response) {
+    let want = model.forward_one(x, 1);
+    assert_eq!(resp.output.len(), want.len());
+    for (j, (a, b)) in resp.output.iter().zip(&want).enumerate() {
+        assert_eq!(
+            a.to_bits(),
+            b.to_bits(),
+            "request {} channel {j}: batched response diverged from the \
+             sequential packed path",
+            resp.id
+        );
+    }
+}
+
+#[test]
+fn size_trigger_fills_every_batch_exactly() {
+    let m = model();
+    let (server, client) = Server::start(
+        Arc::clone(&m),
+        ServeConfig {
+            max_batch: 4,
+            // effectively never: only the size trigger can flush
+            deadline: Duration::from_secs(10),
+            workers: 1,
+            threads: 1,
+            ..ServeConfig::default()
+        },
+    );
+    let xs: Vec<Vec<f64>> =
+        (0..12).map(|r| input(0x512E ^ r as u64, m.input_dim())).collect();
+    let handles: Vec<ResponseHandle> =
+        xs.iter().map(|x| client.submit(x.clone())).collect();
+    drop(client);
+    for (x, h) in xs.iter().zip(handles) {
+        let resp = h.wait();
+        assert_eq!(resp.batch_size, 4, "only full batches should flush");
+        assert_bitwise(&m, x, &resp);
+    }
+    let report = server.shutdown();
+    assert_eq!(report.requests, 12);
+    assert_eq!(report.batches, 3);
+    assert_eq!(report.batch_sizes, vec![(4, 3)]);
+}
+
+#[test]
+fn deadline_trigger_flushes_partial_batches() {
+    let m = model();
+    let (server, client) = Server::start(
+        Arc::clone(&m),
+        ServeConfig {
+            // effectively never by size: only the deadline can flush
+            max_batch: 64,
+            deadline: Duration::from_millis(20),
+            workers: 1,
+            threads: 1,
+            ..ServeConfig::default()
+        },
+    );
+    let xs: Vec<Vec<f64>> =
+        (0..3).map(|r| input(0xDEAD ^ r as u64, m.input_dim())).collect();
+    let handles: Vec<ResponseHandle> =
+        xs.iter().map(|x| client.submit(x.clone())).collect();
+    // The client stays alive while we wait: if only disconnect-drain
+    // flushed partial batches, these waits would hang forever.
+    for (x, h) in xs.iter().zip(handles) {
+        let resp = h.wait();
+        assert!(
+            resp.batch_size < 64,
+            "batch of {} can only have flushed on deadline",
+            resp.batch_size
+        );
+        assert_bitwise(&m, x, &resp);
+    }
+    drop(client);
+    let report = server.shutdown();
+    assert_eq!(report.requests, 3);
+    assert!(report.batches >= 1 && report.batches <= 3);
+    assert!(report.batch_sizes.iter().all(|&(size, _)| size < 64));
+}
+
+#[test]
+fn batched_responses_bit_identical_across_worker_counts() {
+    let m = model();
+    for workers in [1usize, 4] {
+        let (server, client) = Server::start(
+            Arc::clone(&m),
+            ServeConfig {
+                max_batch: 4,
+                deadline: Duration::from_millis(1),
+                workers,
+                threads: 4,
+                ..ServeConfig::default()
+            },
+        );
+        let xs: Vec<Vec<f64>> = (0..24)
+            .map(|r| input(0xB17 ^ r as u64, m.input_dim()))
+            .collect();
+        let handles: Vec<ResponseHandle> =
+            xs.iter().map(|x| client.submit(x.clone())).collect();
+        drop(client);
+        for (x, h) in xs.iter().zip(handles) {
+            assert_bitwise(&m, x, &h.wait());
+        }
+        let report = server.shutdown();
+        assert_eq!(report.workers, workers, "engine::plan honored the ask");
+        assert_eq!(report.requests, 24);
+    }
+}
+
+#[test]
+fn graceful_drain_answers_every_request_exactly_once() {
+    let m = model();
+    const PRODUCERS: usize = 8;
+    const PER_PRODUCER: usize = 25;
+    let (server, client) = Server::start(
+        Arc::clone(&m),
+        ServeConfig {
+            max_batch: 4,
+            deadline: Duration::from_millis(1),
+            workers: 2,
+            threads: 2,
+            // tiny bound: producers hit backpressure constantly
+            queue_capacity: 4,
+            ..ServeConfig::default()
+        },
+    );
+    let joins: Vec<_> = (0..PRODUCERS)
+        .map(|p| {
+            let client = client.clone();
+            let m = Arc::clone(&m);
+            std::thread::spawn(move || {
+                let mut got = Vec::with_capacity(PER_PRODUCER);
+                for i in 0..PER_PRODUCER {
+                    let x = input(
+                        0xD12A ^ ((p as u64) << 32) ^ i as u64,
+                        m.input_dim(),
+                    );
+                    // blocking submit: stalls while the queue is full
+                    let h = client.submit(x.clone());
+                    got.push((x, h));
+                }
+                got.into_iter()
+                    .map(|(x, h)| (x, h.wait()))
+                    .collect::<Vec<_>>()
+            })
+        })
+        .collect();
+    drop(client);
+
+    let mut ids = BTreeSet::new();
+    let mut total = 0usize;
+    for j in joins {
+        for (x, resp) in j.join().expect("producer thread panicked") {
+            assert_bitwise(&m, &x, &resp);
+            assert!(ids.insert(resp.id), "id {} answered twice", resp.id);
+            total += 1;
+        }
+    }
+    let expected = (PRODUCERS * PER_PRODUCER) as u64;
+    assert_eq!(total as u64, expected, "a request was dropped");
+    // ids are a dense 0..N: nothing was skipped or duplicated
+    assert_eq!(ids.iter().next(), Some(&0));
+    assert_eq!(ids.iter().next_back(), Some(&(expected - 1)));
+
+    let report = server.shutdown();
+    assert_eq!(report.requests, expected);
+    let counted: u64 =
+        report.batch_sizes.iter().map(|&(s, c)| s as u64 * c).sum();
+    assert_eq!(counted, expected);
+}
