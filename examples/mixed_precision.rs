@@ -1,31 +1,60 @@
-//! Mixed precision + mixed method through the plan API: attention
-//! projections (qkv/proj) at 2-bit Beacon, MLP layers (fc1/fc2) at
-//! 4-bit COMQ — the configuration LeanQuant/COMQ-style loss-aware
-//! assignment would pick when attention tolerates aggressive widths but
-//! the MLP does not.
+//! Mixed precision + mixed method + mixed *scenario* through the plan
+//! API: attention projections at grouped-asymmetric 3-bit Beacon with an
+//! outlier sidecar (`beacon:3+g16+asym+k2`), the proj layers at plain
+//! 2-bit Beacon, and the MLP at 4-bit COMQ — the shape of configuration
+//! a loss-aware assignment picks when attention carries a few dominant
+//! weights but tolerates narrow grids once they are split out.
 //!
-//! Prints the resolved per-layer table, the effective bits/weight, and
-//! the plan manifest that reproduces the run from one file.
+//! With the AOT bundle present (`make artifacts`) the plan runs through
+//! [`Pipeline::quantize`] against real tiny-sim activations. Without it
+//! — the CI smoke path — a deterministic synthetic model stands in:
+//! every layer is quantized with its assignment's own quantizer, the
+//! grouped layer is packed into a BPK2 checkpoint, and the round-trip
+//! is checked byte-for-byte.
 //!
 //! ```bash
 //! cargo run --release --example mixed_precision
 //! ```
 
-use beacon_ptq::config::{PlanBuilder, QuantConfig};
+use std::path::Path;
+
+use beacon_ptq::config::{PlanBuilder, QuantConfig, QuantPlan};
 use beacon_ptq::coordinator::report::plan_table;
 use beacon_ptq::coordinator::Pipeline;
+use beacon_ptq::data::rng::SplitMix64;
+use beacon_ptq::linalg::Matrix;
+use beacon_ptq::model::spec::{quantizable_layers, ViTConfig};
+use beacon_ptq::model::{PackedLayer, PackedStore};
+use beacon_ptq::quant::engine::LayerCtx;
+use beacon_ptq::quant::layer_recon_error;
+use beacon_ptq::util::prop::Gen;
 
-fn main() -> anyhow::Result<()> {
-    let mut pipe = Pipeline::from_artifacts("artifacts", "tiny-sim")?;
-
-    // Base config: 2-bit Beacon everywhere. Overrides are ordered globs,
-    // last match wins — the MLP patterns re-route fc1/fc2 to 4-bit COMQ.
-    let base = QuantConfig { bits: 2.0, loops: 4, ..QuantConfig::default() };
-    let plan = PlanBuilder::uniform(&base)
-        .override_layers("blocks.*.qkv.w", "beacon:2")?
+/// The mixed plan: overrides are ordered globs, last match wins.
+fn build_plan(base: &QuantConfig, layers: &[String]) -> anyhow::Result<QuantPlan> {
+    PlanBuilder::uniform(base)
+        .override_layers("blocks.*.qkv.w", "beacon:3+g16+asym+k2")?
         .override_layers("blocks.*.proj.w", "beacon:2")?
         .override_layers("blocks.*.fc?.w", "comq:4+loops=4")?
-        .build(pipe.quantizable())?;
+        .build(layers)
+}
+
+fn main() -> anyhow::Result<()> {
+    if Path::new("artifacts/manifest__tiny-sim.json").exists() {
+        match run_real() {
+            Ok(()) => return Ok(()),
+            Err(e) => {
+                eprintln!("artifact path failed ({e:#}); falling back to synthetic")
+            }
+        }
+    }
+    run_synthetic()
+}
+
+/// Quantize + evaluate against the real calibration set.
+fn run_real() -> anyhow::Result<()> {
+    let mut pipe = Pipeline::from_artifacts("artifacts", "tiny-sim")?;
+    let base = QuantConfig { bits: 2.0, loops: 4, ..QuantConfig::default() };
+    let plan = build_plan(&base, pipe.quantizable())?;
 
     println!("plan label: {}", plan.label());
     println!(
@@ -36,13 +65,102 @@ fn main() -> anyhow::Result<()> {
     let report = pipe.quantize(&plan)?;
     println!("{}", plan_table(&report).render());
     println!("FP top-1    : {:.2}%", report.fp_top1 * 100.0);
-    println!("mixed top-1 : {:.2}%  (drop {:.2}%)",
-        report.top1 * 100.0, report.accuracy_drop());
+    println!(
+        "mixed top-1 : {:.2}%  (drop {:.2}%)",
+        report.top1 * 100.0,
+        report.accuracy_drop()
+    );
 
     // every run reproducible from one file: `beacon quantize --config` or
     // QuantPlan::from_file() rebuilds this exact plan
     let out = "artifacts/plan__tiny-sim_mixed.cfg";
     std::fs::write(out, plan.to_manifest())?;
     println!("\nwrote resolved plan manifest to {out}");
+    Ok(())
+}
+
+/// Artifact-free walk-through on a synthetic 2-block tiny-sim geometry:
+/// per-layer quantize with each assignment's quantizer, then pack the
+/// grouped qkv layer into a BPK2 checkpoint and verify the round-trip.
+fn run_synthetic() -> anyhow::Result<()> {
+    println!("no artifacts found — quantizing a synthetic model\n");
+    let cfg = ViTConfig { depth: 2, ..ViTConfig::tiny_sim() };
+    let names = quantizable_layers(&cfg);
+    let d = cfg.d_model;
+    let f = cfg.d_mlp();
+    let m = 192; // calibration token rows
+
+    let mut g = Gen { rng: SplitMix64::new(0x317ED) };
+    let mut xs: Vec<Matrix> = Vec::new();
+    let mut ws: Vec<Matrix> = Vec::new();
+    for name in &names {
+        let (n, np) = if name.contains("qkv") {
+            (d, 3 * d)
+        } else if name.contains("fc1") {
+            (d, f)
+        } else if name.contains("fc2") {
+            (f, d)
+        } else {
+            (d, d)
+        };
+        xs.push(Matrix::from_vec(m, n, g.vec_normal(m * n, 1.0)));
+        let mut w = Matrix::from_vec(n, np, g.vec_normal(n * np, 0.3));
+        if name.contains("qkv") {
+            // a few dominant weights per layer — the outlier sidecar's
+            // reason to exist on the attention recipe
+            for (i, v) in w.data.iter_mut().enumerate() {
+                if i % 131 == 0 {
+                    *v *= 8.0;
+                }
+            }
+        }
+        ws.push(w);
+    }
+
+    let base = QuantConfig { bits: 2.0, loops: 2, ..QuantConfig::default() };
+    let plan = build_plan(&base, &names)?;
+    println!("plan label: {}", plan.label());
+    let numel = |name: &str| {
+        let i = names.iter().position(|n| n == name).unwrap();
+        ws[i].rows * ws[i].cols
+    };
+    println!("effective bits/weight: {:.3}\n", plan.effective_bits(numel));
+
+    let mut packed: Option<PackedLayer> = None;
+    for (i, a) in plan.assignments.iter().enumerate() {
+        let lq = a
+            .quantizer(&plan.base)
+            .quantize_layer(&LayerCtx::plain(&xs[i], &ws[i], 0))?;
+        let err = layer_recon_error(&xs[i], &ws[i], &lq.dequant);
+        println!("  {:<18} {:<22} recon err {err:.4}", a.layer, a.tag());
+        if packed.is_none() && a.group_size > 0 {
+            let bits = a.to_config(&plan.base).bit_width().unwrap();
+            packed = PackedLayer::pack_quant(&a.layer, &lq, bits);
+        }
+    }
+
+    // the grouped layer rides the BPK2 container; prove the round-trip
+    let layer = packed.expect("plan has a grouped layer with on-grid codes");
+    let store = PackedStore { layers: vec![layer] };
+    let out = std::env::temp_dir().join("mixed_precision_scenario.bpk");
+    store.save(&out)?;
+    let bytes = std::fs::read(&out)?;
+    anyhow::ensure!(&bytes[..4] == b"BPK2", "grouped layer must write BPK2");
+    let back = PackedStore::load(&out)?;
+    let out2 = std::env::temp_dir().join("mixed_precision_scenario_resave.bpk");
+    back.save(&out2)?;
+    anyhow::ensure!(bytes == std::fs::read(&out2)?, "BPK2 resave diverged");
+    println!(
+        "\npacked grouped layer '{}' → {} ({} bytes, BPK2, round-trip verified)",
+        back.layers[0].name,
+        out.display(),
+        bytes.len()
+    );
+
+    // every run reproducible from one file
+    let manifest = plan.to_manifest();
+    let rebuilt = QuantPlan::from_manifest(&manifest, &names)?;
+    anyhow::ensure!(rebuilt == plan, "manifest round-trip diverged");
+    println!("plan manifest round-trip verified ({} layers)", names.len());
     Ok(())
 }

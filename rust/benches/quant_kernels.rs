@@ -186,6 +186,42 @@ fn main() {
     });
     push("gptq", BitWidth::B2, 1, r.median_ns, chan_summary());
 
+    // --- scenario rows: the grouped / asymmetric / outlier-sidecar
+    // quantization paths through the engine quantizer — the per-group
+    // restricted sweeps and sidecar bookkeeping priced against the
+    // dense rows above (same layer, same bit width) ----------------------
+    println!("\n== scenario sweep (grouped / asymmetric / outliers) ==");
+    {
+        use beacon_ptq::config::Method;
+        let scenarios: [(&'static str, Method, usize, bool, usize); 3] = [
+            ("beacon-g16-asym", Method::Beacon, 16, true, 0),
+            ("beacon-g16-k2", Method::Beacon, 16, false, 2),
+            ("rtn-g16-asym-k2", Method::Rtn, 16, true, 2),
+        ];
+        for &(name, method, gsz, asym, k) in &scenarios {
+            for &threads in &thread_grid {
+                let qc = QuantConfig {
+                    method,
+                    bits: 2.0,
+                    loops: 4,
+                    threads,
+                    group_size: gsz,
+                    asymmetric: asym,
+                    outlier_k: k,
+                    ..QuantConfig::default()
+                };
+                let q = method.quantizer(BitWidth::B2, &qc);
+                obs::reset();
+                let r = bench(&format!("{name} {nn}x{np} 2-bit t={threads}"), 1, 3, || {
+                    black_box(
+                        q.quantize_layer(&LayerCtx::plain(&x, &w, threads)).unwrap(),
+                    );
+                });
+                push(name, BitWidth::B2, threads, r.median_ns, chan_summary());
+            }
+        }
+    }
+
     // --- mixed-plan rows: heterogeneous per-layer method×bits through the
     // engine scheduler, exactly as Pipeline::quantize(&QuantPlan) fans it
     // (attention at beacon:2, MLP at comq:4 — one tiny-sim block) --------
@@ -310,6 +346,8 @@ fn main() {
                     len: p.len,
                     words: &p.words,
                     lut,
+                    group_size: p.group_size as usize,
+                    outliers: &p.outliers,
                 })
                 .collect();
             for &threads in &[1usize, 4] {

@@ -68,6 +68,15 @@ pub struct QuantConfig {
     pub ln_tune_lr: f32,
     /// GPTQ Hessian damping factor
     pub gptq_damp: f64,
+    /// elements per scale/offset group within a channel (0 = one
+    /// scale/offset for the whole channel, the historical convention)
+    pub group_size: usize,
+    /// asymmetric (zero-point) grids: per-group centering for Beacon;
+    /// the min-max family (RTN/GPTQ/COMQ) is natively asymmetric
+    pub asymmetric: bool,
+    /// keep the top-k magnitude weights per channel exact in an f32
+    /// sidecar and quantize the rest (0 = dense)
+    pub outlier_k: usize,
     pub recapture: RecapturePolicy,
     /// calibration images to use (0 = all available)
     pub calib_count: usize,
@@ -91,6 +100,9 @@ impl Default for QuantConfig {
             ln_tune_steps: 30,
             ln_tune_lr: 0.05,
             gptq_damp: 0.01,
+            group_size: 0,
+            asymmetric: false,
+            outlier_k: 0,
             recapture: RecapturePolicy::PerLayer,
             calib_count: 0,
             eval_count: 0,
@@ -127,6 +139,17 @@ impl QuantConfig {
                 s.push_str("+ln");
             }
         }
+        // scenario axes apply to every method; the default scenario adds
+        // nothing, so historical labels are unchanged
+        if self.group_size > 0 {
+            s.push_str(&format!("+g{}", self.group_size));
+        }
+        if self.asymmetric {
+            s.push_str("+asym");
+        }
+        if self.outlier_k > 0 {
+            s.push_str(&format!("+k{}", self.outlier_k));
+        }
         s
     }
 
@@ -146,6 +169,9 @@ impl QuantConfig {
             kv("ln_tune_steps", self.ln_tune_steps.to_string()),
             kv("ln_tune_lr", format!("{}", self.ln_tune_lr)),
             kv("gptq_damp", format!("{}", self.gptq_damp)),
+            kv("group_size", self.group_size.to_string()),
+            kv("asymmetric", self.asymmetric.to_string()),
+            kv("outlier_k", self.outlier_k.to_string()),
             kv(
                 "recapture",
                 match self.recapture {
@@ -179,6 +205,15 @@ impl QuantConfig {
             "ln_tune_steps" => self.ln_tune_steps = value.parse()?,
             "ln_tune_lr" => self.ln_tune_lr = value.parse()?,
             "gptq_damp" => self.gptq_damp = value.parse()?,
+            "group_size" => {
+                let g: usize = value.parse()?;
+                if g == 1 {
+                    bail!("group_size must be 0 (per-channel) or >= 2, got 1");
+                }
+                self.group_size = g;
+            }
+            "asymmetric" | "asym" => self.asymmetric = parse_bool(value)?,
+            "outlier_k" => self.outlier_k = value.parse()?,
             "calib_count" => self.calib_count = value.parse()?,
             "eval_count" => self.eval_count = value.parse()?,
             "threads" => self.threads = value.parse()?,
@@ -241,7 +276,8 @@ impl QuantConfig {
             k,
             "method" | "bits" | "loops" | "error_correction" | "ec"
                 | "centering" | "ln_tune" | "ln_tune_steps" | "ln_tune_lr"
-                | "gptq_damp" | "calib_count" | "eval_count" | "recapture"
+                | "gptq_damp" | "group_size" | "asymmetric" | "asym"
+                | "outlier_k" | "calib_count" | "eval_count" | "recapture"
                 | "threads"
         )
     }
@@ -261,6 +297,10 @@ pub struct SearchSpace {
     pub methods: Vec<Method>,
     /// candidate bit widths (empty = [`BitWidth::ALL`])
     pub widths: Vec<BitWidth>,
+    /// candidate group sizes (empty = just the base config's group_size)
+    pub group_sizes: Vec<usize>,
+    /// candidate per-channel outlier counts (empty = just the base's)
+    pub outlier_ks: Vec<usize>,
     /// size-weighted effective bits/weight ceiling for the emitted plan
     pub budget_bits: f64,
 }
@@ -268,7 +308,13 @@ pub struct SearchSpace {
 impl SearchSpace {
     /// Default grid at the given budget: base method × all widths.
     pub fn new(budget_bits: f64) -> SearchSpace {
-        SearchSpace { methods: Vec::new(), widths: Vec::new(), budget_bits }
+        SearchSpace {
+            methods: Vec::new(),
+            widths: Vec::new(),
+            group_sizes: Vec::new(),
+            outlier_ks: Vec::new(),
+            budget_bits,
+        }
     }
 
     /// Parse from the CLI surface: comma-separated method and width lists
@@ -327,6 +373,55 @@ impl SearchSpace {
             vec![base.method]
         } else {
             self.methods.clone()
+        }
+    }
+
+    /// Add candidate group sizes from a CSV (`--plan-groups 0,16,32`).
+    pub fn set_group_sizes(&mut self, csv: &str) -> Result<()> {
+        for part in csv.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+            let g: usize = part
+                .parse()
+                .map_err(|_| anyhow::anyhow!("bad group size '{part}'"))?;
+            if g == 1 {
+                bail!("group size must be 0 (per-channel) or >= 2, got 1");
+            }
+            self.group_sizes.push(g);
+        }
+        Ok(())
+    }
+
+    /// Add candidate outlier counts from a CSV (`--plan-outliers 0,2`).
+    pub fn set_outlier_ks(&mut self, csv: &str) -> Result<()> {
+        for part in csv.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+            let k: usize = part
+                .parse()
+                .map_err(|_| anyhow::anyhow!("bad outlier count '{part}'"))?;
+            self.outlier_ks.push(k);
+        }
+        Ok(())
+    }
+
+    /// The candidate group sizes, resolved against a base config.
+    pub fn resolved_group_sizes(&self, base: &QuantConfig) -> Vec<usize> {
+        if self.group_sizes.is_empty() {
+            vec![base.group_size]
+        } else {
+            let mut g = self.group_sizes.clone();
+            g.sort_unstable();
+            g.dedup();
+            g
+        }
+    }
+
+    /// The candidate outlier counts, resolved against a base config.
+    pub fn resolved_outlier_ks(&self, base: &QuantConfig) -> Vec<usize> {
+        if self.outlier_ks.is_empty() {
+            vec![base.outlier_k]
+        } else {
+            let mut k = self.outlier_ks.clone();
+            k.sort_unstable();
+            k.dedup();
+            k
         }
     }
 }
@@ -453,6 +548,42 @@ mod tests {
         // duplicate widths collapse, sorted ascending
         let w = s.sorted_widths();
         assert_eq!(w.iter().map(|b| b.0).collect::<Vec<_>>(), vec![2.0, 4.0]);
+    }
+
+    #[test]
+    fn scenario_keys_parse_and_label() {
+        let mut c = QuantConfig::default();
+        assert_eq!(c.group_size, 0);
+        assert!(!c.asymmetric);
+        assert_eq!(c.outlier_k, 0);
+        c.set("group_size", "16").unwrap();
+        c.set("asym", "true").unwrap();
+        c.set("outlier_k", "2").unwrap();
+        assert_eq!(c.label(), "beacon-2-bit+g16+asym+k2");
+        assert!(c.set("group_size", "1").is_err(), "degenerate group size");
+        // round-trips through to_kv/set like every other field
+        let mut back = QuantConfig::default();
+        for (k, v) in c.to_kv() {
+            back.set(&k, &v).unwrap();
+        }
+        assert_eq!(back, c);
+    }
+
+    #[test]
+    fn search_space_scenario_axes() {
+        let mut s = SearchSpace::new(3.0);
+        let base = QuantConfig::default();
+        // empty = base's values only
+        assert_eq!(s.resolved_group_sizes(&base), vec![0]);
+        assert_eq!(s.resolved_outlier_ks(&base), vec![0]);
+        s.set_group_sizes("32, 0,16").unwrap();
+        s.set_outlier_ks("2,0,2").unwrap();
+        // sorted + deduped
+        assert_eq!(s.resolved_group_sizes(&base), vec![0, 16, 32]);
+        assert_eq!(s.resolved_outlier_ks(&base), vec![0, 2]);
+        assert!(SearchSpace::new(3.0).set_group_sizes("1").is_err());
+        assert!(SearchSpace::new(3.0).set_group_sizes("x").is_err());
+        assert!(SearchSpace::new(3.0).set_outlier_ks("-1").is_err());
     }
 
     #[test]

@@ -79,10 +79,11 @@ pub fn glob_match(pattern: &str, name: &str) -> bool {
 /// from the base config (or from an earlier matching override).
 ///
 /// Compact string form: `method[:bits][+flag]...` where flags are
-/// `ec`/`noec`, `centering`/`nocentering`, `loops=K`, `damp=F`. The
-/// method is optional when bits are given (`:4` re-bits whatever method
-/// an earlier match picked). Examples: `comq:4`, `beacon:8+centering`,
-/// `rtn`, `:2+loops=6`.
+/// `ec`/`noec`, `centering`/`nocentering`, `g<N>` (group size, `g0` =
+/// per-channel), `asym`/`sym`, `k<N>` (outlier count), `loops=K`,
+/// `damp=F`. The method is optional when bits are given (`:4` re-bits
+/// whatever method an earlier match picked). Examples: `comq:4`,
+/// `beacon:8+centering`, `rtn`, `:2+loops=6`, `beacon:3+g16+asym+k2`.
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct LayerSpec {
     pub method: Option<Method>,
@@ -91,6 +92,9 @@ pub struct LayerSpec {
     pub error_correction: Option<bool>,
     pub centering: Option<bool>,
     pub gptq_damp: Option<f64>,
+    pub group_size: Option<usize>,
+    pub asymmetric: Option<bool>,
+    pub outlier_k: Option<usize>,
 }
 
 impl LayerSpec {
@@ -126,6 +130,24 @@ impl LayerSpec {
                 "noec" => spec.error_correction = Some(false),
                 "centering" => spec.centering = Some(true),
                 "nocentering" => spec.centering = Some(false),
+                "asym" => spec.asymmetric = Some(true),
+                "sym" => spec.asymmetric = Some(false),
+                // g<N> / k<N> shorthands (the scenario axes); any other
+                // g…/k… string still falls through to key=value / unknown
+                _ if flag.len() > 1
+                    && flag.starts_with('g')
+                    && flag[1..].bytes().all(|b| b.is_ascii_digit()) =>
+                {
+                    spec.set_key("group_size", &flag[1..])
+                        .with_context(|| format!("in spec '{s}'"))?
+                }
+                _ if flag.len() > 1
+                    && flag.starts_with('k')
+                    && flag[1..].bytes().all(|b| b.is_ascii_digit()) =>
+                {
+                    spec.set_key("outlier_k", &flag[1..])
+                        .with_context(|| format!("in spec '{s}'"))?
+                }
                 _ => match flag.split_once('=') {
                     Some((k, v)) => spec
                         .set_key(k.trim(), v.trim())
@@ -162,6 +184,15 @@ impl LayerSpec {
             }
             "centering" => self.centering = Some(super::parse_bool(value)?),
             "gptq_damp" | "damp" => self.gptq_damp = Some(value.parse().context("damp")?),
+            "group_size" => {
+                let g: usize = value.parse().context("group_size")?;
+                if g == 1 {
+                    bail!("group_size must be 0 (per-channel) or >= 2, got 1");
+                }
+                self.group_size = Some(g);
+            }
+            "asymmetric" | "asym" => self.asymmetric = Some(super::parse_bool(value)?),
+            "outlier_k" => self.outlier_k = Some(value.parse().context("outlier_k")?),
             _ => bail!("unknown layer-override key '{key}'"),
         }
         Ok(())
@@ -187,6 +218,15 @@ impl LayerSpec {
         if other.gptq_damp.is_some() {
             self.gptq_damp = other.gptq_damp;
         }
+        if other.group_size.is_some() {
+            self.group_size = other.group_size;
+        }
+        if other.asymmetric.is_some() {
+            self.asymmetric = other.asymmetric;
+        }
+        if other.outlier_k.is_some() {
+            self.outlier_k = other.outlier_k;
+        }
     }
 }
 
@@ -202,6 +242,9 @@ pub struct LayerAssignment {
     pub error_correction: bool,
     pub centering: bool,
     pub gptq_damp: f64,
+    pub group_size: usize,
+    pub asymmetric: bool,
+    pub outlier_k: usize,
 }
 
 impl LayerAssignment {
@@ -214,6 +257,9 @@ impl LayerAssignment {
             error_correction: base.error_correction,
             centering: base.centering,
             gptq_damp: base.gptq_damp,
+            group_size: base.group_size,
+            asymmetric: base.asymmetric,
+            outlier_k: base.outlier_k,
         })
     }
 
@@ -236,6 +282,15 @@ impl LayerAssignment {
         if let Some(d) = spec.gptq_damp {
             self.gptq_damp = d;
         }
+        if let Some(g) = spec.group_size {
+            self.group_size = g;
+        }
+        if let Some(a) = spec.asymmetric {
+            self.asymmetric = a;
+        }
+        if let Some(k) = spec.outlier_k {
+            self.outlier_k = k;
+        }
     }
 
     /// The assignment merged back into a full config (pipeline-level
@@ -249,13 +304,27 @@ impl LayerAssignment {
             error_correction: self.error_correction,
             centering: self.centering,
             gptq_damp: self.gptq_damp,
+            group_size: self.group_size,
+            asymmetric: self.asymmetric,
+            outlier_k: self.outlier_k,
             ..base.clone()
         }
     }
 
-    /// Method×bits tag used in labels and report rows ("comq-4-bit").
+    /// Method×bits tag used in labels and report rows ("comq-4-bit",
+    /// "beacon-3-bit+g16+asym+k2").
     pub fn tag(&self) -> String {
-        format!("{}-{}", self.method.name(), self.bits.label())
+        let mut s = format!("{}-{}", self.method.name(), self.bits.label());
+        if self.group_size > 0 {
+            s.push_str(&format!("+g{}", self.group_size));
+        }
+        if self.asymmetric {
+            s.push_str("+asym");
+        }
+        if self.outlier_k > 0 {
+            s.push_str(&format!("+k{}", self.outlier_k));
+        }
+        s
     }
 
     /// Whether every method/bits/opts field equals `other`'s (the layer
@@ -267,6 +336,29 @@ impl LayerAssignment {
             && self.error_correction == other.error_correction
             && self.centering == other.centering
             && self.gptq_damp == other.gptq_damp
+            && self.group_size == other.group_size
+            && self.asymmetric == other.asymmetric
+            && self.outlier_k == other.outlier_k
+    }
+
+    /// Structural validation of the scenario axes — shared by
+    /// [`PlanBuilder::build`] and [`QuantPlan::from_assignments`] so a
+    /// bad combination fails before any weight is touched.
+    fn validate_scenario(&self) -> Result<()> {
+        if self.group_size == 1 {
+            bail!(
+                "layer '{}': group_size must be 0 (per-channel) or >= 2",
+                self.layer
+            );
+        }
+        if self.method == Method::Gptq && (self.group_size > 0 || self.outlier_k > 0) {
+            bail!(
+                "layer '{}': gptq supports only the dense per-channel scenario \
+                 (drop the +g/+k flags or pick beacon/rtn/comq)",
+                self.layer
+            );
+        }
+        Ok(())
     }
 }
 
@@ -404,6 +496,7 @@ impl PlanBuilder {
                     matched[oi] = true;
                 }
             }
+            a.validate_scenario()?;
             assignments.push(a);
         }
         for (oi, (pat, _)) in self.overrides.iter().enumerate() {
@@ -452,6 +545,9 @@ impl QuantPlan {
             bail!("cannot build a plan with zero assignments");
         }
         base.bit_width().context("base config")?;
+        for a in &assignments {
+            a.validate_scenario()?;
+        }
         Ok(QuantPlan { base, assignments })
     }
 
@@ -521,6 +617,9 @@ impl QuantPlan {
             let _ = writeln!(s, "ec = {}", a.error_correction);
             let _ = writeln!(s, "centering = {}", a.centering);
             let _ = writeln!(s, "damp = {}", a.gptq_damp);
+            let _ = writeln!(s, "group_size = {}", a.group_size);
+            let _ = writeln!(s, "asym = {}", a.asymmetric);
+            let _ = writeln!(s, "outlier_k = {}", a.outlier_k);
         }
         s
     }
@@ -718,6 +817,9 @@ bits = 3
                 error_correction: base.error_correction,
                 centering: base.centering,
                 gptq_damp: base.gptq_damp,
+                group_size: base.group_size,
+                asymmetric: base.asymmetric,
+                outlier_k: base.outlier_k,
             })
             .collect();
         let plan = QuantPlan::from_assignments(base.clone(), assignments).unwrap();
@@ -727,6 +829,59 @@ bits = 3
         let bad = QuantConfig { bits: 7.3, ..QuantConfig::default() };
         let a = plan.assignments.clone();
         assert!(QuantPlan::from_assignments(bad, a).is_err());
+    }
+
+    #[test]
+    fn spec_parse_scenario_flags() {
+        let s = LayerSpec::parse("beacon:3+g16+asym+k2").unwrap();
+        assert_eq!(s.method, Some(Method::Beacon));
+        assert_eq!(s.bits.unwrap().0, 3.0);
+        assert_eq!(s.group_size, Some(16));
+        assert_eq!(s.asymmetric, Some(true));
+        assert_eq!(s.outlier_k, Some(2));
+        // sym flips asym back off; g0 restores per-channel
+        let s = LayerSpec::parse(":4+sym+g0+k0").unwrap();
+        assert_eq!(s.asymmetric, Some(false));
+        assert_eq!(s.group_size, Some(0));
+        assert_eq!(s.outlier_k, Some(0));
+        // key=value spellings are equivalent
+        let s = LayerSpec::parse("rtn+group_size=32+outlier_k=1+asym").unwrap();
+        assert_eq!(s.group_size, Some(32));
+        assert_eq!(s.outlier_k, Some(1));
+        // garbage still rejected
+        assert!(LayerSpec::parse("beacon:2+g1").is_err(), "degenerate group");
+        assert!(LayerSpec::parse("beacon:2+gx").is_err());
+        assert!(LayerSpec::parse("beacon:2+kitten").is_err());
+    }
+
+    #[test]
+    fn scenario_plan_round_trip_and_gptq_rejection() {
+        let plan = PlanBuilder::uniform(&QuantConfig::default())
+            .override_layers("blocks.*.qkv.w", "beacon:3+g16+asym+k2")
+            .unwrap()
+            .override_layers("blocks.*.fc?.w", "comq:4+g32")
+            .unwrap()
+            .build(&layers())
+            .unwrap();
+        let a = plan.assignment_for("blocks.0.qkv.w").unwrap();
+        assert_eq!((a.group_size, a.asymmetric, a.outlier_k), (16, true, 2));
+        assert_eq!(a.tag(), "beacon-3-bit+g16+asym+k2");
+        let back = QuantPlan::from_manifest(&plan.to_manifest(), &layers()).unwrap();
+        assert_eq!(back, plan);
+        // gptq cannot take the grouped/outlier axes — fails at build time
+        let e = PlanBuilder::uniform(&QuantConfig::default())
+            .override_layers("blocks.*", "gptq:4+g16")
+            .unwrap()
+            .build(&layers())
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("gptq"), "{e}");
+        let base = QuantConfig::default();
+        let mut a = plan.assignments.clone();
+        a[0].method = Method::Gptq;
+        a[0].outlier_k = 2;
+        a[0].group_size = 0;
+        assert!(QuantPlan::from_assignments(base, a).is_err());
     }
 
     #[test]

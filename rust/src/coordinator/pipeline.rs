@@ -346,10 +346,13 @@ impl Pipeline {
         // sweep, so the adapter swap is gated on the method's identity,
         // not just the prefactored capability — a future second
         // prefactored-capable method must bring its own artifact +
-        // adapter rather than silently inheriting Beacon's.
+        // adapter rather than silently inheriting Beacon's. Grouped /
+        // asymmetric / outlier scenarios stay on the native path too:
+        // the artifact implements only the dense whole-channel sweep.
         if self.backend == KernelBackend::Pjrt
             && native.supports_prefactored()
             && native.name() == "beacon"
+            && crate::quant::Scenario::from_config(qc).is_default()
         {
             return Box::new(PjrtKernelQuantizer {
                 pipe: self,
@@ -485,7 +488,7 @@ impl Pipeline {
             }
             codes.push(col);
         }
-        Ok(LayerQuant { codes, scales, offsets, dequant })
+        Ok(LayerQuant { codes, scales, offsets, dequant, grouped: None })
     }
 
     /// Run the full PTQ pipeline under `plan` — each layer quantized by
@@ -601,9 +604,9 @@ impl Pipeline {
             bits: BitWidth,
         ) {
             if let Some(layers) = packed {
-                match PackedLayer::pack(
-                    lname, &lq.codes, &lq.scales, &lq.offsets, bits,
-                ) {
+                // scenario-aware: grouped/outlier metadata rides into
+                // the store (BPK2); dense layers pack exactly as before
+                match PackedLayer::pack_quant(lname, lq, bits) {
                     Some(l) => layers.push(l),
                     None => *packed = None,
                 }

@@ -55,12 +55,16 @@ pub struct LayerProbe<'a> {
     pub numel: usize,
 }
 
-/// One probed `(method, bits)` candidate and the relative reconstruction
-/// error it achieved on its layer.
+/// One probed `(method, bits, group_size, outlier_k)` candidate and the
+/// relative reconstruction error it achieved on its layer.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct ProbeCell {
     pub method: Method,
     pub bits: BitWidth,
+    /// rows per quantization group (0 = per-channel)
+    pub group_size: usize,
+    /// exact-kept outliers per channel (0 = none)
+    pub outlier_k: usize,
     pub error: f64,
 }
 
@@ -135,15 +139,34 @@ pub fn probe_errors(
     }
     let methods = space.resolved_methods(base);
     let widths = space.sorted_widths();
-    let cands: Vec<(Method, BitWidth)> = widths
-        .iter()
-        .flat_map(|b| methods.iter().map(move |m| (*m, *b)))
-        .collect();
+    let group_sizes = space.resolved_group_sizes(base);
+    let outlier_ks = space.resolved_outlier_ks(base);
+    // width-major candidate grid (allocate builds its ladder from the
+    // width of each cell); gptq supports only the dense scenario, so
+    // its grouped/outlier combinations are dropped rather than probed
+    let mut cands: Vec<(Method, BitWidth, usize, usize)> = Vec::new();
+    for b in &widths {
+        for m in &methods {
+            for g in &group_sizes {
+                for k in &outlier_ks {
+                    if *m == Method::Gptq && (*g > 0 || *k > 0) {
+                        continue;
+                    }
+                    cands.push((*m, *b, *g, *k));
+                }
+            }
+        }
+    }
+    ensure!(
+        !cands.is_empty(),
+        "planner candidate grid is empty after dropping gptq \
+         grouped/outlier combinations"
+    );
     let threads = pool::resolve_threads(base.threads);
     let sched = engine::plan(threads, probes.len(), true);
     engine::run_probe_grid(sched, probes.len(), cands.len(), |li, ci| {
         let p = &probes[li];
-        let (method, bits) = cands[ci];
+        let (method, bits, group_size, outlier_k) = cands[ci];
         let _probe_span = crate::obs::span_args("planner", || {
             (
                 format!("probe {}:{}", method.name(), bits.label()),
@@ -151,6 +174,8 @@ pub fn probe_errors(
                     ("layer", p.name.to_string()),
                     ("method", method.name().to_string()),
                     ("bits", bits.label()),
+                    ("group_size", group_size.to_string()),
+                    ("outlier_k", outlier_k.to_string()),
                 ],
             )
         });
@@ -159,6 +184,8 @@ pub fn probe_errors(
             method,
             bits: bits.0,
             error_correction: false,
+            group_size,
+            outlier_k,
             ..base.clone()
         };
         let lq = method
@@ -172,7 +199,7 @@ pub fn probe_errors(
             method.name(),
             bits.label()
         );
-        Ok(ProbeCell { method, bits, error })
+        Ok(ProbeCell { method, bits, group_size, outlier_k, error })
     })
 }
 
@@ -351,6 +378,9 @@ pub fn search_plan(
             error_correction: base.error_correction,
             centering: base.centering,
             gptq_damp: base.gptq_damp,
+            group_size: c.group_size,
+            asymmetric: base.asymmetric,
+            outlier_k: c.outlier_k,
         })
         .collect();
     let plan = QuantPlan::from_assignments(base.clone(), assignments)?;
@@ -383,7 +413,13 @@ mod tests {
     use crate::util::prop::Gen;
 
     fn cell(method: Method, bits: f64, error: f64) -> ProbeCell {
-        ProbeCell { method, bits: BitWidth::parse(&format!("{bits}")).unwrap(), error }
+        ProbeCell {
+            method,
+            bits: BitWidth::parse(&format!("{bits}")).unwrap(),
+            group_size: 0,
+            outlier_k: 0,
+            error,
+        }
     }
 
     #[test]
@@ -560,5 +596,58 @@ mod tests {
                 assert_eq!(ca.error.to_bits(), cb.error.to_bits());
             }
         }
+    }
+
+    #[test]
+    fn search_plan_probes_scenario_axes() {
+        let mut g = Gen { rng: crate::data::rng::SplitMix64::new(41) };
+        let names = ["blocks.0.qkv.w", "blocks.0.fc1.w"];
+        let shapes = [(48usize, 20usize, 6usize), (48, 20, 8)];
+        let xs: Vec<Matrix> = shapes
+            .iter()
+            .map(|&(m, n, _)| Matrix::from_vec(m, n, g.vec_normal(m * n, 1.0)))
+            .collect();
+        let grams: Vec<Matrix> = xs.iter().map(|x| x.gram()).collect();
+        let ws: Vec<Matrix> = shapes
+            .iter()
+            .map(|&(_, n, np)| Matrix::from_vec(n, np, g.vec_normal(n * np, 0.3)))
+            .collect();
+        let probes: Vec<LayerProbe> = (0..2)
+            .map(|i| LayerProbe {
+                name: names[i],
+                x: &xs[i],
+                gram: &grams[i],
+                w: &ws[i],
+                numel: ws[i].rows * ws[i].cols,
+            })
+            .collect();
+        let base = QuantConfig { method: Method::Rtn, bits: 2.0, ..QuantConfig::default() };
+        let mut space = SearchSpace::parse(3.0, None, Some("2,4")).unwrap();
+        space.set_group_sizes("0,10").unwrap();
+        space.set_outlier_ks("0,1").unwrap();
+        let (plan, report) = search_plan(&base, &probes, &space).unwrap();
+        // 2 widths × 1 method × 2 group sizes × 2 outlier ks, per layer
+        assert_eq!(report.probe_count, 2 * 8);
+        for a in &plan.assignments {
+            assert!(a.group_size == 0 || a.group_size == 10, "{}", a.group_size);
+            assert!(a.outlier_k <= 1, "{}", a.outlier_k);
+        }
+        // the searched plan round-trips through the manifest with its
+        // scenario columns intact
+        let lnames: Vec<String> = names.iter().map(|s| s.to_string()).collect();
+        let back = QuantPlan::from_manifest(&plan.to_manifest(), &lnames).unwrap();
+        assert_eq!(back, plan);
+
+        // gptq's grouped/outlier combinations are dropped from the
+        // grid (not probed, not an error)
+        let mut space2 =
+            SearchSpace::parse(3.0, Some("rtn,gptq"), Some("2,4")).unwrap();
+        space2.set_group_sizes("0,10").unwrap();
+        let cells = probe_errors(&base, &probes, &space2).unwrap();
+        // per width: rtn × {0,10} + gptq × {0} = 3 cells
+        assert_eq!(cells[0].len(), 2 * 3);
+        assert!(cells[0]
+            .iter()
+            .all(|c| c.method != Method::Gptq || c.group_size == 0));
     }
 }

@@ -57,6 +57,20 @@ pub fn pct(v: f64) -> String {
     format!("{:.2}", v * 100.0)
 }
 
+/// Compact probe-cell tag: `method:bits` plus the scenario suffix
+/// (`+gN`, `+kN`) when the cell is not the dense per-channel default —
+/// keeps planner-table columns distinct across the scenario grid.
+fn probe_tag(c: &super::planner::ProbeCell) -> String {
+    let mut s = format!("{}:{}", c.method.name(), c.bits.label());
+    if c.group_size > 0 {
+        s.push_str(&format!("+g{}", c.group_size));
+    }
+    if c.outlier_k > 0 {
+        s.push_str(&format!("+k{}", c.outlier_k));
+    }
+    s
+}
+
 /// Render a [`PlannerReport`](super::planner::PlannerReport) — the
 /// sibling of [`plan_table`] for searched plans: one row per layer with
 /// the full probe error matrix (columns in candidate order) and the
@@ -65,7 +79,7 @@ pub fn planner_table(p: &super::planner::PlannerReport) -> Table {
     let mut headers: Vec<String> = vec!["layer".into(), "numel".into()];
     if let Some(first) = p.layers.first() {
         for c in &first.probes {
-            headers.push(format!("{}:{}", c.method.name(), c.bits.label()));
+            headers.push(probe_tag(c));
         }
     }
     headers.push("chosen".into());
@@ -87,12 +101,7 @@ pub fn planner_table(p: &super::planner::PlannerReport) -> Table {
         for c in &lr.probes {
             cells.push(format!("{:.4}", c.error));
         }
-        cells.push(format!(
-            "{}:{} ({:.4})",
-            lr.chosen.method.name(),
-            lr.chosen.bits.label(),
-            lr.chosen.error
-        ));
+        cells.push(format!("{} ({:.4})", probe_tag(&lr.chosen), lr.chosen.error));
         t.row(cells);
     }
     t
@@ -338,8 +347,20 @@ mod tests {
         use crate::config::Method;
         use crate::coordinator::planner::{LayerProbeReport, PlannerReport, ProbeCell};
         use crate::quant::alphabet::BitWidth;
-        let c2 = ProbeCell { method: Method::Beacon, bits: BitWidth::B2, error: 0.4321 };
-        let c4 = ProbeCell { method: Method::Comq, bits: BitWidth::B4, error: 0.1111 };
+        let c2 = ProbeCell {
+            method: Method::Beacon,
+            bits: BitWidth::B2,
+            group_size: 16,
+            outlier_k: 2,
+            error: 0.4321,
+        };
+        let c4 = ProbeCell {
+            method: Method::Comq,
+            bits: BitWidth::B4,
+            group_size: 0,
+            outlier_k: 0,
+            error: 0.1111,
+        };
         let p = PlannerReport {
             budget_bits: 3.0,
             probe_count: 2,
@@ -357,7 +378,7 @@ mod tests {
         let s = planner_table(&p).render();
         assert!(s.contains("budget 3.00 bits"), "{s}");
         assert!(s.contains("100% used"), "{s}");
-        assert!(s.contains("beacon:2-bit"), "{s}");
+        assert!(s.contains("beacon:2-bit+g16+k2"), "{s}");
         assert!(s.contains("0.4321"), "{s}");
         assert!(s.contains("comq:4-bit (0.1111)"), "{s}");
         assert!(s.contains("12288"), "{s}");

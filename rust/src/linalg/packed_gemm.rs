@@ -3,13 +3,16 @@
 //! weight matrix.
 //!
 //! A packed channel arrives as a little-endian bit stream of
-//! `bits`-bit indices plus a per-channel dequant LUT
-//! (`lut[k] = scale·v(k) + offset`, built by
-//! `quant::packing::dequant_lut` — the LUT entries are the *exact* f32
-//! values `unpack_channel` would produce). The kernel walks the stream
-//! one 64-bit word at a time through a [`BitCursor`], expands each
-//! index through the LUT, and FMAs straight into the output
-//! accumulators.
+//! `bits`-bit indices plus a dequant LUT — one `2^bits` stride per
+//! group, concatenated (`lut[g·2^bits + k] = scale_g·v(k) + offset_g`,
+//! built by `quant::packing::dequant_luts`; the entries are the
+//! *exact* f32 values `unpack_channel` would produce). The kernel
+//! walks the stream one 64-bit word at a time through a [`BitCursor`],
+//! expands each index through the current group's LUT stride (the base
+//! advances by counter at group boundaries — no division per element),
+//! substitutes exact sidecar values at outlier rows, and FMAs straight
+//! into the output accumulators. Dense channels are the single-group,
+//! no-outlier case and take the exact same code path.
 //!
 //! Determinism contract, matching the rest of the crate:
 //!
@@ -31,25 +34,47 @@ use super::matrix::{dot, Matrix};
 use crate::util::pool;
 
 /// One packed weight channel as the kernel consumes it: a borrowed view
-/// of the bit-stream words plus the channel's dequant LUT
-/// (`lut.len() == 1 << bits`, so any index the stream can encode is in
-/// range).
+/// of the bit-stream words plus the channel's dequant LUT — one
+/// `2^bits` stride per group, concatenated group-major
+/// (`lut.len() == ngroups << bits`), so any index the stream can
+/// encode is in range for every group. Dense channels are the
+/// single-group case (`group_size == 0`, no outliers, one stride).
 #[derive(Debug, Clone, Copy)]
 pub struct PackedCol<'a> {
     /// storage bits per element (2/3/4 for the supported grids)
     pub bits: u32,
     /// number of packed elements
     pub len: usize,
+    /// rows per group; 0 = one group for the whole channel
+    pub group_size: usize,
+    /// outlier sidecar (row, exact value), rows strictly ascending;
+    /// the bit stream carries an on-grid dummy at these rows and the
+    /// kernel substitutes the sidecar value after the LUT read
+    pub outliers: &'a [(u32, f32)],
     /// little-endian bit stream, `bits` bits per element
     pub words: &'a [u64],
-    /// `lut[k]` = dequantized f32 value of index `k`
+    /// `lut[g·2^bits + k]` = dequantized f32 value of index `k` in
+    /// group `g`
     pub lut: &'a [f32],
 }
 
 impl PackedCol<'_> {
+    fn ngroups(&self) -> usize {
+        if self.group_size == 0 || self.len == 0 {
+            1
+        } else {
+            (self.len + self.group_size - 1) / self.group_size
+        }
+    }
+
     fn validate(&self) {
         debug_assert!(self.bits >= 1 && self.bits <= 16, "bits {}", self.bits);
-        debug_assert_eq!(self.lut.len(), 1usize << self.bits, "LUT size");
+        debug_assert_eq!(
+            self.lut.len(),
+            self.ngroups() << self.bits,
+            "LUT size for {} groups",
+            self.ngroups()
+        );
         debug_assert!(
             self.words.len() * 64 >= self.len * self.bits as usize,
             "bit stream too short: {} words for {}x{} bits",
@@ -110,6 +135,74 @@ impl<'a> BitCursor<'a> {
     }
 }
 
+/// Sequential reader over a packed channel's *values*: a [`BitCursor`]
+/// composed with the per-group LUT walk and the outlier sidecar. The
+/// group's LUT base advances by counter (no division per element), and
+/// outlier rows substitute their exact value after the stream's dummy
+/// code has been consumed — so the cursor always advances the bit
+/// stream uniformly.
+struct ValueCursor<'a> {
+    cur: BitCursor<'a>,
+    lut: &'a [f32],
+    outliers: &'a [(u32, f32)],
+    /// LUT stride per group (`1 << bits`)
+    step: usize,
+    /// rows per group (`usize::MAX` for single-group channels)
+    group_size: usize,
+    /// current group's LUT base offset
+    base: usize,
+    /// rows remaining in the current group
+    left: usize,
+    /// next unconsumed outlier record
+    oi: usize,
+    /// current row
+    row: usize,
+}
+
+impl<'a> ValueCursor<'a> {
+    fn new(col: &PackedCol<'a>) -> ValueCursor<'a> {
+        let gs = if col.group_size == 0 {
+            usize::MAX
+        } else {
+            col.group_size
+        };
+        ValueCursor {
+            cur: BitCursor::new(col),
+            lut: col.lut,
+            outliers: col.outliers,
+            step: 1usize << col.bits,
+            group_size: gs,
+            base: 0,
+            left: gs,
+            oi: 0,
+            row: 0,
+        }
+    }
+
+    /// The next dequantized value. For dense channels this is exactly
+    /// the old single-LUT read, so the fused paths stay bit-identical.
+    #[inline]
+    fn next(&mut self) -> f32 {
+        if self.left == 0 {
+            self.base += self.step;
+            self.left = self.group_size;
+        }
+        self.left -= 1;
+        let idx = self.cur.next_idx();
+        let v = self.lut[self.base + idx];
+        self.row += 1;
+        if self.oi < self.outliers.len()
+            && self.outliers[self.oi].0 as usize == self.row - 1
+        {
+            let exact = self.outliers[self.oi].1;
+            self.oi += 1;
+            exact
+        } else {
+            v
+        }
+    }
+}
+
 /// Expand a packed channel into dequantized f64 values
 /// (`out[i] = f64::from(lut[idx_i])`). `out.len()` must equal
 /// `col.len`. This is the scalar reference twin of the fused paths —
@@ -117,9 +210,9 @@ impl<'a> BitCursor<'a> {
 pub fn expand_channel(col: &PackedCol, out: &mut [f64]) {
     col.validate();
     assert_eq!(out.len(), col.len, "expand_channel length mismatch");
-    let mut cur = BitCursor::new(col);
+    let mut cur = ValueCursor::new(col);
     for o in out.iter_mut() {
-        *o = f64::from(col.lut[cur.next_idx()]);
+        *o = f64::from(cur.next());
     }
 }
 
@@ -131,9 +224,9 @@ pub fn expand_channel(col: &PackedCol, out: &mut [f64]) {
 pub fn expand_channel_f32(col: &PackedCol, out: &mut [f32]) {
     col.validate();
     assert_eq!(out.len(), col.len, "expand_channel_f32 length mismatch");
-    let mut cur = BitCursor::new(col);
+    let mut cur = ValueCursor::new(col);
     for o in out.iter_mut() {
-        *o = col.lut[cur.next_idx()];
+        *o = cur.next();
     }
 }
 
@@ -145,19 +238,19 @@ pub fn packed_dot(col: &PackedCol, x: &[f64]) -> f64 {
     col.validate();
     assert_eq!(x.len(), col.len, "packed_dot length mismatch");
     let n = col.len;
-    let mut cur = BitCursor::new(col);
+    let mut cur = ValueCursor::new(col);
     let chunks = n / 4;
     let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
     for c in 0..chunks {
         let i = c * 4;
-        s0 += f64::from(col.lut[cur.next_idx()]) * x[i];
-        s1 += f64::from(col.lut[cur.next_idx()]) * x[i + 1];
-        s2 += f64::from(col.lut[cur.next_idx()]) * x[i + 2];
-        s3 += f64::from(col.lut[cur.next_idx()]) * x[i + 3];
+        s0 += f64::from(cur.next()) * x[i];
+        s1 += f64::from(cur.next()) * x[i + 1];
+        s2 += f64::from(cur.next()) * x[i + 2];
+        s3 += f64::from(cur.next()) * x[i + 3];
     }
     let mut s = s0 + s1 + s2 + s3;
     for i in chunks * 4..n {
-        s += f64::from(col.lut[cur.next_idx()]) * x[i];
+        s += f64::from(cur.next()) * x[i];
     }
     s
 }
@@ -239,7 +332,14 @@ mod tests {
     }
 
     fn col<'a>(p: &'a PackedChannel, lut: &'a [f32]) -> PackedCol<'a> {
-        PackedCol { bits: p.bits, len: p.len, words: &p.words, lut }
+        PackedCol {
+            bits: p.bits,
+            len: p.len,
+            group_size: p.group_size as usize,
+            outliers: &p.outliers,
+            words: &p.words,
+            lut,
+        }
     }
 
     #[test]
@@ -396,6 +496,78 @@ mod tests {
         let mv = packed_matvec(&cols, &xv);
         for j in 0..np {
             assert_eq!(gemm[(0, j)].to_bits(), mv[j].to_bits(), "{j}");
+        }
+    }
+
+    /// Pack a grouped channel (g16, ragged tail) with outlier rows.
+    fn grouped_case(
+        seed: u64,
+        n: usize,
+        width: BitWidth,
+    ) -> (PackedChannel, Vec<f32>) {
+        let lv = alphabet(width).len();
+        let mut g = Gen { rng: SplitMix64::new(seed) };
+        let codes: Vec<f64> =
+            (0..n).map(|_| g.usize_in(0, lv - 1) as f64).collect();
+        let ngroups = (n + 15) / 16;
+        let groups: Vec<(f64, f64)> = (0..ngroups)
+            .map(|_| (g.f64_in(0.05, 1.5), g.f64_in(-0.3, 0.3)))
+            .collect();
+        let outliers = [(3usize, 7.5f64), (n - 1, -4.25)];
+        let p = crate::quant::packing::pack_channel_grouped(
+            &codes, &groups, 16, &outliers, width,
+        )
+        .unwrap();
+        let lut = crate::quant::packing::dequant_luts(&p, width);
+        (p, lut)
+    }
+
+    #[test]
+    fn grouped_expand_matches_unpack_channel_bitwise() {
+        for (width, n) in [
+            (BitWidth::B2, 70usize), // ragged 6-row tail group
+            (BitWidth::B3, 129),
+            (BitWidth::B4, 64), // exact group multiple
+        ] {
+            let (p, lut) = grouped_case(41, n, width);
+            let pc = col(&p, &lut);
+            let reference = crate::quant::packing::unpack_channel(&p, width);
+            let mut out = vec![0.0f64; n];
+            expand_channel(&pc, &mut out);
+            for (i, (a, b)) in out.iter().zip(&reference).enumerate() {
+                assert_eq!(
+                    a.to_bits(),
+                    f64::from(*b).to_bits(),
+                    "{width:?} elem {i}"
+                );
+            }
+            let mut out32 = vec![0.0f32; n];
+            expand_channel_f32(&pc, &mut out32);
+            for (i, (a, b)) in out32.iter().zip(&reference).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "{width:?} f32 elem {i}");
+            }
+            // outliers surfaced exactly
+            assert_eq!(out32[3].to_bits(), 7.5f32.to_bits());
+            assert_eq!(out32[n - 1].to_bits(), (-4.25f32).to_bits());
+        }
+    }
+
+    #[test]
+    fn grouped_packed_dot_bit_identical_to_dot_of_expansion() {
+        for (width, n) in [
+            (BitWidth::B2, 257usize), // tail chunk + ragged tail group
+            (BitWidth::B3, 129),
+            (BitWidth::B4, 64),
+        ] {
+            let (p, lut) = grouped_case(43, n, width);
+            let pc = col(&p, &lut);
+            let mut expanded = vec![0.0f64; n];
+            expand_channel(&pc, &mut expanded);
+            let mut g = Gen { rng: SplitMix64::new(8) };
+            let x = g.vec_normal(n, 1.0);
+            let fused = packed_dot(&pc, &x);
+            let reference = dot(&expanded, &x);
+            assert_eq!(fused.to_bits(), reference.to_bits(), "{width:?} n={n}");
         }
     }
 

@@ -29,8 +29,10 @@
 //! subcommand for search-only) probes every candidate `(method, bits)`
 //! per layer against the calibration grams and greedily allocates widths
 //! under the size-weighted effective-bits budget; `--plan-methods` /
-//! `--plan-bits` (comma lists) narrow the candidate grid. The searched
-//! plan is an ordinary manifest: `--save-plan` makes it reproducible.
+//! `--plan-bits` (comma lists) narrow the candidate grid and
+//! `--plan-groups` / `--plan-outliers` add the grouped/outlier scenario
+//! axes. The searched plan is an ordinary manifest: `--save-plan` makes
+//! it reproducible.
 
 use std::path::PathBuf;
 
@@ -102,7 +104,8 @@ fn plan_builder(args: &Args) -> Result<PlanBuilder> {
 }
 
 /// The planner search space from the CLI surface: `--budget-bits` plus
-/// optional `--plan-methods m1,m2` / `--plan-bits b1,b2` comma lists.
+/// optional `--plan-methods m1,m2` / `--plan-bits b1,b2` /
+/// `--plan-groups g1,g2` / `--plan-outliers k1,k2` comma lists.
 fn search_space(args: &Args) -> Result<SearchSpace> {
     let budget: f64 = args
         .get("budget-bits")
@@ -111,7 +114,14 @@ fn search_space(args: &Args) -> Result<SearchSpace> {
         .map_err(|_| anyhow::anyhow!("--budget-bits expects a number"))?;
     let methods = args.get("plan-methods");
     let widths = args.get("plan-bits");
-    SearchSpace::parse(budget, methods, widths)
+    let mut space = SearchSpace::parse(budget, methods, widths)?;
+    if let Some(csv) = args.get("plan-groups") {
+        space.set_group_sizes(csv)?;
+    }
+    if let Some(csv) = args.get("plan-outliers") {
+        space.set_outlier_ks(csv)?;
+    }
+    Ok(space)
 }
 
 /// Default Table-1 grid: (bit width, K) as in the paper.
@@ -398,10 +408,14 @@ flags: --artifacts DIR --model NAME --backend pjrt|native --config FILE
                        of the run, with a heap counter track; BEACON_TRACE=FILE
                        does the same. --verbose adds metrics + memory tables
 plans: --override 'pattern=spec' (repeatable; ';'-separated list ok)
-       spec = method[:bits][+ec|+noec|+centering|+nocentering|+loops=K|+damp=F]
-       e.g. --override 'blocks.*.qkv.w=beacon:2+ec' --override 'blocks.*.fc?.w=comq:4'
+       spec = method[:bits][+gN|+asym|+sym|+kN|+ec|+noec|+centering|+nocentering|+loops=K|+damp=F]
+       +gN groups scales every N rows, +asym adds per-group offsets,
+       +kN keeps the top-k |w| outliers per channel exact (f32 sidecar)
+       e.g. --override 'blocks.*.qkv.w=beacon:2+ec' --override 'attn.*=beacon:3+g16+asym+k2'
        config files take the same overrides as [layer \"pattern\"] sections
 search: quantize --auto-plan --budget-bits B  (greedy loss-aware bit allocation)
        plan --budget-bits B --save-plan OUT.cfg   (search only, emit manifest)
        budget-sweep --budgets 2,2.58,3,4          (searched vs uniform table)
-       --plan-methods m1,m2 / --plan-bits b1,b2 narrow the probe grid";
+       --plan-methods m1,m2 / --plan-bits b1,b2 narrow the probe grid
+       --plan-groups g1,g2 / --plan-outliers k1,k2 add scenario axes
+       (gptq probes stay dense; grouped/outlier combos are skipped for it)";

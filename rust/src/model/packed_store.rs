@@ -1,21 +1,39 @@
-//! BPK1 packed-checkpoint reader/writer: the on-disk and in-memory
-//! format for quantized weights after PR 8 — per-channel bit streams
-//! plus dequant metadata, never f32 matrices. See
+//! BPK1/BPK2 packed-checkpoint reader/writer: the on-disk and
+//! in-memory format for quantized weights after PR 8 — per-channel bit
+//! streams plus dequant metadata, never f32 matrices. See
 //! `docs/PACKED_FORMAT.md` for the byte-level layout; the short form:
 //!
 //! ```text
-//! magic "BPK1" | version u32 | layer_count u32
+//! magic "BPK1" | version u32 (=1) | layer_count u32
 //! per layer:
 //!   name_len u32 | name bytes | rows u32 | cols u32
 //!   width_hundredths u32 | channel_count u32 (== cols)
 //! per channel:
 //!   bits u8 | convention u8 | len u32 | scale f32 | offset f32
 //!   nwords u32 (== ceil(len·bits/64)) | words u64[nwords]
+//!
+//! magic "BPK2" | version u32 (=2) | layer_count u32
+//! per layer: (same as BPK1)
+//! per channel:
+//!   bits u8 | convention u8 | len u32
+//!   group_size u32 (0 = one group for the whole channel)
+//!   ngroups u32 (== 1 if group_size = 0, else ceil(len/group_size))
+//!   (scale f32, offset f32) × ngroups
+//!   noutl u32 | (row u32, value f32) × noutl (rows strictly ascending)
+//!   nwords u32 (== ceil(len·bits/64)) | words u64[nwords]
 //! ```
 //!
+//! `save` picks the format per store: when every channel is dense
+//! (single group, no outlier sidecar) it emits exactly the BPK1 bytes
+//! this crate has always written, so pre-scenario checkpoints stay
+//! byte-identical and old readers keep working; any grouped or
+//! outlier-carrying channel upgrades the whole file to BPK2. `load`
+//! reads both.
+//!
 //! All integers and floats little-endian. `save` → `load` → `save` is
-//! byte-identical: packing zero-initializes the bit-stream words, so
-//! even the dead bits of a ragged final word round-trip exactly.
+//! byte-identical for both formats: packing zero-initializes the
+//! bit-stream words, so even the dead bits of a ragged final word
+//! round-trip exactly.
 
 use std::fs::File;
 use std::io::{BufReader, BufWriter, Read, Write};
@@ -26,12 +44,15 @@ use anyhow::{bail, Context, Result};
 use crate::linalg::{expand_channel_f32, Matrix, PackedCol};
 use crate::quant::alphabet::BitWidth;
 use crate::quant::packing::{
-    dequant_lut, try_pack_channel, unpack_channel, CodeConvention,
-    PackedChannel,
+    dequant_luts, pack_channel_grouped, try_pack_channel, unpack_channel,
+    CodeConvention, PackedChannel,
 };
+use crate::quant::LayerQuant;
 
 pub const PACKED_MAGIC: &[u8; 4] = b"BPK1";
 pub const PACKED_VERSION: u32 = 1;
+pub const PACKED_MAGIC_V2: &[u8; 4] = b"BPK2";
+pub const PACKED_VERSION_V2: u32 = 2;
 
 /// One quantized layer: the weight matrix's columns as packed channels.
 /// `rows` is the channel length (W is rows×cols, quantized per column).
@@ -71,14 +92,55 @@ impl PackedLayer {
         })
     }
 
+    /// Pack a layer straight from a quantizer's [`LayerQuant`],
+    /// honoring any grouped/outlier scenario metadata it carries. A
+    /// channel whose metadata is dense-representable (no group split,
+    /// no sidecar) packs exactly as [`PackedLayer::pack`] would, so a
+    /// default-scenario run still produces a pure-BPK1 store.
+    pub fn pack_quant(
+        name: &str,
+        lq: &LayerQuant,
+        width: BitWidth,
+    ) -> Option<PackedLayer> {
+        let Some(meta) = &lq.grouped else {
+            return Self::pack(name, &lq.codes, &lq.scales, &lq.offsets, width);
+        };
+        let rows = lq.codes.first().map_or(0, Vec::len);
+        let channels = lq
+            .codes
+            .iter()
+            .enumerate()
+            .map(|(j, ch)| {
+                if meta.group_size == 0 && meta.outliers[j].is_empty() {
+                    try_pack_channel(ch, lq.scales[j], lq.offsets[j], width)
+                } else {
+                    pack_channel_grouped(
+                        ch,
+                        &meta.groups[j],
+                        meta.group_size,
+                        &meta.outliers[j],
+                        width,
+                    )
+                }
+            })
+            .collect::<Option<Vec<_>>>()?;
+        Some(PackedLayer {
+            name: name.to_string(),
+            rows,
+            width,
+            channels,
+        })
+    }
+
     pub fn cols(&self) -> usize {
         self.channels.len()
     }
 
     /// Per-channel dequant LUTs — the tables the fused kernel expands
-    /// through. Build once per layer, reuse across requests.
+    /// through (one `2^bits` stride per group; a single stride for
+    /// dense channels). Build once per layer, reuse across requests.
     pub fn luts(&self) -> Vec<Vec<f32>> {
-        self.channels.iter().map(|c| dequant_lut(c, self.width)).collect()
+        self.channels.iter().map(|c| dequant_luts(c, self.width)).collect()
     }
 
     /// Borrow the channels as fused-kernel views over pre-built LUTs
@@ -91,6 +153,8 @@ impl PackedLayer {
             .map(|(c, lut)| PackedCol {
                 bits: c.bits,
                 len: c.len,
+                group_size: c.group_size as usize,
+                outliers: &c.outliers,
                 words: &c.words,
                 lut,
             })
@@ -159,7 +223,22 @@ impl PackedStore {
         self.layers.iter().map(PackedLayer::resident_bytes).sum()
     }
 
+    /// Write the store, picking the narrowest format that can carry
+    /// it: pure-dense stores emit exactly the historical BPK1 bytes,
+    /// anything with group splits or outlier sidecars emits BPK2.
     pub fn save(&self, path: &Path) -> Result<()> {
+        let all_dense = self
+            .layers
+            .iter()
+            .all(|l| l.channels.iter().all(PackedChannel::is_dense));
+        if all_dense {
+            self.save_v1(path)
+        } else {
+            self.save_v2(path)
+        }
+    }
+
+    fn save_v1(&self, path: &Path) -> Result<()> {
         let mut w = BufWriter::new(
             File::create(path).with_context(|| format!("create {path:?}"))?,
         );
@@ -191,18 +270,70 @@ impl PackedStore {
         Ok(())
     }
 
+    fn save_v2(&self, path: &Path) -> Result<()> {
+        let mut w = BufWriter::new(
+            File::create(path).with_context(|| format!("create {path:?}"))?,
+        );
+        w.write_all(PACKED_MAGIC_V2)?;
+        w.write_all(&PACKED_VERSION_V2.to_le_bytes())?;
+        w.write_all(&(self.layers.len() as u32).to_le_bytes())?;
+        for l in &self.layers {
+            w.write_all(&(l.name.len() as u32).to_le_bytes())?;
+            w.write_all(l.name.as_bytes())?;
+            w.write_all(&(l.rows as u32).to_le_bytes())?;
+            w.write_all(&(l.cols() as u32).to_le_bytes())?;
+            w.write_all(&width_hundredths(l.width).to_le_bytes())?;
+            w.write_all(&(l.channels.len() as u32).to_le_bytes())?;
+            for c in &l.channels {
+                w.write_all(&[c.bits as u8, convention_byte(c.convention)])?;
+                w.write_all(&(c.len as u32).to_le_bytes())?;
+                w.write_all(&c.group_size.to_le_bytes())?;
+                let groups = c.effective_groups();
+                w.write_all(&(groups.len() as u32).to_le_bytes())?;
+                for (s, o) in &groups {
+                    w.write_all(&s.to_le_bytes())?;
+                    w.write_all(&o.to_le_bytes())?;
+                }
+                w.write_all(&(c.outliers.len() as u32).to_le_bytes())?;
+                for (row, val) in &c.outliers {
+                    w.write_all(&row.to_le_bytes())?;
+                    w.write_all(&val.to_le_bytes())?;
+                }
+                w.write_all(&(c.words.len() as u32).to_le_bytes())?;
+                for word in &c.words {
+                    w.write_all(&word.to_le_bytes())?;
+                }
+            }
+        }
+        w.flush()?;
+        if let Ok(md) = std::fs::metadata(path) {
+            crate::obs::counter("io.write_bytes", md.len());
+        }
+        Ok(())
+    }
+
     pub fn load(path: &Path) -> Result<PackedStore> {
         let mut r = BufReader::new(
             File::open(path).with_context(|| format!("open {path:?}"))?,
         );
         let mut magic = [0u8; 4];
         r.read_exact(&mut magic)
-            .with_context(|| format!("truncated BPK1 header in {path:?}"))?;
-        if &magic != PACKED_MAGIC {
-            bail!("bad BPK1 magic in {path:?}: {magic:02x?}");
+            .with_context(|| format!("truncated packed-store header in {path:?}"))?;
+        let v2 = &magic == PACKED_MAGIC_V2;
+        if !v2 && &magic != PACKED_MAGIC {
+            bail!(
+                "bad packed-store magic in {path:?}: {magic:02x?} \
+                 (want BPK1 or BPK2)"
+            );
         }
         let version = read_u32(&mut r, path, "version")?;
-        if version > PACKED_VERSION {
+        if v2 && version != PACKED_VERSION_V2 {
+            bail!(
+                "unsupported BPK2 version {version} in {path:?} \
+                 (this build reads version {PACKED_VERSION_V2})"
+            );
+        }
+        if !v2 && version > PACKED_VERSION {
             bail!(
                 "unsupported BPK1 version {version} in {path:?} \
                  (this build reads up to {PACKED_VERSION})"
@@ -258,15 +389,72 @@ impl PackedStore {
                     },
                 )?;
                 let len = read_u32(&mut r, path, "channel length")? as usize;
-                let mut f = [0u8; 4];
-                r.read_exact(&mut f).with_context(|| {
-                    format!("truncated scale of '{name}' in {path:?}")
-                })?;
-                let scale = f32::from_le_bytes(f);
-                r.read_exact(&mut f).with_context(|| {
-                    format!("truncated offset of '{name}' in {path:?}")
-                })?;
-                let offset = f32::from_le_bytes(f);
+                let (scale, offset, group_size, groups, outliers) = if v2 {
+                    let gs = read_u32(&mut r, path, "group size")? as usize;
+                    if gs == 1 {
+                        bail!(
+                            "layer '{name}' channel {ci}: bad group size 1 \
+                             in {path:?}"
+                        );
+                    }
+                    let ngroups = read_u32(&mut r, path, "group count")? as usize;
+                    let expect = if gs == 0 || len == 0 {
+                        1
+                    } else {
+                        (len + gs - 1) / gs
+                    };
+                    if ngroups != expect {
+                        bail!(
+                            "layer '{name}' channel {ci}: bad group count \
+                             {ngroups} for length {len} at group size {gs} \
+                             (want {expect}) in {path:?}"
+                        );
+                    }
+                    let mut pairs = Vec::with_capacity(ngroups);
+                    for _ in 0..ngroups {
+                        let s = read_f32(&mut r, path, "group scale")?;
+                        let o = read_f32(&mut r, path, "group offset")?;
+                        pairs.push((s, o));
+                    }
+                    let noutl = read_u32(&mut r, path, "outlier count")? as usize;
+                    if noutl > len {
+                        bail!(
+                            "layer '{name}' channel {ci}: bad outlier count \
+                             {noutl} for length {len} in {path:?}"
+                        );
+                    }
+                    let mut outl = Vec::with_capacity(noutl);
+                    let mut prev: i64 = -1;
+                    for _ in 0..noutl {
+                        let row = read_u32(&mut r, path, "outlier sidecar row")?;
+                        let val = read_f32(&mut r, path, "outlier sidecar value")?;
+                        if row as usize >= len || i64::from(row) <= prev {
+                            bail!(
+                                "layer '{name}' channel {ci}: bad outlier row \
+                                 {row} (rows must be strictly ascending and \
+                                 < {len}) in {path:?}"
+                            );
+                        }
+                        prev = i64::from(row);
+                        outl.push((row, val));
+                    }
+                    let (s0, o0) = pairs[0];
+                    // a single whole-channel group is carried on the
+                    // channel's own scale/offset, like BPK1
+                    let groups = if gs == 0 { Vec::new() } else { pairs };
+                    (s0, o0, gs as u32, groups, outl)
+                } else {
+                    let mut f = [0u8; 4];
+                    r.read_exact(&mut f).with_context(|| {
+                        format!("truncated scale of '{name}' in {path:?}")
+                    })?;
+                    let scale = f32::from_le_bytes(f);
+                    r.read_exact(&mut f).with_context(|| {
+                        format!("truncated offset of '{name}' in {path:?}")
+                    })?;
+                    let offset = f32::from_le_bytes(f);
+                    (scale, offset, 0u32, Vec::new(), Vec::new())
+                };
                 let nwords = read_u32(&mut r, path, "word count")? as usize;
                 let expect = (len * bits as usize + 63) / 64;
                 if nwords != expect {
@@ -298,6 +486,9 @@ impl PackedStore {
                     scale,
                     offset,
                     convention,
+                    group_size,
+                    groups,
+                    outliers,
                     words,
                 });
             }
@@ -338,6 +529,13 @@ fn read_u32<R: Read>(r: &mut R, path: &Path, what: &str) -> Result<u32> {
     r.read_exact(&mut b)
         .with_context(|| format!("truncated {what} in {path:?}"))?;
     Ok(u32::from_le_bytes(b))
+}
+
+fn read_f32<R: Read>(r: &mut R, path: &Path, what: &str) -> Result<f32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)
+        .with_context(|| format!("truncated {what} in {path:?}"))?;
+    Ok(f32::from_le_bytes(b))
 }
 
 #[cfg(test)]
@@ -389,6 +587,129 @@ mod tests {
                 .unwrap(),
         );
         PackedStore { layers }
+    }
+
+    fn grouped_store() -> PackedStore {
+        // integer-level codes, g16 over 40 rows (ragged 8-row tail),
+        // one channel with an outlier sidecar and one without
+        let width = BitWidth::B3;
+        let mk = |seed: usize, outl: &[(usize, f64)]| {
+            let codes: Vec<f64> =
+                (0..40).map(|i| ((i * 5 + seed) % 8) as f64).collect();
+            let groups = [(0.5, 0.125), (0.25, -0.25), (1.0, 0.0)];
+            pack_channel_grouped(&codes, &groups, 16, outl, width).unwrap()
+        };
+        PackedStore {
+            layers: vec![PackedLayer {
+                name: "g.layer".into(),
+                rows: 40,
+                width,
+                channels: vec![mk(1, &[(5, 9.0)]), mk(3, &[])],
+            }],
+        }
+    }
+
+    /// Byte offset of channel 0's record in a single-layer BPK2 file.
+    fn bpk2_channel0_offset(bytes: &[u8]) -> usize {
+        let name_len =
+            u32::from_le_bytes(bytes[12..16].try_into().unwrap()) as usize;
+        // header(12) + name_len(4) + name + rows + cols + width + nchan
+        12 + 4 + name_len + 4 + 4 + 4 + 4
+    }
+
+    #[test]
+    fn dense_store_still_saves_as_bpk1() {
+        let store = sample_store();
+        let p = tmp("dense_v1.bpk");
+        store.save(&p).unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+        assert_eq!(&bytes[0..4], PACKED_MAGIC);
+    }
+
+    #[test]
+    fn grouped_store_saves_as_bpk2_and_round_trips() {
+        let store = grouped_store();
+        let p1 = tmp("g_rt1.bpk");
+        let p2 = tmp("g_rt2.bpk");
+        store.save(&p1).unwrap();
+        let bytes = std::fs::read(&p1).unwrap();
+        assert_eq!(&bytes[0..4], PACKED_MAGIC_V2);
+        let back = PackedStore::load(&p1).unwrap();
+        back.save(&p2).unwrap();
+        assert_eq!(bytes, std::fs::read(&p2).unwrap(), "save→load→save");
+        let (a, b) = (&store.layers[0], &back.layers[0]);
+        for (ca, cb) in a.channels.iter().zip(&b.channels) {
+            assert_eq!(ca.group_size, cb.group_size);
+            assert_eq!(ca.groups.len(), cb.groups.len());
+            for (ga, gb) in ca.groups.iter().zip(&cb.groups) {
+                assert_eq!(ga.0.to_bits(), gb.0.to_bits());
+                assert_eq!(ga.1.to_bits(), gb.1.to_bits());
+            }
+            assert_eq!(ca.outliers, cb.outliers);
+            assert_eq!(ca.words, cb.words);
+            let va = unpack_channel(ca, a.width);
+            let vb = unpack_channel(cb, b.width);
+            for (x, y) in va.iter().zip(&vb) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn bpk2_future_version_is_structured_error() {
+        let store = grouped_store();
+        let p = tmp("g_future.bpk");
+        store.save(&p).unwrap();
+        let mut bytes = std::fs::read(&p).unwrap();
+        bytes[4..8].copy_from_slice(&9u32.to_le_bytes());
+        std::fs::write(&p, &bytes).unwrap();
+        let err = PackedStore::load(&p).unwrap_err();
+        assert!(
+            format!("{err:#}").contains("unsupported BPK2 version 9"),
+            "{err:#}"
+        );
+    }
+
+    #[test]
+    fn bpk2_bad_group_count_is_structured_error() {
+        let store = grouped_store();
+        let p = tmp("g_badcount.bpk");
+        store.save(&p).unwrap();
+        let mut bytes = std::fs::read(&p).unwrap();
+        // channel record: bits(1) + convention(1) + len(4) + group_size(4)
+        let ngroups_off = bpk2_channel0_offset(&bytes) + 1 + 1 + 4 + 4;
+        bytes[ngroups_off..ngroups_off + 4]
+            .copy_from_slice(&7u32.to_le_bytes());
+        std::fs::write(&p, &bytes).unwrap();
+        let err = PackedStore::load(&p).unwrap_err();
+        assert!(format!("{err:#}").contains("bad group count 7"), "{err:#}");
+    }
+
+    #[test]
+    fn bpk2_truncated_sidecar_is_structured_error() {
+        let store = grouped_store();
+        let p = tmp("g_trunc.bpk");
+        store.save(&p).unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+        // cut mid-way through channel 0's first outlier record:
+        // 3 groups × 8 bytes follow (ngroups at +10), then noutl(4)
+        let row_off = bpk2_channel0_offset(&bytes) + 1 + 1 + 4 + 4 + 4 + 24 + 4;
+        std::fs::write(&p, &bytes[..row_off + 2]).unwrap();
+        let err = PackedStore::load(&p).unwrap_err();
+        assert!(format!("{err:#}").contains("truncated"), "{err:#}");
+    }
+
+    #[test]
+    fn bpk2_bad_outlier_row_is_structured_error() {
+        let store = grouped_store();
+        let p = tmp("g_badrow.bpk");
+        store.save(&p).unwrap();
+        let mut bytes = std::fs::read(&p).unwrap();
+        let row_off = bpk2_channel0_offset(&bytes) + 1 + 1 + 4 + 4 + 4 + 24 + 4;
+        bytes[row_off..row_off + 4].copy_from_slice(&40u32.to_le_bytes());
+        std::fs::write(&p, &bytes).unwrap();
+        let err = PackedStore::load(&p).unwrap_err();
+        assert!(format!("{err:#}").contains("bad outlier row 40"), "{err:#}");
     }
 
     #[test]

@@ -23,6 +23,8 @@
 use crate::linalg::matrix::{axpy, dot};
 use crate::linalg::{qr_factor, Matrix};
 
+use super::scenario::{assemble_layer, split_outliers, ChannelQuant, Scenario};
+
 pub const EPS: f64 = 1e-12;
 
 #[derive(Debug, Clone)]
@@ -266,7 +268,115 @@ pub fn beacon_layer_prefactored(
         codes.push(q);
         scales.push(c);
     }
-    LayerQuant { codes, scales, offsets, dequant }
+    LayerQuant { codes, scales, offsets, dequant, grouped: None }
+}
+
+/// Beacon under a grouped / asymmetric / outlier-split [`Scenario`].
+///
+/// Per channel: the top-k magnitude weights are held exact (sidecar, with
+/// the smallest-|value| alphabet element as an on-grid dummy code), then
+/// each group runs [`beacon_channel`] on the channel problem *restricted
+/// to its own columns* — `u = Σ_t q_t·L̃_t`, so dropping a column fixes
+/// its code at 0, which makes the per-group sweep exact for the group
+/// objective. Under `asymmetric` each group is centered on its own
+/// non-outlier mean and restored with the §3 corrected-mean factor
+/// (`off_g = z_scale·mean_g`); `centering` without `asymmetric` keeps the
+/// historical whole-channel mean. With one group, no outliers and no
+/// asymmetry this reproduces [`beacon_layer`] bit-for-bit.
+pub fn beacon_layer_scenario(
+    x: &Matrix,
+    xt: &Matrix,
+    w: &Matrix,
+    alph: &[f64],
+    opts: &BeaconOpts,
+    sc: &Scenario,
+) -> LayerQuant {
+    let f = qr_factor(xt, x);
+    let (n, np) = (w.rows, w.cols);
+    let l_cols = f.l.columns();
+    let lt_cols = f.r.columns();
+    let bounds = sc.group_bounds(n);
+
+    // corrected-mean restore factor (§3), shared by every group: offsets
+    // enter as off·X̃1 against the target mean·X1
+    let need_offsets = sc.asymmetric || opts.centering;
+    let z_scale = if need_offsets {
+        let ones = vec![1.0f64; n];
+        let x1 = x.matvec(&ones);
+        let xt1 = xt.matvec(&ones);
+        let den = dot(&xt1, &xt1);
+        if den > EPS {
+            dot(&x1, &xt1) / den
+        } else {
+            1.0
+        }
+    } else {
+        1.0
+    };
+
+    // on-grid dummy code for outlier slots: the smallest-|value| alphabet
+    // element (ascending scan keeps the first on ties — deterministic)
+    let dummy = alph
+        .iter()
+        .copied()
+        .min_by(|a, b| {
+            a.abs()
+                .partial_cmp(&b.abs())
+                .unwrap_or(std::cmp::Ordering::Equal)
+        })
+        .unwrap_or(0.0);
+
+    let w_cols = w.columns();
+    let nthreads = crate::util::pool::resolve_threads(opts.threads);
+    let results = crate::util::pool::par_map_labeled("engine.channels", np, nthreads, |j| {
+        let wj = &w_cols[j];
+        let outl = split_outliers(wj, sc.outlier_k);
+        let m_ch = wj.iter().sum::<f64>() / n.max(1) as f64;
+        let mut codes = vec![0.0; n];
+        let mut dequant = vec![0.0; n];
+        let mut groups = Vec::with_capacity(bounds.len());
+        for &(lo, hi) in &bounds {
+            let members: Vec<usize> =
+                (lo..hi).filter(|t| outl.binary_search(t).is_err()).collect();
+            if members.is_empty() {
+                // group fully consumed by outliers: degenerate, unused
+                groups.push((1.0, 0.0));
+                continue;
+            }
+            let mean = if sc.asymmetric {
+                members.iter().map(|&t| wj[t]).sum::<f64>() / members.len() as f64
+            } else if opts.centering {
+                m_ch
+            } else {
+                0.0
+            };
+            let sub_l: Vec<Vec<f64>> =
+                members.iter().map(|&t| l_cols[t].clone()).collect();
+            let sub_lt: Vec<Vec<f64>> =
+                members.iter().map(|&t| lt_cols[t].clone()).collect();
+            // each column keeps its own triangular prefix length
+            let sub_nnz: Vec<usize> = members.iter().map(|&t| (t + 1).min(n)).collect();
+            let wg: Vec<f64> = members.iter().map(|&t| wj[t] - mean).collect();
+            let (q, c) = beacon_channel(&sub_l, &sub_lt, &sub_nnz, &wg, alph, opts.loops);
+            let off = z_scale * mean;
+            for (k, &t) in members.iter().enumerate() {
+                codes[t] = q[k];
+                dequant[t] = c * q[k] + off;
+            }
+            groups.push((c, off));
+        }
+        for &t in &outl {
+            codes[t] = dummy;
+            dequant[t] = wj[t];
+        }
+        ChannelQuant {
+            codes,
+            groups,
+            outliers: outl.iter().map(|&t| (t, wj[t])).collect(),
+            dequant,
+        }
+    });
+    assemble_layer(n, results, sc)
 }
 
 #[cfg(test)]
@@ -447,6 +557,93 @@ mod tests {
         );
         let err = |d: &Matrix| x.matmul(&w.sub(d)).frob_norm();
         assert!(err(&cent.dequant) < err(&plain.dequant));
+    }
+
+    #[test]
+    fn scenario_asym_one_group_matches_centering_bitwise() {
+        // With g=0 and k=0 the per-group mean IS the channel mean, so the
+        // asymmetric scenario path must reproduce §3 centering exactly.
+        let mut g = Gen { rng: crate::data::rng::SplitMix64::new(6) };
+        let m = 48;
+        let n = 10;
+        let x = Matrix::from_vec(m, n, g.vec_normal(m * n, 1.0));
+        let mut w = Matrix::from_vec(n, 3, g.vec_normal(n * 3, 0.2));
+        for v in w.data.iter_mut() {
+            *v += 0.3;
+        }
+        let a = alphabet(BitWidth::B2);
+        let cent = beacon_layer(
+            &x,
+            &x,
+            &w,
+            &a,
+            &BeaconOpts { loops: 4, centering: true, ..Default::default() },
+        );
+        let sc = Scenario { asymmetric: true, ..Scenario::default() };
+        let asym = beacon_layer_scenario(
+            &x,
+            &x,
+            &w,
+            &a,
+            &BeaconOpts { loops: 4, centering: false, ..Default::default() },
+            &sc,
+        );
+        for (p, q) in cent.dequant.data.iter().zip(&asym.dequant.data) {
+            assert_eq!(p.to_bits(), q.to_bits());
+        }
+        let meta = asym.grouped.as_ref().expect("scenario metadata");
+        for j in 0..3 {
+            assert_eq!(meta.groups[j].len(), 1);
+            assert!(meta.outliers[j].is_empty());
+            assert_eq!(meta.groups[j][0], (asym.scales[j], asym.offsets[j]));
+        }
+    }
+
+    #[test]
+    fn scenario_grouped_outlier_beats_dense_on_planted_outliers() {
+        let mut g = Gen { rng: crate::data::rng::SplitMix64::new(7) };
+        let m = 64;
+        let n = 40;
+        let x = Matrix::from_vec(m, n, g.vec_normal(m * n, 1.0));
+        let mut w = Matrix::from_vec(n, 3, g.vec_normal(n * 3, 0.1));
+        for j in 0..3 {
+            // a dominating outlier per channel blows up the dense scale
+            w[(5 + j, j)] = 12.0;
+        }
+        let a = alphabet(BitWidth::B2);
+        let opts = BeaconOpts { loops: 3, ..Default::default() };
+        let dense = beacon_layer(&x, &x, &w, &a, &opts);
+        let sc = Scenario { group_size: 16, asymmetric: true, outlier_k: 1, ..Scenario::default() };
+        let lq = beacon_layer_scenario(&x, &x, &w, &a, &opts, &sc);
+        let err = |d: &Matrix| x.matmul(&w.sub(d)).frob_norm();
+        assert!(
+            err(&lq.dequant) < err(&dense.dequant),
+            "grouped+outlier {} not better than dense {}",
+            err(&lq.dequant),
+            err(&dense.dequant)
+        );
+        let meta = lq.grouped.as_ref().expect("scenario metadata");
+        for j in 0..3 {
+            assert_eq!(meta.groups[j].len(), 3, "40 rows / g16 = 3 groups");
+            assert_eq!(meta.outliers[j], vec![(5 + j, 12.0)]);
+            assert_eq!(lq.dequant[(5 + j, j)], 12.0, "outlier kept exact");
+            // codes (dummy included) live on the alphabet
+            for v in &lq.codes[j] {
+                assert!(a.iter().any(|p| (p - v).abs() < 1e-12), "{v} off-alphabet");
+            }
+        }
+        // thread invariance of the scenario path
+        let lq4 = beacon_layer_scenario(
+            &x,
+            &x,
+            &w,
+            &a,
+            &BeaconOpts { threads: 4, ..opts },
+            &sc,
+        );
+        for (p, q) in lq.dequant.data.iter().zip(&lq4.dequant.data) {
+            assert_eq!(p.to_bits(), q.to_bits());
+        }
     }
 
     #[test]

@@ -12,7 +12,9 @@ use crate::linalg::matrix::axpy;
 use crate::linalg::Matrix;
 
 use super::alphabet::{levels, BitWidth};
-use super::rtn::{minmax_scale, rtn_channel};
+use super::engine::LayerQuant;
+use super::rtn::{minmax_scale, nearest_level, rtn_channel};
+use super::scenario::{assemble_layer, split_outliers, ChannelQuant, Scenario};
 
 pub const EPS: f64 = 1e-12;
 
@@ -80,6 +82,109 @@ pub fn comq_layer_threads(
     out
 }
 
+/// COMQ under a grouped / outlier-split [`Scenario`]: the cyclic descent
+/// still runs over the *whole* channel (the Gram coupling crosses group
+/// boundaries), but each coordinate is constrained to its own group's
+/// min-max grid (computed over the group's non-outlier members), and
+/// outlier coordinates are fixed at their exact weight from the start —
+/// they contribute zero residual and are skipped by the update loop.
+/// Bit-identical at any thread count, like [`comq_layer_threads`].
+pub fn comq_layer_scenario(
+    x: &Matrix,
+    w: &Matrix,
+    bits: BitWidth,
+    loops: usize,
+    threads: usize,
+    sc: &Scenario,
+) -> LayerQuant {
+    let (n, np) = (w.rows, w.cols);
+    let g = x.gram(); // G = XᵀX
+    let g_cols = g.columns();
+    let gdiag: Vec<f64> = (0..n)
+        .map(|i| if g[(i, i)] > EPS { g[(i, i)] } else { 1.0 })
+        .collect();
+    let lv = levels(bits);
+    let bounds = sc.group_bounds(n);
+    let mut gidx = vec![0usize; n];
+    for (gi, &(lo, hi)) in bounds.iter().enumerate() {
+        for t in lo..hi {
+            gidx[t] = gi;
+        }
+    }
+
+    let w_cols = w.columns();
+    let nthreads = crate::util::pool::resolve_threads(threads);
+    let results = crate::util::pool::par_map_labeled("engine.channels", np, nthreads, |j| {
+        let wj = &w_cols[j];
+        let outl = split_outliers(wj, sc.outlier_k);
+        let mut cz = Vec::with_capacity(bounds.len());
+        for &(lo, hi) in &bounds {
+            let members: Vec<f64> = (lo..hi)
+                .filter(|t| outl.binary_search(t).is_err())
+                .map(|t| wj[t])
+                .collect();
+            cz.push(if members.is_empty() { (1.0, 0.0) } else { minmax_scale(&members, bits) });
+        }
+        let grids: Vec<Vec<f64>> = cz
+            .iter()
+            .map(|&(c, z)| (0..lv).map(|k| c * (k as f64 + z)).collect())
+            .collect();
+        // init: per-group RTN for members, exact weight for outliers
+        let mut v: Vec<f64> = (0..n)
+            .map(|t| {
+                if outl.binary_search(&t).is_ok() {
+                    wj[t]
+                } else {
+                    let (c, z) = cz[gidx[t]];
+                    c * (nearest_level(wj[t], c, z, lv) as f64 + z)
+                }
+            })
+            .collect();
+        let diff: Vec<f64> = wj.iter().zip(&v).map(|(a, b)| a - b).collect();
+        let mut r = g.matvec(&diff);
+        for _ in 0..loops {
+            for t in 0..n {
+                if outl.binary_search(&t).is_ok() {
+                    continue; // fixed at the exact weight
+                }
+                let opt = v[t] + r[t] / gdiag[t];
+                let grid = &grids[gidx[t]];
+                let mut best = grid[0];
+                let mut bd = f64::INFINITY;
+                for &gv in grid {
+                    let d = (gv - opt).abs();
+                    if d < bd {
+                        bd = d;
+                        best = gv;
+                    }
+                }
+                if best != v[t] {
+                    axpy(-(best - v[t]), &g_cols[t], &mut r);
+                    v[t] = best;
+                }
+            }
+        }
+        let codes: Vec<f64> = (0..n)
+            .map(|t| {
+                let (c, z) = cz[gidx[t]];
+                if outl.binary_search(&t).is_ok() {
+                    // on-grid dummy: the group's nearest level
+                    nearest_level(wj[t], c, z, lv) as f64
+                } else {
+                    (v[t] / c - z).round().clamp(0.0, (lv - 1) as f64)
+                }
+            })
+            .collect();
+        ChannelQuant {
+            codes,
+            groups: cz.iter().map(|&(c, z)| (c, c * z)).collect(),
+            outliers: outl.iter().map(|&t| (t, wj[t])).collect(),
+            dequant: v,
+        }
+    });
+    assemble_layer(n, results, sc)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -136,6 +241,39 @@ mod tests {
                 assert!((q[(i, j)] - c * (k + z)).abs() < 1e-9);
                 assert!((0.0..=3.0).contains(&k));
             }
+        }
+    }
+
+    #[test]
+    fn scenario_outliers_exact_and_codes_on_group_grids() {
+        let mut g = Gen { rng: crate::data::rng::SplitMix64::new(7) };
+        let (x, mut w) = case(&mut g, 64, 40, 3);
+        // plant a dominating outlier in channel 1
+        w[(5, 1)] = 9.0;
+        let sc = Scenario { group_size: 16, outlier_k: 1, ..Scenario::default() };
+        let lq = comq_layer_scenario(&x, &w, BitWidth::B2, 3, 1, &sc);
+        let meta = lq.grouped.as_ref().expect("scenario metadata");
+        assert_eq!(meta.group_size, 16);
+        for j in 0..3 {
+            assert_eq!(meta.groups[j].len(), 3, "40 rows / g16 = 3 groups");
+            assert_eq!(meta.outliers[j].len(), 1);
+            let (row, val) = meta.outliers[j][0];
+            assert_eq!(lq.dequant[(row, j)], val, "outlier kept exact");
+            // non-outlier values decode from their group's (scale, offset)
+            for i in 0..40 {
+                if i == row {
+                    continue;
+                }
+                let (c, off) = meta.groups[j][i / 16];
+                let rebuilt = c * lq.codes[j][i] + off;
+                assert!((rebuilt - lq.dequant[(i, j)]).abs() < 1e-9);
+            }
+        }
+        assert_eq!(meta.outliers[1][0], (5, 9.0));
+        // thread invariance of the scenario path
+        let lq4 = comq_layer_scenario(&x, &w, BitWidth::B2, 3, 4, &sc);
+        for (a, b) in lq.dequant.data.iter().zip(&lq4.dequant.data) {
+            assert_eq!(a.to_bits(), b.to_bits());
         }
     }
 

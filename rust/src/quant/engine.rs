@@ -24,10 +24,11 @@ use crate::linalg::Matrix;
 use crate::util::pool;
 
 use super::alphabet::{alphabet, levels, BitWidth};
-use super::beacon::{beacon_layer, BeaconOpts};
-use super::comq::comq_layer_threads;
+use super::beacon::{beacon_layer, beacon_layer_scenario, BeaconOpts};
+use super::comq::{comq_layer_scenario, comq_layer_threads};
 use super::gptq::gptq_layer;
-use super::rtn::{minmax_scale, nearest_level};
+use super::rtn::{minmax_scale, nearest_level, rtn_channel_scenario};
+use super::scenario::{assemble_layer, Scenario};
 
 /// Result of quantizing a full layer, for every method.
 ///
@@ -43,12 +44,33 @@ use super::rtn::{minmax_scale, nearest_level};
 pub struct LayerQuant {
     /// q values per channel (column-major: `codes[j]` is channel j's codes).
     pub codes: Vec<Vec<f64>>,
-    /// per-channel scale
+    /// per-channel scale (group 0's scale under a grouped scenario)
     pub scales: Vec<f64>,
-    /// per-channel additive offset row (zero unless centering / min-max z)
+    /// per-channel additive offset row (zero unless centering / min-max z;
+    /// group 0's offset under a grouped scenario)
     pub offsets: Vec<f64>,
-    /// dequantized weights, shape of W
+    /// dequantized weights, shape of W — always authoritative
     pub dequant: Matrix,
+    /// present iff the layer was quantized under a non-dense scenario
+    /// (grouped scales and/or an outlier sidecar); `None` is the
+    /// historical per-channel dense result
+    pub grouped: Option<GroupedMeta>,
+}
+
+/// Per-channel scenario metadata riding on a [`LayerQuant`]: the full
+/// per-group `(scale, offset)` tables and the exact-value outlier
+/// sidecar. For non-outlier element `i` of channel `j`,
+/// `dequant[(i,j)] = groups[j][i / group_size].0 · codes[j][i] +
+/// groups[j][i / group_size].1`; outlier slots carry the exact weight in
+/// `dequant` (their codes are on-grid dummies).
+#[derive(Debug, Clone, PartialEq)]
+pub struct GroupedMeta {
+    /// elements per group (0 = one group spanning the channel)
+    pub group_size: usize,
+    /// `groups[j]` = channel j's per-group `(scale, offset)`, in order
+    pub groups: Vec<Vec<(f64, f64)>>,
+    /// `outliers[j]` = channel j's `(row, exact value)`, ascending rows
+    pub outliers: Vec<Vec<(usize, f64)>>,
 }
 
 /// Everything a quantizer may look at for one layer.
@@ -118,6 +140,7 @@ impl Method {
     /// point the coordinator dispatches through —
     /// `coordinator/pipeline.rs` holds no per-method logic.
     pub fn quantizer(&self, bits: BitWidth, qc: &QuantConfig) -> Box<dyn Quantizer> {
+        let scenario = Scenario::from_config(qc);
         match self {
             Method::Beacon => Box::new(BeaconQuantizer {
                 alph: alphabet(bits),
@@ -127,10 +150,11 @@ impl Method {
                     threads: 0,
                 },
                 error_correction: qc.error_correction,
+                scenario,
             }),
-            Method::Gptq => Box::new(GptqQuantizer { bits, damp: qc.gptq_damp }),
-            Method::Rtn => Box::new(RtnQuantizer { bits }),
-            Method::Comq => Box::new(ComqQuantizer { bits, loops: qc.loops }),
+            Method::Gptq => Box::new(GptqQuantizer { bits, damp: qc.gptq_damp, scenario }),
+            Method::Rtn => Box::new(RtnQuantizer { bits, scenario }),
+            Method::Comq => Box::new(ComqQuantizer { bits, loops: qc.loops, scenario }),
         }
     }
 }
@@ -150,6 +174,7 @@ pub struct BeaconQuantizer {
     pub alph: Vec<f64>,
     pub opts: BeaconOpts,
     pub error_correction: bool,
+    pub scenario: Scenario,
 }
 
 impl Quantizer for BeaconQuantizer {
@@ -167,7 +192,18 @@ impl Quantizer for BeaconQuantizer {
 
     fn quantize_layer(&self, ctx: &LayerCtx) -> Result<LayerQuant> {
         let opts = BeaconOpts { threads: ctx.threads, ..self.opts.clone() };
-        Ok(beacon_layer(ctx.x, ctx.xt, ctx.w, &self.alph, &opts))
+        if self.scenario.is_default() {
+            Ok(beacon_layer(ctx.x, ctx.xt, ctx.w, &self.alph, &opts))
+        } else {
+            Ok(beacon_layer_scenario(
+                ctx.x,
+                ctx.xt,
+                ctx.w,
+                &self.alph,
+                &opts,
+                &self.scenario,
+            ))
+        }
     }
 }
 
@@ -178,6 +214,7 @@ impl Quantizer for BeaconQuantizer {
 pub struct GptqQuantizer {
     pub bits: BitWidth,
     pub damp: f64,
+    pub scenario: Scenario,
 }
 
 impl Quantizer for GptqQuantizer {
@@ -186,6 +223,16 @@ impl Quantizer for GptqQuantizer {
     }
 
     fn quantize_layer(&self, ctx: &LayerCtx) -> Result<LayerQuant> {
+        // plan building rejects this combination already; defense in
+        // depth for direct construction
+        if self.scenario.splits_channel() {
+            anyhow::bail!(
+                "gptq supports only the dense per-channel scenario \
+                 (got group_size={}, outlier_k={})",
+                self.scenario.group_size,
+                self.scenario.outlier_k
+            );
+        }
         let dequant = gptq_layer(ctx.xt, ctx.w, self.bits, self.damp);
         Ok(minmax_layer_quant(ctx.w, dequant, self.bits))
     }
@@ -194,6 +241,7 @@ impl Quantizer for GptqQuantizer {
 /// Round-to-nearest on the per-channel min-max grid.
 pub struct RtnQuantizer {
     pub bits: BitWidth,
+    pub scenario: Scenario,
 }
 
 impl Quantizer for RtnQuantizer {
@@ -202,13 +250,24 @@ impl Quantizer for RtnQuantizer {
     }
 
     fn quantize_layer(&self, ctx: &LayerCtx) -> Result<LayerQuant> {
+        let w = ctx.w;
+        let (n, np) = (w.rows, w.cols);
+        // Grouped / outlier-split scenario: per-group min-max grids over
+        // the non-outlier members. The min-max grid is already
+        // asymmetric, so the `asymmetric` flag alone keeps the dense
+        // path (it changes nothing for this family).
+        if self.scenario.splits_channel() {
+            let w_cols = w.columns();
+            let results = pool::par_map_labeled("engine.channels", np, ctx.threads, |j| {
+                rtn_channel_scenario(&w_cols[j], self.bits, &self.scenario)
+            });
+            return Ok(assemble_layer(n, results, &self.scenario));
+        }
         // One pass per channel: grid, codes and dequant together.
         // Rounding itself is all the work RTN does, so the generic
         // `minmax_layer_quant` recovery would double the layer cost;
         // dequant uses the exact `rtn_channel` expression `c·(k + z)`,
         // keeping the legacy free function bit-identical.
-        let w = ctx.w;
-        let (n, np) = (w.rows, w.cols);
         let lv = levels(self.bits);
         let w_cols = w.columns();
         let cols = pool::par_map_labeled("engine.channels", np, ctx.threads, |j| {
@@ -233,7 +292,7 @@ impl Quantizer for RtnQuantizer {
             scales.push(c);
             offsets.push(off);
         }
-        Ok(LayerQuant { codes, scales, offsets, dequant })
+        Ok(LayerQuant { codes, scales, offsets, dequant, grouped: None })
     }
 }
 
@@ -242,6 +301,7 @@ impl Quantizer for RtnQuantizer {
 pub struct ComqQuantizer {
     pub bits: BitWidth,
     pub loops: usize,
+    pub scenario: Scenario,
 }
 
 impl Quantizer for ComqQuantizer {
@@ -250,6 +310,16 @@ impl Quantizer for ComqQuantizer {
     }
 
     fn quantize_layer(&self, ctx: &LayerCtx) -> Result<LayerQuant> {
+        if self.scenario.splits_channel() {
+            return Ok(comq_layer_scenario(
+                ctx.xt,
+                ctx.w,
+                self.bits,
+                self.loops,
+                ctx.threads,
+                &self.scenario,
+            ));
+        }
         let dequant =
             comq_layer_threads(ctx.xt, ctx.w, self.bits, self.loops, ctx.threads);
         Ok(minmax_layer_quant(ctx.w, dequant, self.bits))
@@ -278,7 +348,7 @@ fn minmax_layer_quant(w: &Matrix, dequant: Matrix, bits: BitWidth) -> LayerQuant
         scales.push(c);
         offsets.push(c * z);
     }
-    LayerQuant { codes, scales, offsets, dequant }
+    LayerQuant { codes, scales, offsets, dequant, grouped: None }
 }
 
 // ---------------------------------------------------------------------------

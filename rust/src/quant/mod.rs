@@ -52,11 +52,13 @@ pub mod gptq;
 pub mod metrics;
 pub mod packing;
 pub mod rtn;
+pub mod scenario;
 
 pub use alphabet::{alphabet, levels, BitWidth};
 pub use beacon::{beacon_channel, beacon_layer, BeaconOpts};
 pub use comq::{comq_layer, comq_layer_threads};
-pub use engine::{LayerCtx, LayerQuant, Quantizer};
+pub use engine::{GroupedMeta, LayerCtx, LayerQuant, Quantizer};
 pub use gptq::gptq_layer;
 pub use metrics::layer_recon_error;
 pub use rtn::{minmax_scale, rtn_channel, rtn_layer, rtn_layer_threads};
+pub use scenario::Scenario;

@@ -25,9 +25,21 @@ pub enum CodeConvention {
 pub struct PackedChannel {
     pub bits: u32,
     pub len: usize,
+    /// group 0's scale (the whole channel's under the dense scenario)
     pub scale: f32,
+    /// group 0's offset (the whole channel's under the dense scenario)
     pub offset: f32,
     pub convention: CodeConvention,
+    /// rows per group; 0 = one (scale, offset) for the whole channel
+    pub group_size: u32,
+    /// per-group (scale, offset) when grouped — empty for a dense
+    /// channel, where `scale`/`offset` above are authoritative; when
+    /// non-empty, `scale`/`offset` mirror `groups[0]`
+    pub groups: Vec<(f32, f32)>,
+    /// outlier sidecar: (row, exact value), rows strictly ascending.
+    /// The bit stream still carries an on-grid dummy code at these
+    /// rows, so decode substitutes *after* the LUT read.
+    pub outliers: Vec<(u32, f32)>,
     /// little-endian bit stream, `bits` bits per element
     pub words: Vec<u64>,
 }
@@ -36,7 +48,26 @@ impl PackedChannel {
     /// Heap + inline footprint of this packed channel, for the
     /// resident-bytes registry.
     pub fn resident_bytes(&self) -> usize {
-        self.words.len() * 8 + std::mem::size_of::<PackedChannel>()
+        self.words.len() * 8
+            + self.groups.len() * 8
+            + self.outliers.len() * 8
+            + std::mem::size_of::<PackedChannel>()
+    }
+
+    /// Dense scenario: one (scale, offset) for the channel, no sidecar.
+    /// Dense channels serialize as BPK1; anything else needs BPK2.
+    pub fn is_dense(&self) -> bool {
+        self.group_size == 0 && self.groups.is_empty() && self.outliers.is_empty()
+    }
+
+    /// The per-group (scale, offset) list with the dense case folded in
+    /// as a single group — every decode path iterates this uniformly.
+    pub fn effective_groups(&self) -> Vec<(f32, f32)> {
+        if self.groups.is_empty() {
+            vec![(self.scale, self.offset)]
+        } else {
+            self.groups.clone()
+        }
     }
 }
 
@@ -66,6 +97,9 @@ pub fn pack_indices(
         scale: scale as f32,
         offset: offset as f32,
         convention,
+        group_size: 0,
+        groups: Vec::new(),
+        outliers: Vec::new(),
         words,
     }
 }
@@ -141,6 +175,29 @@ pub fn try_pack_channel(
     Some(pack_indices(&idxs, scale, offset, width, convention))
 }
 
+/// Pack a channel under a grouped / outlier-split scenario: the bit
+/// stream carries every row's code (outlier rows hold the quantizer's
+/// on-grid dummy, so convention detection sees a fully on-grid
+/// channel), `groups` carries each group's (scale, offset), and
+/// `outliers` the exact sidecar values at strictly ascending rows.
+/// `None` when any code is off-grid, like [`try_pack_channel`].
+pub fn pack_channel_grouped(
+    codes: &[f64],
+    groups: &[(f64, f64)],
+    group_size: usize,
+    outliers: &[(usize, f64)],
+    width: BitWidth,
+) -> Option<PackedChannel> {
+    let alph = alphabet(width);
+    let (convention, idxs) = detect_convention(codes, &alph, alph.len())?;
+    let (s0, o0) = groups.first().copied().unwrap_or((1.0, 0.0));
+    let mut p = pack_indices(&idxs, s0, o0, width, convention);
+    p.group_size = group_size as u32;
+    p.groups = groups.iter().map(|&(c, o)| (c as f32, o as f32)).collect();
+    p.outliers = outliers.iter().map(|&(i, v)| (i as u32, v as f32)).collect();
+    Some(p)
+}
+
 /// Packed storage for a whole layer's codes without materializing the
 /// bit streams: `(payload_bytes, meta_bytes)` where payload is
 /// Σ ceil(len·bits/8) and meta is 8 bytes (scale + offset f32) per
@@ -203,16 +260,60 @@ pub fn dequant_lut(p: &PackedChannel, width: BitWidth) -> Vec<f32> {
         .collect()
 }
 
-/// Unpack to dequantized f32 values (`scale·v(idx) + offset`, with
-/// `v(idx)` picked by the channel's [`CodeConvention`]).
-pub fn unpack_channel(p: &PackedChannel, width: BitWidth) -> Vec<f32> {
-    let lut = dequant_lut(p, width);
-    unpack_indices(p).into_iter().map(|idx| lut[idx]).collect()
+/// The concatenated per-group dequant tables: one `2^bits` stride per
+/// entry of [`PackedChannel::effective_groups`], laid out group-major —
+/// `luts[g·2^bits + k] = scale_g·v(k) + offset_g`. For a dense channel
+/// this is exactly [`dequant_lut`]. The fused
+/// [`crate::linalg::packed_gemm`] kernel swaps its LUT base at group
+/// boundaries by walking this table.
+pub fn dequant_luts(p: &PackedChannel, width: BitWidth) -> Vec<f32> {
+    let alph = alphabet(width);
+    let space = 1usize << p.bits;
+    let groups = p.effective_groups();
+    let mut lut = Vec::with_capacity(space * groups.len());
+    for (scale, offset) in groups {
+        for k in 0..space {
+            let base = match p.convention {
+                CodeConvention::Alphabet => alph[k.min(alph.len() - 1)] as f32,
+                CodeConvention::Levels => k as f32,
+            };
+            lut.push(scale * base + offset);
+        }
+    }
+    lut
 }
 
-/// Effective storage bytes for the packed channel (codes + metadata).
+/// Unpack to dequantized f32 values: each row decodes through its own
+/// group's (scale, offset) table, then outlier rows substitute their
+/// exact sidecar value. Dense channels take the single-group case of
+/// the same path.
+pub fn unpack_channel(p: &PackedChannel, width: BitWidth) -> Vec<f32> {
+    let luts = dequant_luts(p, width);
+    let step = 1usize << p.bits;
+    let gs = p.group_size as usize;
+    let mut oi = 0usize;
+    unpack_indices(p)
+        .into_iter()
+        .enumerate()
+        .map(|(i, idx)| {
+            let g = if gs == 0 { 0 } else { i / gs };
+            if oi < p.outliers.len() && p.outliers[oi].0 as usize == i {
+                let v = p.outliers[oi].1;
+                oi += 1;
+                v
+            } else {
+                luts[g * step + idx]
+            }
+        })
+        .collect()
+}
+
+/// Effective storage bytes for the packed channel: codes plus 8 bytes
+/// of (scale, offset) per effective group plus 8 bytes per outlier
+/// sidecar entry (row u32 + value f32).
 pub fn packed_bytes(p: &PackedChannel) -> usize {
-    (p.len * p.bits as usize + 7) / 8 + 8 // + scale & offset f32s
+    let ngroups = if p.groups.is_empty() { 1 } else { p.groups.len() };
+    (p.len * p.bits as usize + 7) / 8 + 8 * ngroups + 8 * p.outliers.len()
 }
 
 #[cfg(test)]
@@ -454,6 +555,55 @@ mod tests {
         assert_eq!(payload, 4 * 18);
         assert_eq!(meta, 4 * 8);
         assert!(layer_packed_bytes(&[vec![0.25]], width).is_none());
+    }
+
+    #[test]
+    fn grouped_pack_roundtrip_with_outliers() {
+        // 40 × 3-bit level codes, g16 (ragged 8-row tail group), one
+        // exact outlier at row 5 riding an on-grid dummy code
+        let width = BitWidth::B3;
+        let want: Vec<usize> = (0..40).map(|i| (i * 5 + 1) % 8).collect();
+        let codes: Vec<f64> = want.iter().map(|&k| k as f64).collect();
+        let groups = [(0.5, 0.125), (0.25, -0.25), (1.0, 0.0)];
+        let outliers = [(5usize, 9.0f64)];
+        let p = pack_channel_grouped(&codes, &groups, 16, &outliers, width).unwrap();
+        assert!(!p.is_dense());
+        assert_eq!(p.group_size, 16);
+        assert_eq!((p.scale, p.offset), (0.5, 0.125), "mirror group 0");
+        assert_eq!(p.convention, CodeConvention::Levels);
+        assert_eq!(unpack_indices(&p), want, "bit stream covers every row");
+        assert_eq!(dequant_luts(&p, width).len(), 3 * 8);
+        let back = unpack_channel(&p, width);
+        for (i, b) in back.iter().enumerate() {
+            if i == 5 {
+                assert_eq!(b.to_bits(), 9.0f32.to_bits(), "outlier exact");
+                continue;
+            }
+            let (c, o) = groups[i / 16];
+            let expect = c as f32 * want[i] as f32 + o as f32;
+            assert_eq!(expect.to_bits(), b.to_bits(), "row {i}");
+        }
+        // footprint: payload + 8 bytes per group + 8 per outlier
+        assert_eq!(packed_bytes(&p), (40 * 3 + 7) / 8 + 8 * 3 + 8);
+        assert!(pack_channel_grouped(&[0.33], &groups, 16, &[], width).is_none());
+    }
+
+    #[test]
+    fn dense_packing_is_unchanged_by_scenario_fields() {
+        let width = BitWidth::B2;
+        let alph = alphabet(width);
+        let codes: Vec<f64> = (0..70).map(|i| alph[i % 4]).collect();
+        let p = try_pack_channel(&codes, 0.2, 0.0, width).unwrap();
+        assert!(p.is_dense());
+        assert_eq!(p.effective_groups(), vec![(p.scale, p.offset)]);
+        assert_eq!(packed_bytes(&p), (70 * 2 + 7) / 8 + 8);
+        // dequant_luts degenerates to dequant_lut bit-for-bit
+        let a = dequant_lut(&p, width);
+        let b = dequant_luts(&p, width);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
     }
 
     #[test]

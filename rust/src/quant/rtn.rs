@@ -7,6 +7,7 @@
 use crate::linalg::Matrix;
 
 use super::alphabet::{levels, BitWidth};
+use super::scenario::{split_outliers, ChannelQuant, Scenario};
 
 pub const EPS: f64 = 1e-12;
 
@@ -37,6 +38,49 @@ pub fn rtn_channel(w: &[f64], bits: BitWidth) -> Vec<f64> {
     w.iter()
         .map(|v| c * (nearest_level(*v, c, z, lv) as f64 + z))
         .collect()
+}
+
+/// RTN one channel under a grouped / outlier-split [`Scenario`]: the
+/// top-k magnitude weights stay exact (sidecar), every group gets its
+/// own min-max grid over its non-outlier members, codes round per
+/// group. Outlier slots carry their group's nearest level as an
+/// on-grid dummy code; `dequant` holds the exact weight there.
+///
+/// With `group_size = 0` and `outlier_k = 0` this degenerates to one
+/// group with exactly [`rtn_channel`]'s grid and values.
+pub fn rtn_channel_scenario(w: &[f64], bits: BitWidth, sc: &Scenario) -> ChannelQuant {
+    let lv = levels(bits);
+    let outl = split_outliers(w, sc.outlier_k);
+    let bounds = sc.group_bounds(w.len());
+    let mut cz = Vec::with_capacity(bounds.len());
+    for &(lo, hi) in &bounds {
+        let members: Vec<f64> = (lo..hi)
+            .filter(|t| outl.binary_search(t).is_err())
+            .map(|t| w[t])
+            .collect();
+        // a group fully consumed by outliers keeps the degenerate grid
+        cz.push(if members.is_empty() { (1.0, 0.0) } else { minmax_scale(&members, bits) });
+    }
+    let mut codes = vec![0.0; w.len()];
+    let mut dequant = vec![0.0; w.len()];
+    for (gi, &(lo, hi)) in bounds.iter().enumerate() {
+        let (c, z) = cz[gi];
+        for t in lo..hi {
+            let k = nearest_level(w[t], c, z, lv) as f64;
+            codes[t] = k;
+            dequant[t] = if outl.binary_search(&t).is_ok() {
+                w[t] // exact sidecar value; the code is an on-grid dummy
+            } else {
+                c * (k + z)
+            };
+        }
+    }
+    ChannelQuant {
+        codes,
+        groups: cz.iter().map(|&(c, z)| (c, c * z)).collect(),
+        outliers: outl.iter().map(|&t| (t, w[t])).collect(),
+        dequant,
+    }
 }
 
 /// RTN a whole layer (channels = columns), serial path.
@@ -105,6 +149,55 @@ mod tests {
             for (a, b) in w.iter().zip(&q) {
                 if (a - b).abs() > c / 2.0 + 1e-9 {
                     return Err(format!("error {} > c/2 {}", (a - b).abs(), c / 2.0));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn scenario_degenerates_to_rtn_channel() {
+        prop_check(20, |g| {
+            let w = g.vec_normal(24, 0.5);
+            let dense = rtn_channel(&w, BitWidth::B3);
+            let sc = Scenario::default();
+            let ch = rtn_channel_scenario(&w, BitWidth::B3, &sc);
+            assert_eq!(ch.groups.len(), 1);
+            assert!(ch.outliers.is_empty());
+            for (a, b) in dense.iter().zip(&ch.dequant) {
+                if a.to_bits() != b.to_bits() {
+                    return Err(format!("dense mismatch: {a} vs {b}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn scenario_groups_never_hurt_and_outliers_exact() {
+        prop_check(20, |g| {
+            let mut w = g.vec_normal(40, 0.5);
+            w[7] = 12.0 + w[7].abs(); // plant a dominating outlier
+            let sc = Scenario { group_size: 16, outlier_k: 1, ..Scenario::default() };
+            let ch = rtn_channel_scenario(&w, BitWidth::B2, &sc);
+            assert_eq!(ch.groups.len(), 3, "ragged tail group");
+            assert_eq!(ch.outliers, vec![(7, w[7])]);
+            assert_eq!(ch.dequant[7], w[7], "outlier kept exact");
+            let dense: f64 = rtn_channel(&w, BitWidth::B2)
+                .iter()
+                .zip(&w)
+                .map(|(q, v)| (q - v) * (q - v))
+                .sum();
+            let grouped: f64 =
+                ch.dequant.iter().zip(&w).map(|(q, v)| (q - v) * (q - v)).sum();
+            if grouped > dense + 1e-12 {
+                return Err(format!("grouped+outlier {grouped} worse than dense {dense}"));
+            }
+            // codes live on each group's grid
+            let lv = levels(BitWidth::B2) as f64;
+            for &k in &ch.codes {
+                if k < 0.0 || k > lv - 1.0 || k.fract() != 0.0 {
+                    return Err(format!("off-grid code {k}"));
                 }
             }
             Ok(())

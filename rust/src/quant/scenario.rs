@@ -1,0 +1,220 @@
+//! The quantization *scenario*: the axes beyond `(method, bits)` that
+//! shape a channel's grid — group size, symmetry, and outlier split.
+//! See `docs/QUANT_SCENARIOS.md` for the full model; the short form:
+//!
+//! * **group_size** — `0` quantizes the whole channel against one
+//!   scale/offset (the historical per-channel convention); `g > 0`
+//!   slices the channel into `ceil(len/g)` groups, each with its own
+//!   scale/offset (SpQR's `qq_groupsize` idea). The last group may be
+//!   ragged.
+//! * **asymmetric** — per-group zero points. The min-max family
+//!   (RTN/GPTQ/COMQ) is *natively* asymmetric (`c·(k + z)` grids), so
+//!   the flag is informational there; for Beacon it enables per-group
+//!   centering (§3 generalized from channel means to group means, with
+//!   the same corrected-mean restore `off_g = z_scale·mean_g`).
+//! * **outlier_k** — keep the top-k magnitude weights of each channel
+//!   exact in an f32 sidecar and quantize the rest (SpQR's core idea).
+//!   Outlier slots still carry an on-grid dummy code so the bit stream
+//!   stays dense and convention detection keeps working; decode paths
+//!   substitute the sidecar value.
+//!
+//! Every helper here is deterministic (positional tie-breaks only), so
+//! scenario quantization inherits the crate's bit-identical-at-any-
+//! thread-count contract.
+
+use crate::config::QuantConfig;
+use crate::linalg::Matrix;
+
+use super::engine::{GroupedMeta, LayerQuant};
+
+/// The (group, symmetry, outlier) coordinates of a quantization run.
+/// `Default` is the historical per-channel symmetric dense scenario.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct Scenario {
+    /// elements per scale/offset group; 0 = whole channel
+    pub group_size: usize,
+    /// per-group zero points (Beacon: per-group centering)
+    pub asymmetric: bool,
+    /// exact-f32 outliers kept per channel
+    pub outlier_k: usize,
+}
+
+impl Scenario {
+    /// The scenario a config asks for.
+    pub fn from_config(qc: &QuantConfig) -> Scenario {
+        Scenario {
+            group_size: qc.group_size,
+            asymmetric: qc.asymmetric,
+            outlier_k: qc.outlier_k,
+        }
+    }
+
+    /// The historical per-channel symmetric dense scenario.
+    pub fn is_default(&self) -> bool {
+        self.group_size == 0 && !self.asymmetric && self.outlier_k == 0
+    }
+
+    /// Whether a min-max-grid method (already per-channel asymmetric)
+    /// needs the grouped/outlier path — the `asymmetric` flag alone
+    /// changes nothing for that family.
+    pub fn splits_channel(&self) -> bool {
+        self.group_size > 0 || self.outlier_k > 0
+    }
+
+    /// Number of scale/offset groups for a channel of `len` elements.
+    pub fn ngroups(&self, len: usize) -> usize {
+        self.group_bounds(len).len()
+    }
+
+    /// Half-open `[lo, hi)` element ranges of each group, in order. The
+    /// final group is ragged when `group_size` does not divide `len`.
+    pub fn group_bounds(&self, len: usize) -> Vec<(usize, usize)> {
+        if self.group_size == 0 || len == 0 {
+            return vec![(0, len)];
+        }
+        let mut bounds = Vec::with_capacity((len + self.group_size - 1) / self.group_size);
+        let mut lo = 0;
+        while lo < len {
+            let hi = (lo + self.group_size).min(len);
+            bounds.push((lo, hi));
+            lo = hi;
+        }
+        bounds
+    }
+
+    /// Label suffix in the `--override` spec grammar: `+g16+asym+k2`
+    /// for the non-default axes, empty for the default scenario.
+    pub fn label_suffix(&self) -> String {
+        let mut s = String::new();
+        if self.group_size > 0 {
+            s.push_str(&format!("+g{}", self.group_size));
+        }
+        if self.asymmetric {
+            s.push_str("+asym");
+        }
+        if self.outlier_k > 0 {
+            s.push_str(&format!("+k{}", self.outlier_k));
+        }
+        s
+    }
+}
+
+/// Indices of the top-`k` magnitude weights, ascending. Deterministic:
+/// magnitude ties go to the lower index.
+pub fn split_outliers(w: &[f64], k: usize) -> Vec<usize> {
+    if k == 0 || w.is_empty() {
+        return Vec::new();
+    }
+    let mut idx: Vec<usize> = (0..w.len()).collect();
+    idx.sort_by(|&a, &b| {
+        w[b].abs()
+            .partial_cmp(&w[a].abs())
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.cmp(&b))
+    });
+    let mut top: Vec<usize> = idx.into_iter().take(k.min(w.len())).collect();
+    top.sort_unstable();
+    top
+}
+
+/// One channel quantized under a scenario: full-length codes (outlier
+/// slots hold an on-grid dummy), per-group `(scale, offset)` in the
+/// factored-form convention (`dequant = scale·code + offset` for
+/// non-outliers), the exact-value outlier sidecar (ascending rows), and
+/// the authoritative dequantized values (outlier slots hold the exact
+/// weight).
+#[derive(Debug, Clone)]
+pub struct ChannelQuant {
+    pub codes: Vec<f64>,
+    pub groups: Vec<(f64, f64)>,
+    pub outliers: Vec<(usize, f64)>,
+    pub dequant: Vec<f64>,
+}
+
+/// Gather per-channel scenario results into the engine's [`LayerQuant`]
+/// form. `scales`/`offsets` mirror each channel's first group so legacy
+/// per-channel consumers keep working; the full per-group table and the
+/// sidecar ride in [`GroupedMeta`].
+pub fn assemble_layer(n: usize, results: Vec<ChannelQuant>, sc: &Scenario) -> LayerQuant {
+    let np = results.len();
+    let mut dequant = Matrix::zeros(n, np);
+    let mut codes = Vec::with_capacity(np);
+    let mut scales = Vec::with_capacity(np);
+    let mut offsets = Vec::with_capacity(np);
+    let mut groups = Vec::with_capacity(np);
+    let mut outliers = Vec::with_capacity(np);
+    for (j, ch) in results.into_iter().enumerate() {
+        dequant.set_col(j, &ch.dequant);
+        let (s0, o0) = *ch.groups.first().expect("at least one group per channel");
+        scales.push(s0);
+        offsets.push(o0);
+        codes.push(ch.codes);
+        groups.push(ch.groups);
+        outliers.push(ch.outliers);
+    }
+    LayerQuant {
+        codes,
+        scales,
+        offsets,
+        dequant,
+        grouped: Some(GroupedMeta { group_size: sc.group_size, groups, outliers }),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_scenario_is_default() {
+        let sc = Scenario::default();
+        assert!(sc.is_default());
+        assert!(!sc.splits_channel());
+        assert_eq!(sc.label_suffix(), "");
+        assert_eq!(sc.group_bounds(10), vec![(0, 10)]);
+        assert_eq!(sc.ngroups(10), 1);
+    }
+
+    #[test]
+    fn group_bounds_cover_ragged_tails() {
+        let sc = Scenario { group_size: 16, ..Scenario::default() };
+        assert_eq!(sc.group_bounds(40), vec![(0, 16), (16, 32), (32, 40)]);
+        assert_eq!(sc.ngroups(40), 3);
+        assert_eq!(sc.group_bounds(16), vec![(0, 16)]);
+        assert_eq!(sc.group_bounds(0), vec![(0, 0)]);
+        // bounds partition [0, len)
+        let b = sc.group_bounds(45);
+        assert_eq!(b.first().unwrap().0, 0);
+        assert_eq!(b.last().unwrap().1, 45);
+        for w in b.windows(2) {
+            assert_eq!(w[0].1, w[1].0);
+        }
+    }
+
+    #[test]
+    fn label_suffix_matches_spec_grammar() {
+        let sc = Scenario { group_size: 16, asymmetric: true, outlier_k: 2 };
+        assert_eq!(sc.label_suffix(), "+g16+asym+k2");
+        assert!(!sc.is_default());
+        assert!(sc.splits_channel());
+        let sc = Scenario { asymmetric: true, ..Scenario::default() };
+        assert_eq!(sc.label_suffix(), "+asym");
+        assert!(!sc.is_default());
+        assert!(!sc.splits_channel());
+    }
+
+    #[test]
+    fn split_outliers_deterministic_top_k() {
+        let w = [0.1, -3.0, 0.2, 3.0, -0.05];
+        // |w| ties between indices 1 and 3 → lower index first, but both
+        // land in the top-2 anyway; result is ascending
+        assert_eq!(split_outliers(&w, 2), vec![1, 3]);
+        assert_eq!(split_outliers(&w, 1), vec![1]);
+        assert_eq!(split_outliers(&w, 0), Vec::<usize>::new());
+        // k larger than the channel keeps every index
+        assert_eq!(split_outliers(&w, 99), vec![0, 1, 2, 3, 4]);
+        // exact magnitude tie: lower index wins the last slot
+        let t = [1.0, -2.0, 2.0];
+        assert_eq!(split_outliers(&t, 1), vec![1]);
+    }
+}

@@ -1,0 +1,194 @@
+//! Integration tests for the quantization scenario axes (grouping,
+//! asymmetry, outlier sidecars) across the full storage path: real
+//! quantizer output → `PackedLayer::pack_quant` → BPK2 on disk → fused
+//! unpack-dequant kernel.
+//!
+//! 1. grouped/asym/outlier layers round-trip through BPK2 byte-for-byte
+//!    and the fused `packed_matvec` matches unpack-then-matvec
+//!    bit-identically at worker threads ∈ {1, 4} — including a ragged
+//!    tail group (channel length not a multiple of the group size),
+//! 2. quantization itself is bit-identical at quantizer threads
+//!    ∈ {1, 4} and outlier slots surface the exact weight,
+//! 3. the default scenario (`g0`, sym, `k0`) packs byte-identically to
+//!    the dense BPK1 path — old checkpoints and new ones agree,
+//! 4. the acceptance recipe `beacon:3+g16+asym+k2` parses through the
+//!    `--override` grammar and beats the dense symmetric plan at equal
+//!    nominal bits on a layer with planted outliers.
+//!
+//! (BPK2 corruption → structured-error cases are unit-tested next to
+//! the loader in `model::packed_store`.)
+
+use beacon_ptq::config::{Method, PlanBuilder, QuantConfig};
+use beacon_ptq::data::rng::SplitMix64;
+use beacon_ptq::linalg::{packed_matvec, packed_matvec_threads, Matrix};
+use beacon_ptq::model::{PackedLayer, PackedStore};
+use beacon_ptq::quant::alphabet::BitWidth;
+use beacon_ptq::quant::engine::{LayerCtx, LayerQuant, Quantizer as _};
+use beacon_ptq::quant::packing::unpack_channel;
+use beacon_ptq::util::prop::Gen;
+
+fn tmp(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join("beacon_ptq_quant_scenarios");
+    std::fs::create_dir_all(&dir).expect("create temp dir");
+    dir.join(name)
+}
+
+/// Synthetic calibration + weights; `n = 40` leaves a ragged 8-row tail
+/// at group size 16. A few dominating outliers are planted so the
+/// sidecar has real work to do.
+fn case(seed: u64, m: usize, n: usize, np: usize) -> (Matrix, Matrix) {
+    let mut g = Gen { rng: SplitMix64::new(seed) };
+    let x = Matrix::from_vec(m, n, g.vec_normal(m * n, 1.0));
+    let mut w = Matrix::from_vec(n, np, g.vec_normal(n * np, 0.3));
+    for j in 0..np {
+        let i = (5 + 3 * j) % n;
+        w[(i, j)] = 12.0 + w[(i, j)].abs();
+    }
+    (x, w)
+}
+
+fn quantize(x: &Matrix, w: &Matrix, qc: &QuantConfig, threads: usize) -> LayerQuant {
+    qc.method
+        .quantizer(qc.bit_width().unwrap(), qc)
+        .quantize_layer(&LayerCtx::plain(x, w, threads))
+        .expect("quantize layer")
+}
+
+fn frob_err(w: &Matrix, dq: &Matrix) -> f64 {
+    w.data
+        .iter()
+        .zip(&dq.data)
+        .map(|(a, b)| (a - b) * (a - b))
+        .sum::<f64>()
+        .sqrt()
+}
+
+#[test]
+fn grouped_scenarios_roundtrip_bpk2_and_fused_kernel_bit_identical() {
+    for (seed, method) in
+        [(51u64, Method::Beacon), (52, Method::Rtn), (53, Method::Comq)]
+    {
+        let (x, w) = case(seed, 80, 40, 6);
+        let qc = QuantConfig {
+            method,
+            bits: 3.0,
+            loops: 2,
+            group_size: 16,
+            asymmetric: true,
+            outlier_k: 2,
+            ..QuantConfig::default()
+        };
+        let what = format!("{method:?}");
+        let lq = quantize(&x, &w, &qc, 1);
+
+        // quantization is bit-identical at 1 vs 4 quantizer threads
+        let lq4 = quantize(&x, &w, &qc, 4);
+        assert_eq!(lq.dequant.data, lq4.dequant.data, "{what}: t=4 dequant");
+        assert_eq!(lq.codes, lq4.codes, "{what}: t=4 codes");
+
+        // outlier slots carry the exact weight
+        let meta = lq.grouped.as_ref().expect("non-dense scenario metadata");
+        assert_eq!(meta.group_size, 16, "{what}");
+        for (j, outl) in meta.outliers.iter().enumerate() {
+            assert_eq!(outl.len(), 2, "{what}: channel {j} outlier count");
+            for &(i, v) in outl {
+                assert_eq!(v.to_bits(), w[(i, j)].to_bits(), "{what}: outlier ({i},{j})");
+                assert_eq!(lq.dequant[(i, j)].to_bits(), w[(i, j)].to_bits(), "{what}");
+            }
+        }
+
+        let width = BitWidth::B3;
+        let layer = PackedLayer::pack_quant("layer", &lq, width).expect("on-grid codes");
+        let store = PackedStore { layers: vec![layer] };
+        let path = tmp(&format!("scenario_{}.bpk", what.to_lowercase()));
+        store.save(&path).unwrap();
+
+        // grouped checkpoints are BPK2 and re-save byte-identically
+        let bytes = std::fs::read(&path).unwrap();
+        assert_eq!(&bytes[..4], b"BPK2", "{what}");
+        let back = PackedStore::load(&path).unwrap();
+        let path2 = tmp(&format!("scenario_{}_resave.bpk", what.to_lowercase()));
+        back.save(&path2).unwrap();
+        assert_eq!(bytes, std::fs::read(&path2).unwrap(), "{what}: resave");
+
+        // fused matvec over the loaded store ≡ unpack-then-matvec,
+        // bit-for-bit, at kernel threads 1 and 4
+        let loaded = &back.layers[0];
+        let dense: Vec<Vec<f64>> = loaded
+            .channels
+            .iter()
+            .map(|ch| unpack_channel(ch, width).iter().map(|&v| f64::from(v)).collect())
+            .collect();
+        let rows: Vec<&[f64]> = dense.iter().map(|r| r.as_slice()).collect();
+        let mut g = Gen { rng: SplitMix64::new(seed ^ 0x5A5A) };
+        let xv = g.vec_normal(loaded.rows, 1.0);
+        let want = Matrix::from_rows(&rows).matvec(&xv);
+        let luts = loaded.luts();
+        let cols = loaded.kernel_cols(&luts);
+        let serial = packed_matvec(&cols, &xv);
+        let threaded = packed_matvec_threads(&cols, &xv, 4);
+        let bits = |v: &[f64]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&serial), bits(&want), "{what}: fused vs unpacked");
+        assert_eq!(bits(&threaded), bits(&serial), "{what}: kernel t=4 vs t=1");
+
+        // the unpacked channels surface the outliers exactly (as f32)
+        for (j, outl) in meta.outliers.iter().enumerate() {
+            for &(i, v) in outl {
+                assert_eq!(dense[j][i], v as f32 as f64, "{what}: unpacked outlier");
+            }
+        }
+    }
+}
+
+#[test]
+fn default_scenario_packs_byte_identical_to_dense_bpk1() {
+    let (x, w) = case(61, 80, 40, 6);
+    let qc = QuantConfig { bits: 3.0, loops: 2, ..QuantConfig::default() };
+    let lq = quantize(&x, &w, &qc, 1);
+    assert!(lq.grouped.is_none(), "default scenario must stay dense");
+
+    let width = BitWidth::B3;
+    let via_quant = PackedStore {
+        layers: vec![PackedLayer::pack_quant("layer", &lq, width).expect("on-grid")],
+    };
+    let via_dense = PackedStore {
+        layers: vec![
+            PackedLayer::pack("layer", &lq.codes, &lq.scales, &lq.offsets, width)
+                .expect("on-grid"),
+        ],
+    };
+    let pa = tmp("default_quant.bpk");
+    let pb = tmp("default_dense.bpk");
+    via_quant.save(&pa).unwrap();
+    via_dense.save(&pb).unwrap();
+    let bytes = std::fs::read(&pa).unwrap();
+    assert_eq!(&bytes[..4], b"BPK1", "dense stores keep the v1 container");
+    assert_eq!(bytes, std::fs::read(&pb).unwrap(), "pack_quant vs legacy pack");
+}
+
+#[test]
+fn override_grammar_recipe_beats_dense_at_equal_nominal_bits() {
+    // the acceptance recipe, straight through the plan grammar
+    let mut builder = PlanBuilder::uniform(&QuantConfig::default());
+    builder.add_override("attn.*", "beacon:3+g16+asym+k2").unwrap();
+    let layers = vec!["attn.qkv.w".to_string(), "mlp.fc1.w".to_string()];
+    let plan = builder.build(&layers).unwrap();
+    let a = plan
+        .assignments
+        .iter()
+        .find(|a| a.layer == "attn.qkv.w")
+        .unwrap();
+    let qc = a.to_config(&plan.base);
+    assert_eq!(qc.method, Method::Beacon);
+    assert_eq!(qc.bits, 3.0);
+    assert_eq!((qc.group_size, qc.asymmetric, qc.outlier_k), (16, true, 2));
+
+    // grouped+asym+outliers ≤ dense symmetric error at the same
+    // nominal bit width on the planted-outlier layer
+    let (x, w) = case(71, 80, 40, 6);
+    let scenario = quantize(&x, &w, &qc, 1);
+    let dense_qc = QuantConfig { method: Method::Beacon, bits: 3.0, ..QuantConfig::default() };
+    let dense = quantize(&x, &w, &dense_qc, 1);
+    let (es, ed) = (frob_err(&w, &scenario.dequant), frob_err(&w, &dense.dequant));
+    assert!(es <= ed, "scenario err {es} > dense err {ed}");
+}
